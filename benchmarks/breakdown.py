@@ -1,0 +1,73 @@
+"""Paper Fig. 3: per-step time breakdown — factor computation/inversion,
+preconditioning, weight update — per optimizer on (a) a transformer-LM
+block-scale layer set and (b) an MLP (the paper uses BERT-Large and
+ResNet-50; we use the same layer-shape classes at CPU scale)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.core.eva import _rank1_damped_apply
+from repro.core.kfac import damped_inverse
+from repro.core.mkor import precondition, rescale_update, smw_rank1_update
+from repro.core.sngd import sngd_precondition
+
+
+def breakdown_for_layer(d_in, d_out, batch, tag):
+    k = jax.random.key(0)
+    g = jax.random.normal(k, (d_in, d_out), jnp.float32)
+    a = jax.random.normal(jax.random.key(1), (d_in,))
+    gv = jax.random.normal(jax.random.key(2), (d_out,))
+    l_eye, r_eye = jnp.eye(d_out), jnp.eye(d_in)
+    l_cov = l_eye + jnp.outer(gv, gv)
+    r_cov = r_eye + jnp.outer(a, a)
+    amat = jax.random.normal(jax.random.key(3), (batch, d_in))
+    gmat = jax.random.normal(jax.random.key(4), (batch, d_out)) / batch
+
+    t_update = time_fn(jax.jit(lambda g: -1e-3 * g), g)
+
+    rows = []
+
+    def add(opt, factor_s, precond_s):
+        rows.append({"layer": tag, "optimizer": opt,
+                     "factor_ms": factor_s * 1e3,
+                     "precondition_ms": precond_s * 1e3,
+                     "weight_update_ms": t_update * 1e3,
+                     "total_ms": (factor_s + precond_s + t_update) * 1e3})
+
+    add("sgd/lamb", 0.0, 0.0)
+    add("mkor",
+        time_fn(jax.jit(lambda l, r: (smw_rank1_update(l, gv, 0.9),
+                                      smw_rank1_update(r, a, 0.9))),
+                l_eye, r_eye),
+        time_fn(jax.jit(lambda l, r, g: rescale_update(
+            precondition(l, r, g), g)), l_eye, r_eye, g))
+    add("kfac",
+        time_fn(jax.jit(lambda lc, rc: (damped_inverse(lc, 1e-3, 1e-8),
+                                        damped_inverse(rc, 1e-3, 1e-8))),
+                l_cov, r_cov),
+        time_fn(jax.jit(precondition), l_eye, r_eye, g))
+    add("eva", 0.0,
+        time_fn(jax.jit(lambda a_, g_, w: _rank1_damped_apply(
+            g_, _rank1_damped_apply(a_, w, 1e-3, "l"), 1e-3, "r")),
+            a, gv, g))
+    add("sngd",
+        0.0,
+        time_fn(jax.jit(lambda A, G, W: sngd_precondition(A, G, W, 1e-2)),
+                amat, gmat, g))
+    return rows
+
+
+def main() -> None:
+    # (a) transformer layer class (BERT-Large-like d=1024, long-seq batch)
+    rows = breakdown_for_layer(1024, 1024, 2048, "transformer_d1024_b2048")
+    # (b) CNN/MLP layer class (ResNet-50-like small d, small batch)
+    rows += breakdown_for_layer(512, 512, 128, "cnn_d512_b128")
+    emit(rows, "Fig. 3 — per-step optimizer time breakdown")
+    print("# note: factor cost for KFAC is the per-inversion cost; divide "
+          "by inv_freq for the amortised per-step cost (Fig. 4a).")
+
+
+if __name__ == "__main__":
+    main()

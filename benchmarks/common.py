@@ -1,0 +1,43 @@
+"""Shared benchmark utilities: timing, CSV emit, tiny workloads."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
+    """Median wall-seconds per call of a jitted fn (block_until_ready)."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def fit_power_law(xs: List[float], ys: List[float]) -> float:
+    """Least-squares exponent of y ~ x^k."""
+    lx, ly = np.log(np.asarray(xs)), np.log(np.asarray(ys))
+    return float(np.polyfit(lx, ly, 1)[0])
+
+
+def emit(rows: List[Dict], title: str) -> None:
+    if not rows:
+        print(f"# {title}: no rows")
+        return
+    cols = list(rows[0].keys())
+    print(f"# {title}")
+    print(",".join(cols))
+    for r in rows:
+        print(",".join(
+            f"{r[c]:.4g}" if isinstance(r[c], float) else str(r[c])
+            for c in cols))
+    print()

@@ -1,0 +1,95 @@
+"""Paper Table 1: computational complexity of the second-order update math.
+
+Measures the wall-time of one factor-update + preconditioning step per
+optimizer across layer dimensions d (batch b fixed) and fits the scaling
+exponent:  MKOR O(d²) vs KFAC O(d³) vs SNGD O(b³) (d-independent) vs
+Eva O(d²).  Also reports the analytic memory / communication volumes of
+Table 1 for each optimizer at BERT-Large's d=1024.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, fit_power_law, time_fn
+from repro.core.eva import _rank1_damped_apply
+from repro.core.kfac import damped_inverse
+from repro.core.mkor import precondition, smw_rank1_update
+from repro.core.sngd import sngd_precondition
+
+DIMS = (512, 1024, 2048, 4096)    # small dims are overhead-dominated
+BATCH = 128
+
+
+def mkor_factor_update(l_inv, r_inv, a, gvec):
+    """Alg. 1 lines 7-8 — the O(d²) part Table 1 is about.  The two-sided
+    preconditioning (line 9) is an O(d³) matmul shared by every
+    KFAC-family method, so it is excluded from the scaling fit (it is
+    measured separately in benchmarks/breakdown.py)."""
+    return (smw_rank1_update(l_inv, gvec, 0.9),
+            smw_rank1_update(r_inv, a, 0.9))
+
+
+def kfac_factor_update(l_cov, r_cov):
+    """KAISA's damped eigendecomposition inversion — O(d³)."""
+    return (damped_inverse(l_cov, 1e-3, 1e-8),
+            damped_inverse(r_cov, 1e-3, 1e-8))
+
+
+def eva_step(avec, gvec, g):
+    d = _rank1_damped_apply(avec, g, 1e-3, "l")
+    return _rank1_damped_apply(gvec, d, 1e-3, "r")
+
+
+def main(dims=DIMS, batch=BATCH) -> None:
+    rows = []
+    times = {"mkor": [], "kfac": [], "eva": [], "sngd": []}
+    for d in dims:
+        k = jax.random.key(d)
+        g = jax.random.normal(k, (d, d), jnp.float32)
+        a = jax.random.normal(jax.random.key(1), (d,))
+        gv = jax.random.normal(jax.random.key(2), (d,))
+        eye = jnp.eye(d)
+        amat = jax.random.normal(jax.random.key(3), (batch, d)) / d ** 0.5
+        gmat = jax.random.normal(jax.random.key(4), (batch, d)) / batch
+
+        t_mkor = time_fn(jax.jit(mkor_factor_update), eye, eye, a, gv,
+                         warmup=1, iters=3)
+        t_kfac = time_fn(jax.jit(kfac_factor_update), eye + g @ g.T / d,
+                         eye + g.T @ g / d, warmup=1, iters=3)
+        t_eva = time_fn(jax.jit(eva_step), a, gv, g, warmup=1, iters=3)
+        t_sngd = time_fn(jax.jit(
+            lambda A, G, W: sngd_precondition(A, G, W, 1e-2)),
+            amat, gmat, g, warmup=1, iters=3)
+        for name, t in (("mkor", t_mkor), ("kfac", t_kfac),
+                        ("eva", t_eva), ("sngd", t_sngd)):
+            times[name].append(t)
+            rows.append({"optimizer": name, "d": d, "b": batch,
+                         "us_per_update": t * 1e6})
+    emit(rows, "Table 1 — update-math wall time vs layer dim d")
+
+    exps = [{"optimizer": n,
+             "fitted_exponent_d": fit_power_law(list(dims), ts)}
+            for n, ts in times.items()]
+    emit(exps, "Table 1 — fitted d-scaling exponents "
+               "(expect mkor~2, kfac~3, eva~<=2, sngd~<=1)")
+
+    # analytic per-layer overheads at BERT-Large d=1024, b=8192 tokens
+    d, b = 1024, 8192
+    rows = [
+        {"optimizer": "MKOR", "memory_fp16_B": (2 * d * d + 2 * d) * 2,
+         "comm_fp16_B": 2 * d * 2},
+        {"optimizer": "KFAC/KAISA", "memory_fp16_B": 4 * d * d * 4,
+         "comm_fp16_B": 4 * d * d * 4},
+        {"optimizer": "SNGD/HyLo", "memory_fp16_B": (2 * b * d + b * b) * 4,
+         "comm_fp16_B": (2 * b * d + b * b) * 4},
+        {"optimizer": "Eva", "memory_fp16_B": 2 * d * 2,
+         "comm_fp16_B": 2 * d * 2},
+        {"optimizer": "LAMB", "memory_fp16_B": 2 * d * d * 4,
+         "comm_fp16_B": 0},
+    ]
+    emit(rows, "Table 1 — analytic per-layer memory/comm at d=1024, b=8192")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,87 @@
+"""Paper Fig. 5 + §8.7: rank-1 approximation error of the activation and
+gradient covariance matrices, measured during training of a transformer LM
+(bert-large family) — relative Frobenius error of (i) the paper's
+batch-mean rank-1 approximation and (ii) the optimal (top-singular-vector)
+rank-1 approximation, plus the eigenvalue-decay trend over training."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.configs import registry
+from repro.core import firstorder
+from repro.data import pipeline
+from repro.models import model as model_lib
+from repro.training import loop as train_lib
+
+
+def covariance_errors(mat):
+    """mat: (N, d) rows of samples.  Returns (mean_rank1_err, opt_rank1_err,
+    top_eig_fraction) for C = matᵀmat/N."""
+    m = np.asarray(mat, np.float64)
+    c = m.T @ m / m.shape[0]
+    cn = np.linalg.norm(c)
+    if cn == 0:
+        return 1.0, 1.0, 0.0
+    v = m.mean(0)
+    err_mean = np.linalg.norm(c - np.outer(v, v)) / cn
+    w, q = np.linalg.eigh(c)
+    top = q[:, -1] * np.sqrt(max(w[-1], 0.0))
+    err_opt = np.linalg.norm(c - np.outer(top, top)) / cn
+    return float(err_mean), float(err_opt), float(w[-1] / max(w.sum(), 1e-30))
+
+
+def main(steps=30) -> None:
+    cfg = registry.get_config("bert-large").reduced()
+    opt = firstorder.lamb(3e-3)
+    step_fn = jax.jit(train_lib.make_train_step(cfg, opt))
+    ds = pipeline.make_dataset(cfg, global_batch=8, seq_len=64)
+
+    # covariance measurement at 3 training checkpoints
+    rows = []
+    params = model_lib.init_params(jax.random.key(0), cfg)
+    state = opt.init(params)
+    for i in range(steps):
+        if i in (0, steps // 2, steps - 1):
+            batch = pipeline.make_batch(ds, 1000 + i)
+            x = jnp.asarray(batch["tokens"])
+            emb_tbl = params["embed"]["table"]
+            acts = jnp.take(emb_tbl, x, axis=0).reshape(-1, cfg.d_model)
+            em, eo, top = covariance_errors(acts[:512])
+            rows.append({"step": i, "matrix": "activation_cov",
+                         "rank1_mean_err": em, "rank1_opt_err": eo,
+                         "top_eig_fraction": top})
+            # gradient covariance via probe-layer per-token grads
+            loss, grads, _ = _per_token_grads(params, cfg, batch)
+            gm, go, gt = covariance_errors(grads[:512])
+            rows.append({"step": i, "matrix": "gradient_cov",
+                         "rank1_mean_err": gm, "rank1_opt_err": go,
+                         "top_eig_fraction": gt})
+        batch = pipeline.make_batch(ds, i)
+        params, state, m = step_fn(params, state, batch)
+    emit(rows, "Fig. 5 / §8.7 — rank-1 covariance approximation error "
+               "(batch-mean vs optimal) and eigen concentration over "
+               "training")
+
+
+def _per_token_grads(params, cfg, batch):
+    """Per-token gradients of the loss w.r.t. the final hidden states."""
+    tokens = jnp.asarray(batch["tokens"])[:4]
+    labels = jnp.asarray(batch["labels"])[:4]
+
+    def loss_from_eps(eps):
+        logits, _ = model_lib.forward(params, cfg, {"tokens": tokens})
+        logits = logits + eps @ params["lm_head"]["w"] \
+            if "lm_head" in params else logits
+        return train_lib.lm_loss(logits, labels)
+
+    d = cfg.d_model
+    eps = jnp.zeros(tokens.shape + (d,))
+    g = jax.grad(loss_from_eps)(eps)
+    return None, np.asarray(g.reshape(-1, d)), None
+
+
+if __name__ == "__main__":
+    main()

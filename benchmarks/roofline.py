@@ -1,0 +1,64 @@
+"""§Roofline report: reads the dry-run JSONs (experiments/dryrun/) and
+prints the per-(arch x shape x mesh) roofline table — the three terms in
+seconds, the dominant bottleneck, MODEL_FLOPS/HLO_FLOPs, and per-device
+memory — the §Roofline deliverable."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+
+DEFAULT_DIR = "experiments/dryrun"
+
+
+def load(dir_=DEFAULT_DIR):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(dir_, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def main(dir_=DEFAULT_DIR) -> None:
+    recs = load(dir_)
+    if not recs:
+        print(f"# no dry-run records in {dir_} — run "
+              "PYTHONPATH=src python -m repro.launch.dryrun --all first")
+        return
+    rows, skips, fails = [], [], []
+    for r in recs:
+        if "skipped" in r:
+            skips.append({"arch": r["arch"], "shape": r["shape"],
+                          "mesh": r.get("mesh", ""),
+                          "reason": r["skipped"][:60]})
+            continue
+        if "error" in r:
+            fails.append({"arch": r["arch"], "shape": r["shape"],
+                          "error": r["error"][:80]})
+            continue
+        roof = r["roofline"]
+        mem = r.get("memory") or {}
+        rows.append({
+            "arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+            "compute_ms": roof["compute_s"] * 1e3,
+            "memory_ms": roof["memory_s"] * 1e3,
+            "collective_ms": roof["collective_s"] * 1e3,
+            "dominant": roof["dominant"],
+            "bound_ms": roof["bound_s"] * 1e3,
+            "useful_flops_ratio": r.get("useful_flops_ratio") or 0.0,
+            "coll_GB_per_chip": r["collective_total_bytes"] / 2**30,
+            "peak_GB_per_chip": (mem.get("peak_bytes") or 0) / 2**30,
+        })
+    rows.sort(key=lambda x: (x["arch"], x["shape"], x["mesh"]))
+    emit(rows, "§Roofline — per (arch x shape x mesh), per-chip terms "
+               "(TPU v5e: 197 TFLOP/s bf16, 819 GB/s HBM, 50 GB/s ICI)")
+    if skips:
+        emit(skips, "policy skips (DESIGN.md §5)")
+    if fails:
+        emit(fails, "FAILURES")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Benchmark driver: runs one benchmark per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run            # all
+  PYTHONPATH=src python -m benchmarks.run complexity # one
+"""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+from benchmarks import (breakdown, complexity, convergence,
+                        inversion_frequency, lr_sensitivity, memory,
+                        quantization, rank1_error, roofline)
+
+ALL = {
+    "complexity": complexity.main,              # Table 1
+    "convergence": convergence.main,            # Fig 2 / Tables 2-3
+    "breakdown": breakdown.main,                # Fig 3
+    "inversion_frequency": inversion_frequency.main,  # Fig 4
+    "rank1_error": rank1_error.main,            # Fig 5 / §8.7
+    "lr_sensitivity": lr_sensitivity.main,      # Table 5
+    "memory": memory.main,                      # Table 6 / §8.8
+    "quantization": quantization.main,          # Lemma 3.2
+    "roofline": roofline.main,                  # §Roofline (reads dry-runs)
+}
+
+
+def main() -> None:
+    names = sys.argv[1:] or list(ALL)
+    failed = []
+    for name in names:
+        print(f"\n{'=' * 72}\n== benchmark: {name}\n{'=' * 72}")
+        t0 = time.time()
+        try:
+            ALL[name]()
+            print(f"== {name} done in {time.time() - t0:.1f}s")
+        except Exception:  # noqa: BLE001
+            traceback.print_exc()
+            failed.append(name)
+    if failed:
+        raise SystemExit(f"benchmarks failed: {failed}")
+
+
+if __name__ == "__main__":
+    main()

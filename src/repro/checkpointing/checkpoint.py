@@ -1,0 +1,86 @@
+"""Pytree checkpointing: npz arrays + msgpack structure manifest.
+
+Layout: ``<dir>/step_<N>/{manifest.msgpack, arrays.npz}``.  The manifest
+stores the flattened key-paths, shapes and dtypes, so restore validates
+structure before touching the target pytree (no silent shape drift across
+config changes), plus free-form user metadata (step, loss, config digest).
+"""
+from __future__ import annotations
+
+import os
+import re
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import msgpack
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_leaves_with_path(tree):
+        key = jax.tree_util.keystr(path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save(directory: str, step: int, tree: Any,
+         metadata: Optional[Dict] = None) -> str:
+    out = os.path.join(directory, f"step_{step:08d}")
+    os.makedirs(out, exist_ok=True)
+    flat = _flatten(tree)
+    manifest = {
+        "step": step,
+        "keys": list(flat.keys()),
+        "shapes": {k: list(v.shape) for k, v in flat.items()},
+        "dtypes": {k: str(v.dtype) for k, v in flat.items()},
+        "metadata": metadata or {},
+    }
+    # bfloat16 has no numpy savez support — stage as uint16 bit pattern
+    staged = {}
+    for i, (k, v) in enumerate(flat.items()):
+        if v.dtype.name == "bfloat16":
+            staged[f"a{i}"] = v.view(np.uint16)
+        else:
+            staged[f"a{i}"] = v
+    tmp = out + ".tmp.npz"
+    np.savez(tmp, **staged)
+    os.replace(tmp, os.path.join(out, "arrays.npz"))
+    with open(os.path.join(out, "manifest.msgpack"), "wb") as f:
+        f.write(msgpack.packb(manifest))
+    return out
+
+
+def restore(directory: str, step: int, like: Any) -> Tuple[Any, Dict]:
+    """Restore into the structure of ``like`` (validates key paths)."""
+    src = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(src, "manifest.msgpack"), "rb") as f:
+        manifest = msgpack.unpackb(f.read())
+    arrays = np.load(os.path.join(src, "arrays.npz"))
+
+    paths_leaves = jax.tree_util.tree_leaves_with_path(like)
+    want = [jax.tree_util.keystr(p) for p, _ in paths_leaves]
+    if want != manifest["keys"]:
+        missing = set(manifest["keys"]) ^ set(want)
+        raise ValueError(f"checkpoint structure mismatch; differing keys: "
+                         f"{sorted(missing)[:8]} ...")
+
+    leaves = []
+    for i, (key, (_, leaf)) in enumerate(zip(manifest["keys"], paths_leaves)):
+        arr = arrays[f"a{i}"]
+        dtype = manifest["dtypes"][key]
+        if dtype == "bfloat16":
+            arr = arr.view(jax.numpy.bfloat16.dtype)
+        if list(arr.shape) != manifest["shapes"][key]:
+            raise ValueError(f"shape mismatch for {key}")
+        leaves.append(jax.numpy.asarray(arr))
+    treedef = jax.tree_util.tree_structure(like)
+    return jax.tree_util.tree_unflatten(treedef, leaves), manifest["metadata"]
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(m.group(1)) for d in os.listdir(directory)
+             if (m := re.fullmatch(r"step_(\d+)", d))]
+    return max(steps) if steps else None

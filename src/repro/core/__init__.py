@@ -1,0 +1,16 @@
+# The paper's primary contribution: the MKOR optimizer family (plus its
+# first- and second-order baselines) as composable gradient transformations.
+from repro.core.firstorder import (  # noqa: F401
+    GradientTransformation,
+    adam,
+    adamw,
+    apply_updates,
+    chain,
+    clip_by_global_norm,
+    lamb,
+    sgd,
+)
+from repro.core.mkor import MKORConfig, mkor, mkor_h  # noqa: F401
+from repro.core.kfac import KFACConfig, kfac  # noqa: F401
+from repro.core.eva import EvaConfig, eva  # noqa: F401
+from repro.core.sngd import SNGDConfig, sngd  # noqa: F401

@@ -1,0 +1,89 @@
+"""Instrumented MLP / autoencoder for the optimizer-comparison experiments.
+
+The paper's Fig. 4 uses an autoencoder on CIFAR-100 and §8.12 uses small
+dense nets; this module provides the same class of workloads with *full*
+per-token statistic capture:
+
+* per-layer input activations A (N, d_in) — returned as loss aux;
+* per-layer output-pre-activation gradients G (N, d_out) — gradients of the
+  loss w.r.t. zero *argument* tensors ("eps") added to each layer output
+  (the argument-shaped generalisation of the probe-parameter trick, which
+  only yields means).
+
+These full stats feed the KFAC (KAISA) and SNGD (HyLo) baselines that need
+E[a aᵀ], E[g gᵀ], or the per-sample kernel; MKOR/Eva only consume the means.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+
+def init_mlp(key, dims: List[int], *, dtype=jnp.float32) -> Dict:
+    ks = jax.random.split(key, len(dims) - 1)
+    return {"layers": [
+        layers.dense_init(ks[i], dims[i], dims[i + 1], dtype=dtype, bias=True)
+        for i in range(len(dims) - 1)
+    ]}
+
+
+def init_autoencoder(key, d_in: int = 768,
+                     hidden: Tuple[int, ...] = (256, 64, 256),
+                     *, dtype=jnp.float32) -> Dict:
+    return init_mlp(key, [d_in, *hidden, d_in], dtype=dtype)
+
+
+def zero_eps(params: Dict, n: int) -> List[jnp.ndarray]:
+    return [jnp.zeros((n, p["w"].shape[-1]), jnp.float32)
+            for p in params["layers"]]
+
+
+def forward(params: Dict, x: jnp.ndarray,
+            eps: Optional[List[jnp.ndarray]] = None,
+            act: str = "tanh") -> Tuple[jnp.ndarray, List[jnp.ndarray]]:
+    """Returns (output, per-layer input activations)."""
+    acts = []
+    h = x
+    n_layers = len(params["layers"])
+    for i, p in enumerate(params["layers"]):
+        acts.append(h)
+        h = jnp.einsum("ni,io->no", h, p["w"]) + p.get("b", 0.0) \
+            + p["probe"].astype(h.dtype)
+        if eps is not None:
+            h = h + eps[i]
+        if i < n_layers - 1:
+            h = jnp.tanh(h) if act == "tanh" else jax.nn.relu(h)
+    return h, acts
+
+
+def make_loss(kind: str = "mse") -> Callable:
+    def loss_fn(params, eps, batch, act="tanh"):
+        y, acts = forward(params, batch["x"], eps, act=act)
+        if kind == "mse":
+            loss = 0.5 * jnp.mean(jnp.sum(jnp.square(y - batch["y"]), -1))
+        else:                               # softmax cross-entropy
+            logp = jax.nn.log_softmax(y, -1)
+            loss = -jnp.mean(
+                jnp.take_along_axis(logp, batch["y"][:, None], -1))
+        return loss, acts
+    return loss_fn
+
+
+def grads_and_full_stats(params, batch, *, kind="mse", act="tanh"):
+    """One backward pass yielding (loss, grads, stats) with full A/G
+    matrices keyed by the layer path ("layers", i)."""
+    loss_fn = make_loss(kind)
+    eps0 = zero_eps(params, batch["x"].shape[0])
+    (loss, acts), (gp, geps) = jax.value_and_grad(
+        loss_fn, argnums=(0, 1), has_aux=True)(params, eps0, batch, act)
+    stats = {"layers": [
+        {"a": jnp.mean(acts[i], 0),         # rank-1 stats (MKOR / Eva)
+         "A": acts[i],                      # full stats (KFAC / SNGD)
+         "G": geps[i]}
+        for i in range(len(params["layers"]))
+    ]}
+    return loss, gp, stats

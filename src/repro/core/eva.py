@@ -1,0 +1,115 @@
+"""Eva baseline (Zhang et al. 2023) — vectorized second-order approximation.
+
+Eva keeps EMA'd Kronecker *vectors* (like MKOR's rank-1 statistics) but,
+unlike MKOR, (i) stores the vectors rather than maintaining factor inverses
+(so it "can not leverage the benefits of momentum" on the inverse — paper
+§1), and (ii) inverts the implied rank-1-plus-damping factor analytically
+each step:
+
+    (v vᵀ + μ I)⁻¹ = (1/μ) (I − v vᵀ / (μ + vᵀv))
+
+applied matrix-free to the gradient (O(d²) for the two-sided product).
+Shares MKOR's rank-1 stats interface, so it runs on the full model zoo.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import stats as statlib
+from repro.core.firstorder import GradientTransformation
+from repro.core.mkor import _vmap_over_stack, rescale_update
+
+
+@dataclass(frozen=True)
+class EvaConfig:
+    gamma: float = 0.9
+    damping: float = 1e-3
+    max_factor_dim: int = 32768
+    min_factor_dim: int = 4
+    exclude: Tuple[str, ...] = ("embed", "lm_head")
+    rescale: bool = True
+
+
+def _rank1_damped_apply(v: jnp.ndarray, x: jnp.ndarray, mu: float,
+                        side: str) -> jnp.ndarray:
+    """(vvᵀ + μI)⁻¹ applied to x on the left (side='l': along x rows) or
+    right (side='r': along x cols), matrix-free."""
+    v = v.astype(jnp.float32)
+    x = x.astype(jnp.float32)
+    s = jnp.dot(v, v) + mu
+    if side == "l":                       # rows indexed by v's dim
+        return (x - jnp.outer(v, (v @ x)) / s) / mu
+    return (x - jnp.outer(x @ v, v) / s) / mu
+
+
+def eva(backend: GradientTransformation,
+        cfg: EvaConfig = EvaConfig()) -> GradientTransformation:
+    def init(params):
+        vecs = {}
+        for path in statlib.iter_dense_layers(params):
+            dense = statlib.tree_get(params, path)
+            stack, _, d_in, d_out = statlib.layer_dims(dense)
+            if any(str(p) in cfg.exclude for p in path):
+                continue
+            if not (cfg.min_factor_dim <= d_in <= cfg.max_factor_dim
+                    and cfg.min_factor_dim <= d_out <= cfg.max_factor_dim):
+                continue
+            vecs[statlib.path_str(path)] = {
+                "a": jnp.zeros(stack + (d_in,), jnp.float32),
+                "g": jnp.zeros(stack + (d_out,), jnp.float32),
+                "seen": jnp.zeros((), jnp.bool_),
+            }
+        return {"count": jnp.zeros((), jnp.int32), "vecs": vecs,
+                "backend": backend.init(params)}
+
+    def update(grads, state, params=None, stats=None, loss=None, **_):
+        layer_paths = {statlib.path_str(p): p
+                       for p in statlib.iter_dense_layers(grads)}
+        out = grads
+        new_vecs = {}
+        for key, vec in state["vecs"].items():
+            path = layer_paths[key]
+            g_w = statlib.tree_get(grads, path)["w"]
+            a_new = statlib.get_a_vec(stats, path) if stats is not None else None
+            g_new = statlib.get_g_vec(grads, path)
+            a_ema, g_ema, seen = vec["a"], vec["g"], vec["seen"]
+            if a_new is not None and g_new is not None:
+                blend = lambda old, new: jnp.where(
+                    seen, cfg.gamma * old + (1 - cfg.gamma)
+                    * new.astype(jnp.float32), new.astype(jnp.float32))
+                a_ema = blend(a_ema, a_new)
+                g_ema = blend(g_ema, g_new)
+                seen = jnp.ones((), jnp.bool_)
+            new_vecs[key] = {"a": a_ema, "g": g_ema, "seen": seen}
+
+            stack, extra, _, _ = statlib.layer_dims(
+                statlib.tree_get(params if params is not None else grads,
+                                 path))
+
+            def one(a, g, gw):
+                d = _rank1_damped_apply(a, gw, cfg.damping, "l")
+                d = _rank1_damped_apply(g, d, cfg.damping, "r")
+                if cfg.rescale:
+                    d = rescale_update(d, gw)
+                return d.astype(gw.dtype)
+
+            fn = _vmap_over_stack(
+                one if not extra else
+                (lambda a, g, gw: jax.vmap(partial(one, a, g))(gw)),
+                len(stack))
+            delta = fn(a_ema, g_ema, g_w)
+            out = statlib.tree_set(
+                out, path, {**statlib.tree_get(out, path), "w": delta})
+
+        out = statlib.zero_probes(out)
+        updates, bstate = backend.update(out, state["backend"], params=params)
+        updates = statlib.zero_probes(updates)
+        return updates, {"count": state["count"] + 1, "vecs": new_vecs,
+                         "backend": bstate}
+
+    return GradientTransformation(init, update)

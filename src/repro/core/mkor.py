@@ -1,0 +1,288 @@
+"""MKOR: Momentum-Enabled Kronecker-Factor-Based Optimizer Using Rank-1
+Updates (NeurIPS 2023) — faithful implementation of Algorithm 1, plus the
+hybrid MKOR-H controller (§3.2) and the higher-rank extension (§4).
+
+Per eligible 2-D layer with weight W (d_in, d_out), gradient G, rank-1
+statistics ā = E[a] (d_in,) and ḡ = E[g] (d_out,):
+
+  line 5/6  norm-based stabilizer:   if ‖F⁻¹‖∞ > ε:  F⁻¹ ← ζF⁻¹ + (1−ζ)I
+  line 7/8  SM-based factor inversion (Eq. 5/6, O(d²)):
+      L⁻¹ ← γL⁻¹ + (1−γ) / (γ²(1 + γ(1−γ) ḡᵀL⁻¹ḡ)) · (L⁻¹ḡ)(L⁻¹ḡ)ᵀ
+      R⁻¹ ← (same with ā)
+  line 9    precondition:            ΔW = R⁻¹ G L⁻¹
+  line 10   rescale:                 ΔW ← ΔW · ‖G‖_F / ‖ΔW‖_F
+  line 14   backend step (LAMB / momentum-SGD / ...)
+
+Factors are stored in ``factor_dtype`` (bf16 by default — the paper's
+half-precision, TPU-native; Lemma 3.2 bounds the quantization error) and
+updated every ``inv_freq`` steps (the paper uses ~10 vs KFAC's 100-1000).
+The SM update is two mat-vecs + one outer product; Lemma 3.1 guarantees the
+scalar denominator is positive, so there is no damping factor anywhere.
+
+Beyond-paper options (each recorded in EXPERIMENTS.md):
+* ``variant="exact_smw"`` — the *exact* Sherman–Morrison inverse of the
+  EMA'd factor  (γL + (1−γ)ḡḡᵀ)⁻¹  (the paper's Eq. 5 is a PD-preserving
+  approximation of it; see DESIGN.md).
+* rank-r statistics (paper §4): if the captured stats carry an extra
+  leading rank dim, the SMW update is chained r times at O(r·d²).
+* ``use_pallas`` — fused Pallas TPU kernels for the SM update and the
+  two-sided preconditioning (kernels/).
+* factor sharding over the "model" mesh axis (launch/dryrun.py) instead of
+  the paper's per-worker replication.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import stats as statlib
+from repro.core.firstorder import GradientTransformation
+
+
+@dataclass(frozen=True)
+class MKORConfig:
+    gamma: float = 0.9                 # factor momentum (Eqs. 3-6)
+    inv_freq: int = 10                 # update factors every f steps
+    stabilizer_threshold: float = 50.0  # ε: ‖F⁻¹‖∞ trigger (lines 5-6)
+    zeta: float = 0.95                 # blend-toward-identity strength
+    factor_dtype: str = "bfloat16"     # paper: half precision
+    max_factor_dim: int = 32768        # skip layers with huge factor dims
+    min_factor_dim: int = 4
+    rescale: bool = True               # line 10 gradient rescaling
+    exclude: Tuple[str, ...] = ("embed", "lm_head")
+    variant: str = "paper"             # "paper" | "exact_smw"
+    use_pallas: bool = False           # fused TPU kernels (kernels/)
+    interpret: bool = False            # pallas interpret mode (CPU tests)
+    # MKOR-H (§3.2)
+    hybrid: bool = False
+    hybrid_ema_fast: float = 0.9
+    hybrid_ema_slow: float = 0.99
+    hybrid_threshold: float = 0.02     # relative improvement-rate floor
+    hybrid_min_steps: int = 50
+
+
+# ----------------------------------------------------------------------- #
+# Core math (single factor, single layer) — the O(d²) heart of the paper.
+# ----------------------------------------------------------------------- #
+def smw_rank1_update(j_inv: jnp.ndarray, v: jnp.ndarray, gamma: float,
+                     variant: str = "paper") -> jnp.ndarray:
+    """One rank-1 SM-based inverse update (paper Eq. 5/6). O(d²)."""
+    dtype = j_inv.dtype
+    u = (j_inv.astype(jnp.float32) @ v.astype(jnp.float32))
+    s = jnp.dot(v.astype(jnp.float32), u)                 # ḡᵀ J⁻¹ ḡ  (fp32)
+    if variant == "paper":
+        coef = (1.0 - gamma) / (gamma ** 2 * (1.0 + gamma * (1.0 - gamma) * s))
+        new = gamma * j_inv.astype(jnp.float32) + coef * jnp.outer(u, u)
+    elif variant == "exact_smw":
+        # (γJ + (1-γ)vvᵀ)⁻¹ = (1/γ)(J⁻¹ − (1−γ) uuᵀ / (γ + (1−γ)s))
+        new = (j_inv.astype(jnp.float32)
+               - (1.0 - gamma) * jnp.outer(u, u) / (gamma + (1.0 - gamma) * s)
+               ) / gamma
+    else:
+        raise ValueError(variant)
+    return new.astype(dtype)
+
+
+def smw_update_maybe_rank_r(j_inv, v, gamma, variant):
+    """v: (d,) rank-1, or (r, d) chained rank-r (paper §4, O(r·d²))."""
+    if v.ndim == 1:
+        return smw_rank1_update(j_inv, v, gamma, variant)
+    for i in range(v.shape[0]):
+        j_inv = smw_rank1_update(j_inv, v[i], gamma, variant)
+    return j_inv
+
+
+def stabilize(j_inv: jnp.ndarray, threshold: float, zeta: float) -> jnp.ndarray:
+    """Norm-based stabilizer (lines 5-6 / Eqs. 7-8) + norm cap.
+
+    The paper's Eq. 5 multiplies the dominant factor eigenvalue by up to
+    γ + γ⁻³ (> 1 for every γ) when the rank-1 statistics are persistent, so
+    the stabilizer is the *required* control loop, not an optional guard —
+    and the ζ-blend alone only bounds the norm when ζ(γ+γ⁻³) < 1.  After
+    the paper's blend-toward-identity we therefore also rescale back to the
+    threshold norm.  Because line 10 rescales the preconditioned update to
+    the raw gradient norm, a pure rescale of the factor is invisible to the
+    update direction — it only prevents overflow (bf16-safe, Lemma 3.2).
+    """
+    jf = j_inv.astype(jnp.float32)
+    norm = jnp.max(jnp.abs(jf))
+    eye = jnp.eye(j_inv.shape[-1], dtype=jnp.float32)
+    blended = zeta * jf + (1.0 - zeta) * eye          # Eqs. 7-8
+    out = jnp.where(norm > threshold, blended, jf)
+    n2 = jnp.max(jnp.abs(out))
+    out = jnp.where(n2 > threshold,
+                    out * (threshold / jnp.maximum(n2, 1e-30)), out)
+    return out.astype(j_inv.dtype)
+
+
+def precondition(l_inv: jnp.ndarray, r_inv: jnp.ndarray,
+                 g_w: jnp.ndarray) -> jnp.ndarray:
+    """ΔW = R⁻¹ G L⁻¹ for W (.., d_in, d_out); broadcasts over extra dims."""
+    gw = g_w.astype(jnp.float32)
+    out = jnp.einsum("ij,...jk->...ik", r_inv.astype(jnp.float32), gw)
+    out = jnp.einsum("...ik,kl->...il", out, l_inv.astype(jnp.float32))
+    return out
+
+
+def rescale_update(delta: jnp.ndarray, g_w: jnp.ndarray) -> jnp.ndarray:
+    """Line 10: match the raw gradient's Frobenius norm (per stacked layer
+    slice — all dims except none here; caller vmaps over stack dims)."""
+    gn = jnp.sqrt(jnp.sum(jnp.square(g_w.astype(jnp.float32))))
+    dn = jnp.sqrt(jnp.sum(jnp.square(delta)))
+    return delta * (gn / jnp.maximum(dn, 1e-30))
+
+
+def _vmap_over_stack(fn, n_stack: int):
+    for _ in range(n_stack):
+        fn = jax.vmap(fn)
+    return fn
+
+
+# ----------------------------------------------------------------------- #
+# The optimizer
+# ----------------------------------------------------------------------- #
+def _eligible(path, dense, cfg: MKORConfig) -> bool:
+    _, _, d_in, d_out = statlib.layer_dims(dense)
+    if any(str(p) in cfg.exclude for p in path):
+        return False
+    lo, hi = cfg.min_factor_dim, cfg.max_factor_dim
+    return lo <= d_in <= hi and lo <= d_out <= hi
+
+
+def _init_factors(dense, cfg: MKORConfig):
+    stack, _, d_in, d_out = statlib.layer_dims(dense)
+    fd = jnp.dtype(cfg.factor_dtype)
+    eye = lambda d: jnp.broadcast_to(jnp.eye(d, dtype=fd), stack + (d, d))
+    return {"l_inv": eye(d_out), "r_inv": eye(d_in)}
+
+
+def _hybrid_init() -> Dict:
+    return {
+        "on": jnp.ones((), jnp.bool_),
+        "ema_fast": jnp.zeros((), jnp.float32),
+        "ema_slow": jnp.zeros((), jnp.float32),
+    }
+
+
+def _hybrid_update(h: Dict, loss, count, cfg: MKORConfig) -> Dict:
+    """MKOR-H (§3.2): sticky switch to first-order when the relative
+    loss-improvement rate stalls."""
+    loss = loss.astype(jnp.float32)
+    first = count == 0
+    fast = jnp.where(first, loss,
+                     cfg.hybrid_ema_fast * h["ema_fast"]
+                     + (1 - cfg.hybrid_ema_fast) * loss)
+    slow = jnp.where(first, loss,
+                     cfg.hybrid_ema_slow * h["ema_slow"]
+                     + (1 - cfg.hybrid_ema_slow) * loss)
+    rate = (slow - fast) / jnp.maximum(jnp.abs(slow), 1e-12)
+    stalled = (count > cfg.hybrid_min_steps) & (rate < cfg.hybrid_threshold)
+    return {"on": h["on"] & ~stalled, "ema_fast": fast, "ema_slow": slow}
+
+
+def mkor(backend: GradientTransformation,
+         cfg: MKORConfig = MKORConfig()) -> GradientTransformation:
+    """MKOR wrapping a first-order ``backend`` (Alg. 1)."""
+
+    if cfg.use_pallas:
+        from repro.kernels import ops as kops
+        smw_fn = partial(kops.smw_rank1_update, gamma=cfg.gamma,
+                         variant=cfg.variant, interpret=cfg.interpret)
+        precond_fn = partial(kops.two_sided_precondition,
+                             interpret=cfg.interpret)
+    else:
+        smw_fn = partial(smw_update_maybe_rank_r, gamma=cfg.gamma,
+                         variant=cfg.variant)
+        precond_fn = precondition
+
+    def init(params):
+        factors = {}
+        for path in statlib.iter_dense_layers(params):
+            dense = statlib.tree_get(params, path)
+            if _eligible(path, dense, cfg):
+                factors[statlib.path_str(path)] = _init_factors(dense, cfg)
+        return {
+            "count": jnp.zeros((), jnp.int32),
+            "factors": factors,
+            "hybrid": _hybrid_init(),
+            "backend": backend.init(params),
+        }
+
+    def update(grads, state, params=None, stats=None, loss=None, **_):
+        count = state["count"]
+        hybrid = state["hybrid"]
+        if cfg.hybrid:
+            if loss is None:
+                raise ValueError("MKOR-H needs the loss for switching")
+            hybrid = _hybrid_update(hybrid, loss, count, cfg)
+        so_on = hybrid["on"] if cfg.hybrid else jnp.ones((), jnp.bool_)
+        do_inv = so_on & (count % cfg.inv_freq == 0)
+
+        layer_paths = {statlib.path_str(p): p
+                       for p in statlib.iter_dense_layers(grads)}
+        new_factors = {}
+        out = grads
+        for key, fac in state["factors"].items():
+            path = layer_paths[key]
+            g_w = statlib.tree_get(grads, path)["w"]
+            a_vec = statlib.get_a_vec(stats, path) if stats is not None else None
+            g_vec = statlib.get_g_vec(grads, path)
+            stack, extra, d_in, d_out = statlib.layer_dims(
+                statlib.tree_get(params if params is not None else grads,
+                                 path))
+            ns = len(stack)
+
+            l_inv, r_inv = fac["l_inv"], fac["r_inv"]
+
+            # --- lines 5-8: stabilize + SM factor update (every inv_freq) --
+            if a_vec is not None and g_vec is not None:
+                stab = _vmap_over_stack(
+                    partial(stabilize, threshold=cfg.stabilizer_threshold,
+                            zeta=cfg.zeta), ns)
+                upd = _vmap_over_stack(smw_fn, ns)
+
+                def compute_new(l_inv=l_inv, r_inv=r_inv, stab=stab, upd=upd,
+                                g_vec=g_vec, a_vec=a_vec):
+                    return upd(stab(l_inv), g_vec), upd(stab(r_inv), a_vec)
+
+                l_new, r_new = compute_new()
+                l_inv = jnp.where(do_inv, l_new, l_inv)
+                r_inv = jnp.where(do_inv, r_new, r_inv)
+            new_factors[key] = {"l_inv": l_inv, "r_inv": r_inv}
+
+            # --- line 9-10: precondition + rescale ------------------------ #
+            def one(linv, rinv, gw):
+                delta = precond_fn(linv, rinv, gw)
+                if cfg.rescale:
+                    delta = rescale_update(delta, gw)
+                return delta.astype(gw.dtype)
+
+            delta = _vmap_over_stack(one, ns)(l_inv, r_inv, g_w)
+            delta = jnp.where(so_on, delta, g_w)      # MKOR-H fallback
+            out = statlib.tree_set(
+                out, path, {**statlib.tree_get(out, path), "w": delta})
+
+        # probes are stat taps: never step them, keep backend moments clean
+        out = statlib.zero_probes(out)
+        updates, backend_state = backend.update(out, state["backend"],
+                                                params=params)
+        updates = statlib.zero_probes(updates)
+        return updates, {
+            "count": count + 1,
+            "factors": new_factors,
+            "hybrid": hybrid,
+            "backend": backend_state,
+        }
+
+    return GradientTransformation(init, update)
+
+
+def mkor_h(backend: GradientTransformation,
+           cfg: MKORConfig = MKORConfig()) -> GradientTransformation:
+    """Hybrid MKOR (§3.2)."""
+    return mkor(backend, dataclasses.replace(cfg, hybrid=True))

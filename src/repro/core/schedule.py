@@ -1,0 +1,110 @@
+"""Learning-rate schedules.
+
+Includes the two paper-specific schedules:
+* WSD (Warmup-Stable-Decay) — required by the minicpm-2b assigned config
+  [arXiv:2404.06395].
+* Knee-point scheduler (paper §8.13): monitors the EMA'd loss-improvement
+  rate and decays the LR when a knee is detected.  It is *stateful* (needs
+  the loss), so it is exposed as pure (init_state, update) functions that the
+  train step threads through jit.
+"""
+from __future__ import annotations
+
+import math
+from typing import Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+Schedule = Callable[[jnp.ndarray], jnp.ndarray]
+
+
+def constant(lr: float) -> Schedule:
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def warmup_linear(peak: float, warmup: int, total: int,
+                  floor: float = 0.0) -> Schedule:
+    def f(step):
+        step = step.astype(jnp.float32)
+        wu = peak * step / max(warmup, 1)
+        frac = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        dec = peak + (floor - peak) * frac
+        return jnp.where(step < warmup, wu, dec)
+    return f
+
+
+def warmup_cosine(peak: float, warmup: int, total: int,
+                  floor: float = 0.0) -> Schedule:
+    def f(step):
+        step = step.astype(jnp.float32)
+        wu = peak * step / max(warmup, 1)
+        frac = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        dec = floor + (peak - floor) * 0.5 * (1 + jnp.cos(math.pi * frac))
+        return jnp.where(step < warmup, wu, dec)
+    return f
+
+
+def wsd(peak: float, warmup: int, stable: int, decay: int,
+        floor_frac: float = 0.1) -> Schedule:
+    """Warmup-Stable-Decay (MiniCPM): linear warmup, long constant plateau,
+    exponential-ish (here: cosine) final decay to floor_frac*peak."""
+    floor = peak * floor_frac
+
+    def f(step):
+        step = step.astype(jnp.float32)
+        wu = peak * step / max(warmup, 1)
+        in_decay = step - (warmup + stable)
+        frac = jnp.clip(in_decay / max(decay, 1), 0.0, 1.0)
+        dec = floor + (peak - floor) * 0.5 * (1 + jnp.cos(math.pi * frac))
+        return jnp.where(step < warmup, wu,
+                         jnp.where(step < warmup + stable, peak, dec))
+    return f
+
+
+def step_decay(base: float, boundaries, factor: float = 0.5) -> Schedule:
+    """Decay by `factor` at each boundary (paper §8.9 ResNet recipe)."""
+    bs = jnp.asarray(list(boundaries), jnp.int32)
+
+    def f(step):
+        n = jnp.sum(step >= bs).astype(jnp.float32)
+        return jnp.asarray(base, jnp.float32) * factor ** n
+    return f
+
+
+# ----------------------------------------------------------------------- #
+# Knee-point scheduler (paper §8.13)
+# ----------------------------------------------------------------------- #
+def kneepoint_init(base_lr: float) -> Dict:
+    return {
+        "lr": jnp.asarray(base_lr, jnp.float32),
+        "ema_rate": jnp.zeros((), jnp.float32),     # EMA of per-step drop
+        "loss_prev": jnp.full((), jnp.inf, jnp.float32),
+        "loss_at_lr": jnp.full((), jnp.inf, jnp.float32),  # loss when lr set
+        "steps_at_lr": jnp.zeros((), jnp.float32),
+    }
+
+
+def kneepoint_update(state: Dict, loss: jnp.ndarray, *,
+                     beta: float = 0.1, ema: float = 0.95,
+                     decay_factor: float = 0.5, min_steps: int = 20) -> Dict:
+    """Knee-point: decay when the EMA'd loss-decrease rate falls below
+    ``beta`` x the average decrease since the current LR was set."""
+    loss = loss.astype(jnp.float32)
+    first = jnp.isinf(state["loss_prev"])
+    drop = jnp.where(first, 0.0, state["loss_prev"] - loss)
+    ema_rate = jnp.where(first, 0.0,
+                         ema * state["ema_rate"] + (1 - ema) * drop)
+    steps = state["steps_at_lr"] + 1.0
+    loss_at = jnp.where(jnp.isinf(state["loss_at_lr"]), loss,
+                        state["loss_at_lr"])
+    avg_since = (loss_at - loss) / jnp.maximum(steps, 1.0)
+    knee = (steps > min_steps) & (ema_rate < beta * jnp.maximum(avg_since, 0.0))
+    lr = jnp.where(knee, state["lr"] * decay_factor, state["lr"])
+    return {
+        "lr": lr,
+        "ema_rate": jnp.where(knee, 0.0, ema_rate),
+        "loss_prev": loss,
+        "loss_at_lr": jnp.where(knee, loss, loss_at),
+        "steps_at_lr": jnp.where(knee, 0.0, steps),
+    }

@@ -1,0 +1,132 @@
+"""Layer discovery + rank-1 statistic extraction for second-order optimizers.
+
+Conventions (see models/layers.py):
+* A "dense layer" is any params sub-dict containing both ``"w"`` (ndim >= 2,
+  trailing dims = (d_in, d_out)) and ``"probe"`` (trailing dim = d_out).
+* Leading dims of ``probe`` (size-1 dims stripped) are the *stack* dims —
+  scan-over-layers repeats and (optionally) per-expert factors.
+* ``w`` may carry extra broadcast dims between the stack and the matrix
+  dims (the expert dim E under shared factors); preconditioning broadcasts
+  the factors over them.
+* The stats tree (from ``forward(collect_stats=True)``) mirrors the params
+  tree with each dense sub-dict replaced by ``{"a": E[a]}``.
+* ``grads[...]["probe"]`` is exactly ``E[g]`` (mean-loss probe identity,
+  models/layers.py docstring).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Path = Tuple[Any, ...]
+
+
+def is_dense_dict(node) -> bool:
+    return isinstance(node, dict) and "w" in node and "probe" in node \
+        and hasattr(node["w"], "ndim") and node["w"].ndim >= 2
+
+
+def iter_dense_layers(params) -> List[Path]:
+    """All paths (tuples of dict keys / sequence indices) to dense dicts."""
+    out: List[Path] = []
+
+    def walk(node, path):
+        if is_dense_dict(node):
+            out.append(path)
+            return
+        if isinstance(node, dict):
+            for k in sorted(node):
+                walk(node[k], path + (k,))
+        elif isinstance(node, (list, tuple)):
+            for i, v in enumerate(node):
+                walk(v, path + (i,))
+
+    walk(params, ())
+    return out
+
+
+def tree_get(tree, path: Path):
+    node = tree
+    for k in path:
+        if node is None:
+            return None
+        try:
+            node = node[k]
+        except (KeyError, IndexError, TypeError):
+            return None
+    return node
+
+
+def tree_set(tree, path: Path, value):
+    """Functionally replace ``tree[path]`` (dicts/lists copied on the way)."""
+    if not path:
+        return value
+    k = path[0]
+    if isinstance(tree, dict):
+        new = dict(tree)
+        new[k] = tree_set(tree[k], path[1:], value)
+        return new
+    if isinstance(tree, list):
+        new = list(tree)
+        new[k] = tree_set(tree[k], path[1:], value)
+        return new
+    if isinstance(tree, tuple):
+        lst = list(tree)
+        lst[k] = tree_set(tree[k], path[1:], value)
+        return tuple(lst)
+    raise TypeError(f"cannot set path {path} in {type(tree)}")
+
+
+def path_str(path: Path) -> str:
+    return "/".join(str(p) for p in path)
+
+
+def stack_shape_of(probe: jnp.ndarray) -> Tuple[int, ...]:
+    """Stack dims = probe leading dims with broadcast 1s stripped."""
+    return tuple(d for d in probe.shape[:-1] if d != 1)
+
+
+def layer_dims(dense: Dict) -> Tuple[Tuple[int, ...], Tuple[int, ...], int, int]:
+    """Returns (stack_shape, extra_shape, d_in, d_out) for a dense dict."""
+    w, probe = dense["w"], dense["probe"]
+    d_in, d_out = w.shape[-2], w.shape[-1]
+    stack = stack_shape_of(probe)
+    lead = w.shape[:-2]
+    assert lead[:len(stack)] == stack, (
+        f"stack dims {stack} not a prefix of w lead dims {lead}")
+    extra = lead[len(stack):]
+    return stack, extra, d_in, d_out
+
+
+def get_a_vec(stats, path: Path) -> Optional[jnp.ndarray]:
+    node = tree_get(stats, path)
+    if node is None or not isinstance(node, dict) or "a" not in node:
+        return None
+    return node["a"]
+
+
+def get_g_vec(grads, path: Path) -> Optional[jnp.ndarray]:
+    node = tree_get(grads, path)
+    if node is None or "probe" not in node:
+        return None
+    probe = node["probe"]
+    stack = stack_shape_of(probe)
+    return probe.reshape(stack + probe.shape[-1:])
+
+
+def zero_probes(tree):
+    """Zero every ``probe`` leaf (probes are statistics taps, never updated)."""
+
+    def walk(node):
+        if isinstance(node, dict):
+            return {k: (jnp.zeros_like(v) if k == "probe" else walk(v))
+                    for k, v in node.items()}
+        if isinstance(node, list):
+            return [walk(v) for v in node]
+        if isinstance(node, tuple):
+            return tuple(walk(v) for v in node)
+        return node
+
+    return walk(tree)

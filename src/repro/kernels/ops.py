@@ -1,0 +1,82 @@
+"""Jit'd wrappers around the Pallas kernels: padding to MXU-aligned block
+multiples, scalar SMW coefficient math (fp32, Lemma 3.1 positivity), and
+broadcast handling for expert/stack dims.  These are the entry points the
+MKOR optimizer uses when ``use_pallas=True``."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import matmul as mm
+from repro.kernels import rank1_smw as rk
+from repro.kernels import ref
+
+
+def _pad_to(x: jnp.ndarray, block: int, dims) -> jnp.ndarray:
+    pads = [(0, 0)] * x.ndim
+    for d in dims:
+        rem = (-x.shape[d]) % block
+        pads[d] = (0, rem)
+    if any(p != (0, 0) for p in pads):
+        x = jnp.pad(x, pads)
+    return x
+
+
+def _pick_block(d: int, preferred: int = 256) -> int:
+    for b in (preferred, 128, 64, 32, 16, 8):
+        if d % b == 0 or d > b:
+            return b
+    return 8
+
+
+def smw_rank1_update(j_inv: jnp.ndarray, v: jnp.ndarray, *, gamma: float,
+                     variant: str = "paper", block: int = 0,
+                     interpret: bool = False) -> jnp.ndarray:
+    """Pallas-accelerated Alg. 1 line 7/8.  v: (d,) or (r, d) chained."""
+    if v.ndim == 2:
+        for i in range(v.shape[0]):
+            j_inv = smw_rank1_update(j_inv, v[i], gamma=gamma,
+                                     variant=variant, block=block,
+                                     interpret=interpret)
+        return j_inv
+    d = j_inv.shape[0]
+    blk = block or _pick_block(d)
+    jp = _pad_to(j_inv, blk, (0, 1))
+    vp = _pad_to(v.reshape(-1, 1).astype(jnp.float32), blk, (0,))
+    u = rk.matvec(jp, vp, block=blk, interpret=interpret)
+    s = jnp.vdot(vp[:, 0], u[:, 0])
+    coef = ref.smw_coef_ref(s, gamma, variant)
+    if variant == "paper":
+        out = rk.rank1_update(jp, u, coef, gamma=gamma, block=blk,
+                              interpret=interpret)
+    else:
+        out = rk.rank1_update(jp, u, coef, gamma=1.0 / gamma, block=blk,
+                              interpret=interpret)
+    return out[:d, :d]
+
+
+def pallas_matmul(a: jnp.ndarray, b: jnp.ndarray, *, block: int = 0,
+                  out_dtype=jnp.float32, interpret: bool = False):
+    m, k = a.shape
+    _, n = b.shape
+    blk = block or min(_pick_block(m), _pick_block(n), _pick_block(k))
+    ap = _pad_to(a, blk, (0, 1))
+    bp = _pad_to(b, blk, (0, 1))
+    out = mm.matmul(ap, bp, block_m=blk, block_n=blk, block_k=blk,
+                    out_dtype=out_dtype, interpret=interpret)
+    return out[:m, :n]
+
+
+def two_sided_precondition(l_inv: jnp.ndarray, r_inv: jnp.ndarray,
+                           g_w: jnp.ndarray, *, block: int = 0,
+                           interpret: bool = False) -> jnp.ndarray:
+    """ΔW = R⁻¹ G L⁻¹ via two tiled Pallas matmuls.  Extra leading dims of
+    ``g_w`` (experts under shared factors) are vmapped."""
+    if g_w.ndim > 2:
+        fn = partial(two_sided_precondition, l_inv, r_inv, block=block,
+                     interpret=interpret)
+        return jax.vmap(fn)(g_w)
+    t = pallas_matmul(r_inv, g_w, block=block, interpret=interpret)
+    return pallas_matmul(t, l_inv, block=block, interpret=interpret)

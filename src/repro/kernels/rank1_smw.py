@@ -1,0 +1,100 @@
+"""Pallas TPU kernels for MKOR's O(d²) hot loop (Alg. 1 lines 7-8).
+
+The SM rank-1 inverse update
+
+    u = J⁻¹ v;   s = vᵀu;   J⁻¹ ← γ J⁻¹ + coef(s) · u uᵀ
+
+is re-blocked for the TPU memory hierarchy (DESIGN.md §3):
+
+* ``matvec``: row-tiled mat-vec with fp32 accumulation across the column
+  grid — each (BR, BC) tile of J streams HBM→VMEM once; u lives in VMEM.
+* ``rank1_update``: writes  γ·J_tile + coef·u_r u_cᵀ  tile-by-tile; the
+  d×d outer product is never materialised in HBM as a separate array, and
+  J stays in bf16 end-to-end (the paper's half-precision factors).
+
+Tiles are 128-aligned for the MXU/VPU; callers pad to multiples of the
+block size (kernels/ops.py).  Validated against kernels/ref.py in
+interpret mode on CPU (tests/test_kernels.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK = 256
+
+
+def _matvec_kernel(j_ref, v_ref, u_ref):
+    """Grid (rows, cols): u[rows] += J[rows, cols] @ v[cols]."""
+
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        u_ref[...] = jnp.zeros_like(u_ref)
+
+    u_ref[...] += jnp.dot(
+        j_ref[...].astype(jnp.float32), v_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32)
+
+
+def matvec(j: jnp.ndarray, v: jnp.ndarray, *, block: int = DEFAULT_BLOCK,
+           interpret: bool = False) -> jnp.ndarray:
+    """u = J @ v.  J: (d, d) any dtype; v: (d, 1) fp32 → u (d, 1) fp32."""
+    d = j.shape[0]
+    assert d % block == 0, f"pad to block multiple ({d} % {block})"
+    grid = (d // block, d // block)
+    return pl.pallas_call(
+        _matvec_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block, block), lambda i, k: (i, k)),
+            pl.BlockSpec((block, 1), lambda i, k: (k, 0)),
+        ],
+        out_specs=pl.BlockSpec((block, 1), lambda i, k: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((d, 1), jnp.float32),
+        interpret=interpret,
+    )(j, v)
+
+
+def _rank1_update_kernel(j_ref, ur_ref, uc_ref, coef_ref, out_ref, *,
+                         gamma: float):
+    """out_tile = γ·J_tile + coef · u_r u_cᵀ  (coef in SMEM-style (1,1))."""
+    coef = coef_ref[0, 0]
+    outer = jnp.dot(ur_ref[...].astype(jnp.float32),
+                    uc_ref[...].astype(jnp.float32).T,
+                    preferred_element_type=jnp.float32)
+    out_ref[...] = (gamma * j_ref[...].astype(jnp.float32)
+                    + coef * outer).astype(out_ref.dtype)
+
+
+def rank1_update(j: jnp.ndarray, u: jnp.ndarray, coef: jnp.ndarray, *,
+                 gamma: float, block: int = DEFAULT_BLOCK,
+                 interpret: bool = False) -> jnp.ndarray:
+    """J ← γJ + coef·uuᵀ without materialising uuᵀ in HBM."""
+    d = j.shape[0]
+    assert d % block == 0
+    grid = (d // block, d // block)
+    coef = jnp.asarray(coef, jnp.float32).reshape(1, 1)
+    return pl.pallas_call(
+        functools.partial(_rank1_update_kernel, gamma=gamma),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block, block), lambda i, k: (i, k)),
+            pl.BlockSpec((block, 1), lambda i, k: (i, 0)),
+            pl.BlockSpec((block, 1), lambda i, k: (k, 0)),
+            pl.BlockSpec((1, 1), lambda i, k: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block, block), lambda i, k: (i, k)),
+        out_shape=jax.ShapeDtypeStruct((d, d), j.dtype),
+        interpret=interpret,
+    )(j, u, u, coef)
+
+
+def smw_vectors(j: jnp.ndarray, v: jnp.ndarray, *, block: int = DEFAULT_BLOCK,
+                interpret: bool = False):
+    """(u, s) = (J v, vᵀ J v) — the two O(d²)/O(d) pieces of Eq. 5/6."""
+    u = matvec(j, v, block=block, interpret=interpret)
+    s = jnp.vdot(v[:, 0], u[:, 0])
+    return u, s

@@ -1,0 +1,46 @@
+"""Pure-jnp oracles for every Pallas kernel (independent implementations —
+tests assert_allclose kernels against these across shape/dtype sweeps)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def matvec_ref(j: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+    """u = J v.  j (d, d), v (d, 1) → (d, 1) fp32."""
+    return (j.astype(jnp.float32) @ v.astype(jnp.float32)).astype(jnp.float32)
+
+
+def matmul_ref(a: jnp.ndarray, b: jnp.ndarray,
+               out_dtype=jnp.float32) -> jnp.ndarray:
+    return (a.astype(jnp.float32) @ b.astype(jnp.float32)).astype(out_dtype)
+
+
+def smw_coef_ref(s: jnp.ndarray, gamma: float, variant: str) -> jnp.ndarray:
+    """Scalar coefficient of the rank-1 term (paper Eq. 5/6 or exact SMW)."""
+    s = s.astype(jnp.float32)
+    if variant == "paper":
+        return (1.0 - gamma) / (gamma ** 2 * (1.0 + gamma * (1.0 - gamma) * s))
+    if variant == "exact_smw":
+        return -(1.0 - gamma) / (gamma * (gamma + (1.0 - gamma) * s))
+    raise ValueError(variant)
+
+
+def smw_rank1_update_ref(j_inv: jnp.ndarray, v: jnp.ndarray, gamma: float,
+                         variant: str = "paper") -> jnp.ndarray:
+    """Full SMW rank-1 inverse update (Alg. 1 line 7/8)."""
+    jf = j_inv.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    u = jf @ vf
+    s = vf @ u
+    coef = smw_coef_ref(s, gamma, variant)
+    scale = gamma if variant == "paper" else 1.0 / gamma
+    new = scale * jf + coef * jnp.outer(u, u)
+    return new.astype(j_inv.dtype)
+
+
+def two_sided_precondition_ref(l_inv: jnp.ndarray, r_inv: jnp.ndarray,
+                               g_w: jnp.ndarray) -> jnp.ndarray:
+    """ΔW = R⁻¹ G L⁻¹ (fp32)."""
+    out = jnp.einsum("ij,...jk->...ik", r_inv.astype(jnp.float32),
+                     g_w.astype(jnp.float32))
+    return jnp.einsum("...ik,kl->...il", out, l_inv.astype(jnp.float32))

@@ -1,0 +1,39 @@
+"""Production meshes.
+
+Target hardware: TPU v5e pods — 256 chips/pod (16x16), 2 pods for the
+multi-pod dry-run.  Defined as functions so importing this module never
+touches jax device state (device count is locked on first use).
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+from jax.sharding import Mesh
+
+from repro.sharding.rules import MeshAxes
+
+SINGLE_POD = (16, 16)
+MULTI_POD = (2, 16, 16)
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = MULTI_POD if multi_pod else SINGLE_POD
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices, have {len(devices)} — run "
+            "under launch/dryrun.py which forces 512 host devices")
+    return jax.make_mesh(shape, axes, devices=devices[:n])
+
+
+def make_host_mesh() -> Mesh:
+    """1x1 mesh on the real local device (smoke tests / examples)."""
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def mesh_axes(mesh: Mesh) -> MeshAxes:
+    if "pod" in mesh.axis_names:
+        return MeshAxes(data=("pod", "data"), model="model")
+    return MeshAxes(data=("data",), model="model")

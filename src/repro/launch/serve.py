@@ -1,0 +1,79 @@
+"""Serving launcher: batched greedy generation with prefill + decode.
+
+``python -m repro.launch.serve --arch rwkv6-3b --reduced --n-tokens 32``
+
+Demonstrates the production serve path: one prefill over the prompt batch
+building the (ring-buffer / recurrent) caches, then jitted single-token
+decode steps.  On TPU the same entry point runs under the production mesh
+with the cache shardings from sharding/rules.py.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import registry
+from repro.data import pipeline
+from repro.models import model as model_lib
+from repro.training import serving
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--n-tokens", type=int, default=32)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = registry.get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+
+    params = model_lib.init_params(jax.random.PRNGKey(args.seed), cfg)
+    print(f"arch={cfg.name} params={model_lib.param_count(params):,}")
+
+    ds = pipeline.make_dataset(cfg, global_batch=args.batch,
+                               seq_len=args.prompt_len, seed=args.seed)
+    batch = pipeline.make_batch(ds, 0)
+    prompt = {"tokens": jnp.asarray(batch["tokens"])}
+    if "frontend_embeds" in batch:
+        prompt["frontend_embeds"] = jnp.asarray(batch["frontend_embeds"])
+    if cfg.is_encoder_decoder:
+        prompt["frontend_embeds"] = jnp.asarray(
+            pipeline.encoder_frames(cfg, args.batch, 0, args.seed))
+
+    prefill = jax.jit(serving.make_prefill_step(
+        cfg, cache_extra=args.n_tokens))
+    step = jax.jit(serving.make_serve_step(cfg))
+
+    t0 = time.time()
+    logits, cache = prefill(params, prompt)
+    logits.block_until_ready()
+    t_prefill = time.time() - t0
+
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    outs = [np.asarray(tok)]
+    t0 = time.time()
+    for _ in range(args.n_tokens - 1):
+        tok, lg, cache = step(params, cache, tok)
+        outs.append(np.asarray(tok))
+    t_decode = time.time() - t0
+
+    gen = np.concatenate(outs, axis=1)
+    print(f"prefill {args.batch}x{prompt['tokens'].shape[1]} "
+          f"in {t_prefill:.2f}s; decode {args.n_tokens} tokens "
+          f"in {t_decode:.2f}s "
+          f"({args.n_tokens * args.batch / max(t_decode, 1e-9):.1f} tok/s)")
+    print("sample:", gen[0, :24].tolist())
+    assert np.isfinite(np.asarray(lg)).all(), "non-finite logits"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,146 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [...]``.
+
+Runs a real (CPU-scale) training job on a reduced or full config with any
+of the implemented optimizers, checkpointing and logging included.  On a
+real TPU slice the same entry point runs the full config under the
+production mesh (the sharding rules are mesh-size agnostic); in this
+container it is exercised with ``--reduced`` (the per-arch smoke scale).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from repro import checkpointing
+from repro.configs import registry
+from repro.core import firstorder, schedule as sched_lib
+from repro.core.mkor import MKORConfig, mkor, mkor_h
+from repro.core.eva import EvaConfig, eva
+from repro.data import pipeline
+from repro.launch import mesh as mesh_lib
+from repro.models import model as model_lib
+from repro.sharding import rules
+from repro.training import loop as train_lib
+
+
+def build_optimizer(name: str, lr, *, inv_freq: int = 10,
+                    use_pallas: bool = False):
+    backend = firstorder.lamb(lr)
+    if name == "mkor":
+        return mkor(backend, MKORConfig(
+            inv_freq=inv_freq, use_pallas=use_pallas, interpret=use_pallas))
+    if name == "mkor_h":
+        return mkor_h(backend, MKORConfig(inv_freq=inv_freq))
+    if name == "eva":
+        return eva(backend, EvaConfig())
+    if name == "lamb":
+        return backend
+    if name == "sgd":
+        return firstorder.sgd(lr, momentum=0.9)
+    if name == "adamw":
+        return firstorder.adamw(lr)
+    raise ValueError(name)
+
+
+def build_schedule(kind: str, peak: float, steps: int):
+    if kind == "constant":
+        return sched_lib.constant(peak)
+    if kind == "wsd":
+        return sched_lib.wsd(peak, max(steps // 10, 1),
+                             max(steps * 7 // 10, 1), max(steps // 5, 1))
+    if kind == "cosine":
+        return sched_lib.warmup_cosine(peak, max(steps // 10, 1), steps)
+    if kind == "linear":
+        return sched_lib.warmup_linear(peak, max(steps // 10, 1), steps)
+    raise ValueError(kind)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--optimizer", default="mkor",
+                    choices=["mkor", "mkor_h", "eva", "lamb", "sgd", "adamw"])
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--schedule", default="cosine",
+                    choices=["constant", "wsd", "cosine", "linear"])
+    ap.add_argument("--inv-freq", type=int, default=10)
+    ap.add_argument("--reduced", action="store_true",
+                    help="train the smoke-scale variant of the arch")
+    ap.add_argument("--use-pallas", action="store_true",
+                    help="MKOR via the Pallas kernels (interpret on CPU)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--log-json", default="")
+    args = ap.parse_args()
+
+    cfg = registry.get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+
+    lr = build_schedule(args.schedule, args.lr, args.steps)
+    opt = build_optimizer(args.optimizer, lr, inv_freq=args.inv_freq,
+                          use_pallas=args.use_pallas)
+
+    params = model_lib.init_params(jax.random.PRNGKey(args.seed), cfg)
+    n_params = model_lib.param_count(params)
+    print(f"arch={cfg.name} params={n_params:,} optimizer={args.optimizer} "
+          f"steps={args.steps} batch={args.global_batch}x{args.seq_len}")
+
+    ds = pipeline.make_dataset(cfg, global_batch=args.global_batch,
+                               seq_len=args.seq_len, seed=args.seed)
+    step_fn = jax.jit(train_lib.make_train_step(cfg, opt))
+    opt_state = opt.init(params)
+
+    start = 0
+    if args.ckpt_dir:
+        latest = checkpointing.latest_step(args.ckpt_dir)
+        if latest is not None:
+            (params, opt_state), meta = checkpointing.restore(
+                args.ckpt_dir, latest, (params, opt_state))
+            start = int(meta.get("step", latest)) + 1
+            print(f"restored checkpoint step {latest}")
+
+    history = []
+    t0 = time.time()
+    for i in range(start, args.steps):
+        batch = pipeline.make_batch(ds, i)
+        if cfg.is_encoder_decoder:
+            batch["frontend_embeds"] = pipeline.encoder_frames(
+                cfg, args.global_batch, i, args.seed)
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        if i % args.log_every == 0 or i == args.steps - 1:
+            m = {k: float(v) for k, v in metrics.items()}
+            m["step"] = i
+            m["wall_s"] = time.time() - t0
+            history.append(m)
+            print(f"step {i:5d} loss={m['loss']:.4f} "
+                  f"gnorm={m['grad_norm']:.3f} ({m['wall_s']:.1f}s)")
+        if args.ckpt_dir and args.ckpt_every \
+                and i > 0 and i % args.ckpt_every == 0:
+            checkpointing.save(args.ckpt_dir, i, (params, opt_state),
+                               {"step": i, "loss": float(metrics["loss"])})
+    if args.ckpt_dir:
+        checkpointing.save(args.ckpt_dir, args.steps - 1,
+                           (params, opt_state), {"step": args.steps - 1})
+    if args.log_json:
+        os.makedirs(os.path.dirname(args.log_json) or ".", exist_ok=True)
+        with open(args.log_json, "w") as f:
+            json.dump(history, f, indent=1)
+    final = history[-1]["loss"] if history else float("nan")
+    print(f"done: final loss {final:.4f}")
+    if not np.isfinite(final):
+        raise SystemExit("training diverged")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,9 @@
+from repro.models.config import (  # noqa: F401
+    INPUT_SHAPES,
+    EncoderConfig,
+    InputShape,
+    LayerSpec,
+    MambaConfig,
+    ModelConfig,
+    MoEConfig,
+)

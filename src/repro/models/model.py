@@ -1,0 +1,490 @@
+"""Model assembly: heterogeneous block patterns, scan-over-layers, caches.
+
+The model is ``n_repeats`` repetitions of a pattern of ``LayerSpec``s.  All
+per-position parameters are stacked on a leading ``n_repeats`` axis (even when
+``n_repeats == 1``) so that
+
+* the forward pass can ``lax.scan`` over repeats (small HLO — essential for
+  the 512-device dry-run of 40-56 layer models), and
+* MKOR factor states and stat vectors keep one uniform stacked layout the
+  optimizer can ``vmap`` over.
+
+Supports: decoder-only (dense/MoE/SSM/hybrid), encoder-decoder (Whisper),
+prefix-multimodal (Pixtral patch embeddings, Whisper frame embeddings — the
+modality frontends are stubs per the assignment; ``frontend_proj`` is a real
+linear layer and is MKOR-preconditioned).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention, layers, moe, ssm
+from repro.models.config import LayerSpec, ModelConfig
+from repro.sharding import rules
+
+Params = Dict[str, Any]
+
+
+# ======================================================================= #
+# Init
+# ======================================================================= #
+def _block_init(key, cfg: ModelConfig, spec: LayerSpec, *, cross: bool,
+                dtype) -> Params:
+    ks = jax.random.split(key, 8)
+    p: Params = {"pre_norm": layers.norm_init(cfg.d_model, cfg.norm)}
+    if spec.kind == "attn":
+        p["mixer"] = attention.attn_init(ks[0], cfg, dtype=dtype)
+    elif spec.kind == "rwkv":
+        p["mixer"] = ssm.rwkv_init(ks[0], cfg, dtype=dtype)
+    elif spec.kind == "mamba":
+        p["mixer"] = ssm.mamba_init(ks[0], cfg, dtype=dtype)
+    else:
+        raise ValueError(spec.kind)
+    if cfg.post_block_norm:
+        p["post_mixer_norm"] = layers.norm_init(cfg.d_model, cfg.norm)
+
+    if cross:
+        p["cross_norm"] = layers.norm_init(cfg.d_model, cfg.norm)
+        p["cross"] = attention.attn_init(ks[1], cfg, dtype=dtype)
+
+    if spec.mlp == "dense":
+        p["mlp_norm"] = layers.norm_init(cfg.d_model, cfg.norm)
+        p["mlp"] = layers.mlp_init(ks[2], cfg.d_model, cfg.d_ff, dtype=dtype,
+                                   gated=cfg.gated_mlp)
+    elif spec.mlp == "moe":
+        p["mlp_norm"] = layers.norm_init(cfg.d_model, cfg.norm)
+        p["mlp"] = moe.moe_init(ks[2], cfg, dtype=dtype)
+    elif spec.mlp == "rwkv_cm":
+        p["mlp_norm"] = layers.norm_init(cfg.d_model, "layernorm")
+        p["mlp"] = ssm.rwkv_cm_init(ks[2], cfg, dtype=dtype)
+    elif spec.mlp != "none":
+        raise ValueError(spec.mlp)
+    if cfg.post_block_norm and spec.mlp != "none":
+        p["post_mlp_norm"] = layers.norm_init(cfg.d_model, cfg.norm)
+    return p
+
+
+def init_params(key, cfg: ModelConfig) -> Params:
+    dtype = jnp.dtype(cfg.dtype)
+    keys = jax.random.split(key, 8)
+    params: Params = {
+        "embed": layers.embed_init(keys[0], cfg.padded_vocab, cfg.d_model,
+                                   dtype=dtype),
+        "final_norm": layers.norm_init(cfg.d_model, cfg.norm),
+    }
+    cross = cfg.is_encoder_decoder
+
+    def stacked_blocks(base_key):
+        blocks = []
+        for pos, spec in enumerate(cfg.pattern):
+            pos_key = jax.random.fold_in(base_key, pos)
+            rep_keys = jax.random.split(pos_key, cfg.n_repeats)
+            blocks.append(jax.vmap(
+                lambda k: _block_init(k, cfg, spec, cross=cross, dtype=dtype)
+            )(rep_keys))
+        return blocks
+
+    params["blocks"] = stacked_blocks(keys[1])
+
+    if not cfg.tie_embeddings:
+        params["lm_head"] = layers.dense_init(
+            keys[2], cfg.d_model, cfg.padded_vocab, dtype=dtype)
+
+    if cfg.frontend != "none":
+        fdim = cfg.frontend_dim or cfg.d_model
+        params["frontend_proj"] = layers.dense_init(
+            keys[3], fdim, cfg.d_model, dtype=dtype)
+
+    if cfg.is_encoder_decoder:
+        enc = cfg.encoder
+        enc_spec = LayerSpec(kind="attn", window=None, mlp="dense")
+        rep_keys = jax.random.split(keys[4], enc.n_layers)
+        params["encoder"] = {
+            "blocks": [jax.vmap(
+                lambda k: _block_init(k, cfg, enc_spec, cross=False,
+                                      dtype=dtype))(rep_keys)],
+            "final_norm": layers.norm_init(cfg.d_model, cfg.norm),
+        }
+    return params
+
+
+def param_count(params: Params) -> int:
+    return sum(x.size for x in jax.tree_util.tree_leaves(params))
+
+
+def _mask_pad_logits(logits: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    """Padded vocab columns (config.padded_vocab) never win: -inf logits,
+    zero gradient."""
+    if cfg.padded_vocab == cfg.vocab_size:
+        return logits
+    iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                    logits.ndim - 1)
+    neg = jnp.asarray(-2.0 ** 30, logits.dtype)
+    return jnp.where(iota < cfg.vocab_size, logits, neg)
+
+
+# ======================================================================= #
+# Full-sequence block apply (train / prefill)
+# ======================================================================= #
+def _block_apply_full(
+    p: Params, x, cfg: ModelConfig, spec: LayerSpec, positions,
+    *, enc_out=None, causal=True, stats: Optional[dict], build_cache: bool,
+    cache_len: int,
+):
+    """Returns (x, stats, aux, cache_or_none)."""
+    st_mixer = {} if stats is not None else None
+    aux = jnp.zeros((), jnp.float32)
+    cache = None
+    h = layers.apply_norm(p["pre_norm"], x, kind=cfg.norm, eps=cfg.norm_eps)
+
+    if spec.kind == "attn":
+        a, kv = attention.full_seq_attention(
+            p["mixer"], h, cfg, spec, positions, causal=causal,
+            stats=st_mixer, return_kv=build_cache)
+        if build_cache:
+            cache = _ring_cache_from_kv(kv, positions, spec, cache_len)
+    elif spec.kind == "rwkv":
+        a, state = ssm.rwkv_time_mix(p["mixer"], h, cfg, stats=st_mixer)
+        if build_cache:
+            cache = state
+    else:  # mamba
+        a, state = ssm.mamba_apply(p["mixer"], h, cfg, stats=st_mixer)
+        if build_cache:
+            cache = state
+
+    if "post_mixer_norm" in p:
+        a = layers.apply_norm(p["post_mixer_norm"], a, kind=cfg.norm,
+                              eps=cfg.norm_eps)
+    x = x + a
+
+    st_cross = None
+    if "cross" in p:
+        hc = layers.apply_norm(p["cross_norm"], x, kind=cfg.norm,
+                               eps=cfg.norm_eps)
+        st_cross = {} if stats is not None else None
+        c, ckv = attention.full_seq_attention(
+            p["cross"], hc, cfg, spec, positions, kv_source=enc_out,
+            causal=False, stats=st_cross, return_kv=build_cache)
+        x = x + c
+        if build_cache:
+            cache = {"self": cache,
+                     "cross": {"k": ckv[0], "v": ckv[1]}}
+
+    st_mlp = {} if stats is not None else None
+    if spec.mlp != "none":
+        h2 = layers.apply_norm(p["mlp_norm"], x,
+                               kind="layernorm" if spec.mlp == "rwkv_cm"
+                               else cfg.norm, eps=cfg.norm_eps)
+        if spec.mlp == "dense":
+            f = layers.mlp(p["mlp"], h2, act=cfg.act, stats=st_mlp,
+                           name="mlp")
+            st_mlp = st_mlp["mlp"] if stats is not None else None
+        elif spec.mlp == "moe":
+            f, aux = moe.moe_apply(p["mlp"], h2, cfg, stats=st_mlp,
+                                   name="moe")
+            st_mlp = st_mlp["moe"] if stats is not None else None
+        else:  # rwkv channel mix
+            f, cm_last = ssm.rwkv_channel_mix(p["mlp"], h2, stats=st_mlp)
+            if build_cache and cache is not None:
+                cache = {**cache, "cm_x_last": cm_last}
+        if "post_mlp_norm" in p:
+            f = layers.apply_norm(p["post_mlp_norm"], f, kind=cfg.norm,
+                                  eps=cfg.norm_eps)
+        x = x + f
+
+    st = None
+    if stats is not None:
+        st = {"mixer": st_mixer, "mlp": st_mlp if st_mlp is not None else {}}
+        if st_cross is not None:
+            st["cross"] = st_cross
+    return x, st, aux, cache
+
+
+def _ring_cache_from_kv(kv, positions, spec: LayerSpec, cache_len: int):
+    """Arrange the last `cache_len` (k, v) rows into a ring-buffer cache whose
+    slot for absolute position p is p % cache_len."""
+    k, v = kv
+    b, s = k.shape[0], k.shape[1]
+    length = cache_len
+    take = min(s, length)
+    pos_tail = positions[0, s - take:]                   # (take,)
+    slots = pos_tail % length
+    ck = jnp.zeros((b, length) + k.shape[2:], k.dtype).at[:, slots].set(
+        k[:, s - take:])
+    cv = jnp.zeros((b, length) + v.shape[2:], v.dtype).at[:, slots].set(
+        v[:, s - take:])
+    slot_pos = jnp.full((length,), -1, jnp.int32).at[slots].set(pos_tail)
+    return {"k": ck, "v": cv, "slot_pos": slot_pos}
+
+
+# ======================================================================= #
+# Forward (train / prefill)
+# ======================================================================= #
+def _encoder_forward(params, cfg, enc_in, *, stats):
+    """enc_in: (B, T, d_model) projected frame embeddings."""
+    x = enc_in
+    positions = jnp.broadcast_to(
+        jnp.arange(x.shape[1], dtype=jnp.int32)[None], x.shape[:2])
+    spec = LayerSpec(kind="attn", window=None, mlp="dense")
+
+    def body(x, blk):
+        x, st, _, _ = _block_apply_full(
+            blk, x, cfg, spec, positions, causal=False, stats=stats and {},
+            build_cache=False, cache_len=0)
+        return x, st
+
+    blk = params["encoder"]["blocks"][0]
+    if cfg.scan_layers and cfg.encoder.n_layers > 1:
+        x, st = jax.lax.scan(body, x, blk)
+    else:
+        sts = []
+        for i in range(cfg.encoder.n_layers):
+            x, st_i = body(x, jax.tree.map(lambda t: t[i], blk))
+            sts.append(st_i)
+        st = _stack_trees(sts)
+    x = layers.apply_norm(params["encoder"]["final_norm"], x, kind=cfg.norm,
+                          eps=cfg.norm_eps)
+    if stats is not None:
+        stats["encoder"] = {"blocks": [st]}
+    return x
+
+
+def _stack_trees(trees):
+    if not trees or trees[0] is None:
+        return None
+    return jax.tree.map(lambda *xs: jnp.stack(xs, 0), *trees)
+
+
+def _embed_inputs(params, cfg, batch, *, stats):
+    """Token embeddings (+ multimodal prefix).  Returns (x, enc_out,
+    n_prefix)."""
+    x = layers.embed(params["embed"], batch["tokens"])
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    enc_out = None
+    n_prefix = 0
+    if cfg.frontend != "none" and "frontend_embeds" in batch:
+        fe = layers.dense(params["frontend_proj"], batch["frontend_embeds"],
+                          stats=stats, name="frontend_proj")
+        if cfg.is_encoder_decoder:
+            enc_out = _encoder_forward(params, cfg, fe, stats=stats)
+        else:
+            x = jnp.concatenate([fe.astype(x.dtype), x], axis=1)
+            n_prefix = fe.shape[1]
+    return x, enc_out, n_prefix
+
+
+def forward(params: Params, cfg: ModelConfig, batch: Dict, *,
+            collect_stats: bool = False, build_cache: bool = False,
+            cache_extra: int = 1):
+    """Full-sequence forward.
+
+    batch: {"tokens": (B, S) int32 [, "frontend_embeds": (B, F, fd)]}.
+    Returns (logits, aux) where aux = {"stats", "moe_aux", "cache"(opt)}.
+    """
+    stats: Optional[dict] = {} if collect_stats else None
+    x, enc_out, _ = _embed_inputs(params, cfg, batch, stats=stats)
+    x = rules.constrain_tokens(x)
+    b, s = x.shape[0], x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    total_len = s + cache_extra
+
+    def repeat_body(x, blk_list):
+        sts, caches = [], []
+        aux = jnp.zeros((), jnp.float32)
+        for pos, spec in enumerate(cfg.pattern):
+            x, st, a, cache = _block_apply_full(
+                blk_list[pos], x, cfg, spec, positions, enc_out=enc_out,
+                causal=cfg.causal, stats=stats,
+                build_cache=build_cache,
+                cache_len=attention.kv_cache_len(spec, total_len)
+                if spec.kind == "attn" else 0)
+            x = rules.constrain_tokens(x)
+            sts.append(st)
+            caches.append(cache)
+            aux = aux + a
+        return x, (sts, caches, aux)
+
+    body = repeat_body
+    if cfg.remat:
+        policy = {
+            "nothing": jax.checkpoint_policies.nothing_saveable,
+            "dots_no_batch":
+                jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+        }[cfg.remat_policy]
+        body = jax.checkpoint(repeat_body, policy=policy)
+
+    if cfg.scan_layers and cfg.n_repeats > 1:
+        x, (sts, caches, aux) = jax.lax.scan(body, x, tuple(params["blocks"]))
+        aux = jnp.sum(aux)
+    else:
+        sts_all, caches_all, aux = [], [], jnp.zeros((), jnp.float32)
+        for r in range(cfg.n_repeats):
+            blk = [jax.tree.map(lambda t: t[r], bp) for bp in params["blocks"]]
+            x, (st_r, cache_r, a) = body(x, tuple(blk))
+            sts_all.append(st_r)
+            caches_all.append(cache_r)
+            aux = aux + a
+        sts = _stack_trees(sts_all)
+        caches = _stack_trees(caches_all) if build_cache else None
+
+    if stats is not None and sts is not None:
+        stats["blocks"] = list(sts)
+
+    # gather the sequence-parallel residual stream before the vocab
+    # projection (logits are vocab-sharded over "model" instead)
+    x = rules.constrain(x, "batch")
+    x = layers.apply_norm(params["final_norm"], x, kind=cfg.norm,
+                          eps=cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = layers.unembed(params["embed"], x)
+    else:
+        logits = layers.dense(params["lm_head"], x, stats=stats,
+                              name="lm_head")
+    logits = layers.softcap(logits, cfg.logit_softcap)
+    logits = _mask_pad_logits(logits, cfg)
+    logits = rules.constrain(logits, "batch", None, "model")
+
+    aux_out: Dict[str, Any] = {"stats": stats or {}, "moe_aux": aux}
+    if build_cache:
+        aux_out["cache"] = {"blocks": list(caches), "pos": jnp.asarray(s, jnp.int32)}
+        if enc_out is not None:
+            aux_out["cache"]["enc_out"] = enc_out
+    return logits, aux_out
+
+
+# ======================================================================= #
+# Decode
+# ======================================================================= #
+def init_decode_cache(cfg: ModelConfig, batch: int, seq_len: int,
+                      dtype=None) -> Dict:
+    """Zero-initialised cache pytree sized for a `seq_len`-token context
+    (dry-run decode shapes use its eval_shape)."""
+    dt = dtype or jnp.dtype(cfg.dtype)
+    di = (cfg.mamba.expand * cfg.d_model) if cfg.mamba else 0
+    n = cfg.rwkv_head_dim
+    blocks = []
+    for spec in cfg.pattern:
+        if spec.kind == "attn":
+            # exactly seq_len ring slots (window-bounded for SWA layers) so
+            # the sequence dim stays divisible by the mesh data axis
+            c = attention.init_kv_cache(cfg, spec, batch, seq_len - 1, dt)
+        elif spec.kind == "rwkv":
+            c = {"wkv": jnp.zeros((batch, cfg.d_model // n, n, n), jnp.float32),
+                 "x_last": jnp.zeros((batch, cfg.d_model), dt),
+                 "cm_x_last": jnp.zeros((batch, cfg.d_model), dt)}
+        else:
+            c = {"h": jnp.zeros((batch, di, cfg.mamba.d_state), jnp.float32),
+                 "conv": jnp.zeros((batch, cfg.mamba.d_conv - 1, di), dt)}
+        if cfg.is_encoder_decoder:
+            enc_t = cfg.encoder.n_positions
+            c = {"self": c,
+                 "cross": {"k": jnp.zeros((batch, enc_t, cfg.n_kv_heads,
+                                           cfg.head_dim), dt),
+                           "v": jnp.zeros((batch, enc_t, cfg.n_kv_heads,
+                                           cfg.head_dim), dt)}}
+        blocks.append(jax.tree.map(
+            lambda t: jnp.broadcast_to(t[None], (cfg.n_repeats,) + t.shape), c))
+    cache: Dict[str, Any] = {"blocks": blocks,
+                             "pos": jnp.asarray(seq_len, jnp.int32)}
+    return cache
+
+
+def _block_decode(p, x, cfg, spec, pos, cache):
+    """One-token decode through one block.  Returns (x, new_cache)."""
+    cross_cache = None
+    self_cache = cache
+    if "cross" in p:
+        cross_cache = cache["cross"]
+        self_cache = cache["self"]
+
+    h = layers.apply_norm(p["pre_norm"], x, kind=cfg.norm, eps=cfg.norm_eps)
+    if spec.kind == "attn":
+        a, new_self = attention.decode_attention(p["mixer"], h, cfg, spec,
+                                                 pos, self_cache)
+    elif spec.kind == "rwkv":
+        a, st = ssm.rwkv_time_mix_decode(
+            p["mixer"], h, cfg,
+            {"wkv": self_cache["wkv"], "x_last": self_cache["x_last"]})
+        new_self = {**st, "cm_x_last": self_cache["cm_x_last"]}
+    else:
+        a, new_self = ssm.mamba_decode(p["mixer"], h, cfg, self_cache)
+    if "post_mixer_norm" in p:
+        a = layers.apply_norm(p["post_mixer_norm"], a, kind=cfg.norm,
+                              eps=cfg.norm_eps)
+    x = x + a
+
+    if "cross" in p:
+        hc = layers.apply_norm(p["cross_norm"], x, kind=cfg.norm,
+                               eps=cfg.norm_eps)
+        c, _ = attention.decode_attention(p["cross"], hc, cfg, spec, pos,
+                                          self_cache,
+                                          kv_source_cache=cross_cache)
+        x = x + c
+
+    if spec.mlp != "none":
+        h2 = layers.apply_norm(p["mlp_norm"], x,
+                               kind="layernorm" if spec.mlp == "rwkv_cm"
+                               else cfg.norm, eps=cfg.norm_eps)
+        if spec.mlp == "dense":
+            f = layers.mlp(p["mlp"], h2, act=cfg.act)
+        elif spec.mlp == "moe":
+            f, _ = moe.moe_apply(p["mlp"], h2, cfg)
+        else:
+            f, cm_last = ssm.rwkv_channel_mix(
+                p["mlp"], h2, x_prev=new_self["cm_x_last"][:, None])
+            new_self = {**new_self, "cm_x_last": cm_last}
+        if "post_mlp_norm" in p:
+            f = layers.apply_norm(p["post_mlp_norm"], f, kind=cfg.norm,
+                                  eps=cfg.norm_eps)
+        x = x + f
+
+    new_cache = new_self
+    if "cross" in p:
+        new_cache = {"self": new_self, "cross": cross_cache}
+    return x, new_cache
+
+
+def decode_step(params: Params, cfg: ModelConfig, tokens: jnp.ndarray,
+                cache: Dict) -> Tuple[jnp.ndarray, Dict]:
+    """Generate logits for one new token.  tokens: (B, 1)."""
+    x = layers.embed(params["embed"], tokens)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    pos = cache["pos"]
+
+    def repeat_body(x, pc):
+        blk_ps, blk_cs = pc                       # tuples over pattern pos
+        ncs = []
+        for bpos, spec in enumerate(cfg.pattern):
+            x, nc = _block_decode(blk_ps[bpos], x, cfg, spec, pos,
+                                  blk_cs[bpos])
+            ncs.append(nc)
+        return x, tuple(ncs)
+
+    xs = (tuple(params["blocks"]), tuple(cache["blocks"]))
+    if cfg.scan_layers and cfg.n_repeats > 1:
+        x, new_blocks = jax.lax.scan(repeat_body, x, xs)
+        new_blocks = list(new_blocks)
+    else:
+        ncs_all = []
+        for r in range(cfg.n_repeats):
+            x, ncs = repeat_body(x, jax.tree.map(lambda t: t[r], xs))
+            ncs_all.append(ncs)
+        new_blocks = list(_stack_trees(ncs_all))
+
+    x = layers.apply_norm(params["final_norm"], x, kind=cfg.norm,
+                          eps=cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = layers.unembed(params["embed"], x)
+    else:
+        logits = layers.dense(params["lm_head"], x)
+    logits = layers.softcap(logits, cfg.logit_softcap)
+    logits = _mask_pad_logits(logits, cfg)
+
+    new_cache = {**cache, "blocks": new_blocks, "pos": pos + 1}
+    return logits, new_cache

@@ -1,0 +1,275 @@
+"""Attention-free sequence mixers: RWKV-6 ("Finch") and Mamba (for Jamba).
+
+Both are implemented with a `lax.scan` over time for training/prefill and an
+O(1)-state single-step path for decode — this is what makes `long_500k`
+(524288-token decode) tractable for the ssm/hybrid architectures.
+
+RWKV-6 follows arXiv:2404.05892: token-shift with data-dependent ("ddlerp")
+mixing via a low-rank MLP, per-channel **data-dependent decay**
+``w_t = exp(-exp(w0 + tanh(x W1) W2))``, per-head wkv state (N x N), bonus
+``u``, group-norm, and a relu^2 channel-mix.
+
+Mamba follows the selective-SSM recurrence (used in Jamba, arXiv:2403.19887):
+in-proj -> causal depthwise conv -> data-dependent (dt, B, C) -> discretised
+scan -> gated out-proj.
+
+The square projection matrices (r/k/v/g/o, channel-mix, in/out/x/dt proj)
+are ordinary dense layers and therefore receive MKOR second-order
+preconditioning; the recurrence parameters (decay vectors, A, conv) are
+non-matmul parameters and pass through first-order (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.models.config import ModelConfig
+
+# ----------------------------------------------------------------------- #
+# RWKV-6
+# ----------------------------------------------------------------------- #
+RWKV_LORA_MIX = 32
+RWKV_LORA_DECAY = 64
+
+
+def rwkv_init(key, cfg: ModelConfig, *, dtype) -> Dict:
+    d = cfg.d_model
+    n = cfg.rwkv_head_dim
+    h = d // n
+    ks = jax.random.split(key, 12)
+    u = lambda k, shape, s=1e-2: jax.random.uniform(k, shape, jnp.float32,
+                                                    -s, s)
+    return {
+        "maa_x": u(ks[0], (d,)),
+        "maa": u(ks[1], (5, d)),                       # w,k,v,r,g base mixes
+        "maa_w1": u(ks[2], (d, 5 * RWKV_LORA_MIX)),
+        "maa_w2": u(ks[3], (5, RWKV_LORA_MIX, d)),
+        "decay_w0": jnp.zeros((d,), jnp.float32) - 6.0,
+        "decay_w1": u(ks[4], (d, RWKV_LORA_DECAY)),
+        "decay_w2": u(ks[5], (RWKV_LORA_DECAY, d)),
+        "bonus": u(ks[6], (h, n)),                     # time_faaaa
+        "r": layers.dense_init(ks[7], d, d, dtype=dtype),
+        "k": layers.dense_init(ks[8], d, d, dtype=dtype),
+        "v": layers.dense_init(ks[9], d, d, dtype=dtype),
+        "g": layers.dense_init(ks[10], d, d, dtype=dtype),
+        "o": layers.dense_init(ks[11], d, d, dtype=dtype,
+                               scale=1.0 / math.sqrt(d)),
+        "ln_x_scale": jnp.ones((n,), jnp.float32),
+        "ln_x_bias": jnp.zeros((n,), jnp.float32),
+    }
+
+
+def rwkv_cm_init(key, cfg: ModelConfig, *, dtype) -> Dict:
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 4)
+    return {
+        "maa_k": jax.random.uniform(ks[0], (d,), jnp.float32, -1e-2, 1e-2),
+        "maa_r": jax.random.uniform(ks[1], (d,), jnp.float32, -1e-2, 1e-2),
+        "key": layers.dense_init(ks[2], d, f, dtype=dtype),
+        "value": layers.dense_init(ks[3], f, d, dtype=dtype,
+                                   scale=1.0 / math.sqrt(f)),
+        "recept": layers.dense_init(jax.random.fold_in(key, 9), d, d,
+                                    dtype=dtype),
+    }
+
+
+def _rwkv_projections(p, x, x_prev, cfg, stats):
+    """Data-dependent token-shift mixing + r/k/v/g/w projections.
+
+    x, x_prev: (B, S, d). Returns r,k,v,g heads (B,S,H,N) and decay w.
+    """
+    d = cfg.d_model
+    n = cfg.rwkv_head_dim
+    h = d // n
+    xx = x_prev - x
+    xxx = x + xx * p["maa_x"]
+    router = jnp.tanh(xxx.astype(jnp.float32) @ p["maa_w1"])
+    router = router.reshape(*x.shape[:-1], 5, RWKV_LORA_MIX)
+    mix = jnp.einsum("...fi,fid->...fd", router, p["maa_w2"])
+    mix = mix + p["maa"]                               # (...,5,d)
+    xw, xk, xv, xr, xg = [
+        (x + xx * mix[..., i, :].astype(x.dtype)) for i in range(5)
+    ]
+    r = layers.dense(p["r"], xr, stats=stats, name="r")
+    k = layers.dense(p["k"], xk, stats=stats, name="k")
+    v = layers.dense(p["v"], xv, stats=stats, name="v")
+    g = jax.nn.silu(layers.dense(p["g"], xg, stats=stats, name="g"))
+    dec = p["decay_w0"] + jnp.tanh(xw.astype(jnp.float32) @ p["decay_w1"]) \
+        @ p["decay_w2"]
+    w = jnp.exp(-jnp.exp(dec))                         # (B,S,d) in (0,1)
+    hd = lambda t: t.reshape(*t.shape[:-1], h, n)
+    return hd(r), hd(k), hd(v), g, hd(w)
+
+
+def _wkv_step(state, rkvw, bonus):
+    """state (B,H,N,N); r,k,v,w (B,H,N). y_j = sum_i r_i (S_ij + u_i k_i v_j)."""
+    r, k, v, w = rkvw
+    kv = jnp.einsum("bhi,bhj->bhij", k, v)
+    y = jnp.einsum("bhi,bhij->bhj", r, state + bonus[..., None] * kv)
+    state = state * w[..., None] + kv
+    return state, y
+
+
+def rwkv_time_mix(p, x, cfg, *, state=None, x_prev=None,
+                  stats: Optional[dict] = None) -> Tuple[jnp.ndarray, Dict]:
+    """Full-sequence RWKV-6 time mixing.  Returns (y, final_state_dict)."""
+    b, s, d = x.shape
+    n = cfg.rwkv_head_dim
+    h = d // n
+    if x_prev is None:
+        x_prev = jnp.concatenate([jnp.zeros_like(x[:, :1]), x[:, :-1]], axis=1)
+    r, k, v, g, w = _rwkv_projections(p, x, x_prev, cfg, stats)
+    if state is None:
+        state = jnp.zeros((b, h, n, n), jnp.float32)
+
+    def step(carry, t):
+        return _wkv_step(carry, t, p["bonus"])
+
+    seq = (r.astype(jnp.float32).transpose(1, 0, 2, 3),
+           k.astype(jnp.float32).transpose(1, 0, 2, 3),
+           v.astype(jnp.float32).transpose(1, 0, 2, 3),
+           w.astype(jnp.float32).reshape(b, s, h, n).transpose(1, 0, 2, 3))
+    state, ys = jax.lax.scan(step, state, seq)         # ys: (S,B,H,N)
+    y = ys.transpose(1, 0, 2, 3)                       # (B,S,H,N)
+    y = layers.group_norm(y, p["ln_x_scale"], p["ln_x_bias"])
+    y = y.reshape(b, s, d).astype(x.dtype) * g
+    out = layers.dense(p["o"], y, stats=stats, name="o")
+    return out, {"wkv": state, "x_last": x[:, -1]}
+
+
+def rwkv_time_mix_decode(p, x, cfg, cache: Dict) -> Tuple[jnp.ndarray, Dict]:
+    """One-token decode. x: (B,1,d); cache: {"wkv": (B,H,N,N), "x_last": (B,d)}."""
+    b, _, d = x.shape
+    n = cfg.rwkv_head_dim
+    h = d // n
+    x_prev = cache["x_last"][:, None, :]
+    r, k, v, g, w = _rwkv_projections(p, x, x_prev, cfg, None)
+    sq = lambda t: t[:, 0].astype(jnp.float32)
+    state, y = _wkv_step(cache["wkv"],
+                         (sq(r), sq(k), sq(v),
+                          sq(w.reshape(b, 1, h, n))), p["bonus"])
+    y = layers.group_norm(y[:, None], p["ln_x_scale"], p["ln_x_bias"])
+    y = y.reshape(b, 1, d).astype(x.dtype) * g
+    out = layers.dense(p["o"], y)
+    return out, {"wkv": state, "x_last": x[:, 0]}
+
+
+def rwkv_channel_mix(p, x, *, x_prev=None, stats: Optional[dict] = None
+                     ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """relu^2 channel mix with token shift. Returns (y, x_last)."""
+    if x_prev is None:
+        x_prev = jnp.concatenate([jnp.zeros_like(x[:, :1]), x[:, :-1]], axis=1)
+    xx = x_prev - x
+    xk = x + xx * p["maa_k"].astype(x.dtype)
+    xr = x + xx * p["maa_r"].astype(x.dtype)
+    kk = layers.activation(layers.dense(p["key"], xk, stats=stats,
+                                        name="key"), "relu2")
+    kv = layers.dense(p["value"], kk, stats=stats, name="value")
+    rr = jax.nn.sigmoid(layers.dense(p["recept"], xr, stats=stats,
+                                     name="recept"))
+    return rr * kv, x[:, -1]
+
+
+# ----------------------------------------------------------------------- #
+# Mamba (selective SSM)
+# ----------------------------------------------------------------------- #
+def mamba_init(key, cfg: ModelConfig, *, dtype) -> Dict:
+    mc = cfg.mamba
+    d = cfg.d_model
+    di = mc.expand * d
+    dt_rank = mc.dt_rank or -(-d // 16)
+    ks = jax.random.split(key, 5)
+    a = jnp.broadcast_to(jnp.arange(1, mc.d_state + 1, dtype=jnp.float32),
+                         (di, mc.d_state))
+    return {
+        "in": layers.dense_init(ks[0], d, 2 * di, dtype=dtype),
+        "conv_w": jax.random.normal(ks[1], (mc.d_conv, di), jnp.float32)
+        * (1.0 / math.sqrt(mc.d_conv)),
+        "conv_b": jnp.zeros((di,), jnp.float32),
+        "x_proj": layers.dense_init(ks[2], di, dt_rank + 2 * mc.d_state,
+                                    dtype=dtype),
+        "dt": layers.dense_init(ks[3], dt_rank, di, dtype=dtype, bias=True),
+        "A_log": jnp.log(a),
+        "D": jnp.ones((di,), jnp.float32),
+        "out": layers.dense_init(ks[4], di, d, dtype=dtype,
+                                 scale=1.0 / math.sqrt(di)),
+    }
+
+
+def _mamba_ssm_inputs(p, xc, z, cfg, stats):
+    """Common data-dependent SSM parameters.  xc: post-conv (B,S,di)."""
+    mc = cfg.mamba
+    dt_rank = mc.dt_rank or -(-cfg.d_model // 16)
+    xdb = layers.dense(p["x_proj"], xc, stats=stats, name="x_proj")
+    dt, bmat, cmat = jnp.split(
+        xdb, [dt_rank, dt_rank + mc.d_state], axis=-1)
+    dt = jax.nn.softplus(layers.dense(p["dt"], dt, stats=stats,
+                                      name="dt").astype(jnp.float32))
+    a = -jnp.exp(p["A_log"])                            # (di, n)
+    da = jnp.exp(dt[..., None] * a)                     # (B,S,di,n)
+    dbx = (dt * xc.astype(jnp.float32))[..., None] \
+        * bmat.astype(jnp.float32)[..., None, :]        # (B,S,di,n)
+    return da, dbx, cmat.astype(jnp.float32)
+
+
+def _causal_conv(p, x, cfg, *, buf=None):
+    """Depthwise causal conv over (B,S,di). buf: (B, d_conv-1, di) history."""
+    mc = cfg.mamba
+    if buf is None:
+        pad = jnp.zeros((x.shape[0], mc.d_conv - 1, x.shape[-1]), x.dtype)
+    else:
+        pad = buf.astype(x.dtype)
+    xe = jnp.concatenate([pad, x], axis=1)
+    out = sum(
+        xe[:, i:i + x.shape[1]] * p["conv_w"][i].astype(x.dtype)
+        for i in range(mc.d_conv)
+    ) + p["conv_b"].astype(x.dtype)
+    new_buf = xe[:, -(mc.d_conv - 1):] if mc.d_conv > 1 else pad
+    return jax.nn.silu(out), new_buf
+
+
+def mamba_apply(p, x, cfg, *, stats: Optional[dict] = None
+                ) -> Tuple[jnp.ndarray, Dict]:
+    """Full-sequence selective scan.  Returns (y, final_cache)."""
+    mc = cfg.mamba
+    b, s, _ = x.shape
+    di = mc.expand * cfg.d_model
+    xz = layers.dense(p["in"], x, stats=stats, name="in")
+    x1, z = jnp.split(xz, 2, axis=-1)
+    xc, conv_buf = _causal_conv(p, x1, cfg)
+    da, dbx, cmat = _mamba_ssm_inputs(p, xc, z, cfg, stats)
+
+    def step(h, t):
+        da_t, dbx_t, c_t = t
+        h = da_t * h + dbx_t                            # (B,di,n)
+        y = jnp.einsum("bdn,bn->bd", h, c_t)
+        return h, y
+
+    h0 = jnp.zeros((b, di, mc.d_state), jnp.float32)
+    hT, ys = jax.lax.scan(
+        step, h0,
+        (da.transpose(1, 0, 2, 3), dbx.transpose(1, 0, 2, 3),
+         cmat.transpose(1, 0, 2)))
+    y = ys.transpose(1, 0, 2)                           # (B,S,di)
+    y = y + p["D"] * xc.astype(jnp.float32)
+    y = (y.astype(x.dtype)) * jax.nn.silu(z)
+    out = layers.dense(p["out"], y, stats=stats, name="out")
+    return out, {"h": hT, "conv": conv_buf}
+
+
+def mamba_decode(p, x, cfg, cache: Dict) -> Tuple[jnp.ndarray, Dict]:
+    """One-token step. cache: {"h": (B,di,n), "conv": (B,d_conv-1,di)}."""
+    xz = layers.dense(p["in"], x)
+    x1, z = jnp.split(xz, 2, axis=-1)
+    xc, conv_buf = _causal_conv(p, x1, cfg, buf=cache["conv"])
+    da, dbx, cmat = _mamba_ssm_inputs(p, xc, z, cfg, None)
+    h = da[:, 0] * cache["h"] + dbx[:, 0]
+    y = jnp.einsum("bdn,bn->bd", h, cmat[:, 0])[:, None]
+    y = y + p["D"] * xc.astype(jnp.float32)
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    out = layers.dense(p["out"], y)
+    return out, {"h": h, "conv": conv_buf}

@@ -1,0 +1,8 @@
+from repro.sharding.rules import (  # noqa: F401
+    MeshAxes,
+    batch_specs,
+    cache_specs,
+    opt_state_specs,
+    param_specs,
+    spec_for,
+)

@@ -1,0 +1,296 @@
+"""Sharding rules: path-based PartitionSpecs over ("pod","data","model").
+
+Strategy (DESIGN.md §6):
+* **2-D weight sharding (FSDP x TP)** for every large matrix: last dim over
+  "model" (tensor parallel), second-to-last over "data" (fully-sharded /
+  ZeRO-3 style — GSPMD inserts the per-layer all-gathers).  This is what
+  makes mixtral-8x22b (~141B params) + LAMB moments + MKOR factors fit
+  16 GB/chip HBM.
+* Row-parallel layers ("o", "out", "value") flip which logical dim carries
+  "model" so the TP contraction dim matches the producing layer.
+* **MKOR factors are sharded, not replicated** (beyond-paper; the SM update
+  is matvec+outer so it shards along factor rows at zero extra collectives
+  for the replicated rank-1 vectors).
+* Rules are expressed axis-from-the-END so the same rule covers unstacked,
+  scan-stacked (L, ...) and expert-stacked (L, E, ...) leaves.
+* Everything small (norms, probes of row-parallel layers, RWKV loras,
+  Mamba A/conv, routers) stays replicated.
+
+Uneven dims (e.g. vocab 122753, 40 RWKV heads) are left unsharded on that
+dim rather than relying on padding-sharding.
+"""
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+from dataclasses import dataclass
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import stats as statlib
+
+# parents whose dense "w" is row-parallel (contract over the sharded dim)
+ROW_PARALLEL = {"o", "out", "value"}
+# parents never factor/TP-sharded (tiny or irregular)
+REPLICATED_PARENTS = {"router"}
+MIN_SHARD_DIM = 1024          # don't bother sharding smaller dims
+
+
+@dataclass(frozen=True)
+class MeshAxes:
+    data: Tuple[str, ...] = ("data",)       # ("pod","data") for multi-pod
+    model: str = "model"
+
+    @property
+    def batch(self):
+        return self.data if len(self.data) > 1 else self.data[0]
+
+    def data_size(self, mesh: Mesh) -> int:
+        return int(np.prod([mesh.shape[a] for a in self.data]))
+
+    def model_size(self, mesh: Mesh) -> int:
+        return int(mesh.shape[self.model])
+
+
+def _divisible(dim: int, n: int) -> bool:
+    return n > 0 and dim % n == 0
+
+
+def _fsdp_axis(axes: MeshAxes) -> str:
+    # FSDP over the within-pod data axis only (weights replicated across
+    # pods; the pod axis carries pure data parallelism + gradient reduce)
+    return axes.data[-1]
+
+
+def spec_for(path: Sequence[Any], shape: Tuple[int, ...], mesh: Mesh,
+             axes: MeshAxes) -> P:
+    """PartitionSpec for one leaf, by path + shape."""
+    parts = [str(p) for p in path]
+    leaf = parts[-1] if parts else ""
+    parent = parts[-2] if len(parts) >= 2 else ""
+    nd = len(shape)
+    spec = [None] * nd
+    msize = axes.model_size(mesh)
+    fsdp = _fsdp_axis(axes)
+    fsize = int(mesh.shape[fsdp])
+
+    def set_from_end(idx_from_end: int, axis_name: str, size: int):
+        i = nd - idx_from_end
+        if 0 <= i < nd and _divisible(shape[i], size) \
+                and shape[i] >= MIN_SHARD_DIM and spec[i] is None:
+            spec[i] = axis_name
+
+    if leaf == "table" and parent == "embed":           # (V_pad, D)
+        # vocab 2D-sharded (model x fsdp): the unembed contraction stays
+        # local (logits come out vocab-sharded over "model"), the fsdp
+        # factor is an FSDP all-gather of ~tens of MB per step.  The vocab
+        # dim is padded to a shardable multiple (config.padded_vocab).
+        i = nd - 2
+        if _divisible(shape[i], msize * fsize):
+            spec[i] = (axes.model, fsdp)
+        elif _divisible(shape[i], msize):
+            spec[i] = axes.model
+        return P(*spec)
+
+    if parent in REPLICATED_PARENTS:
+        return P()
+
+    if leaf == "w" and parent == "lm_head" and nd >= 2:  # (D, V_pad)
+        i = nd - 1
+        if _divisible(shape[i], msize * fsize):
+            spec[i] = (axes.model, fsdp)
+        elif _divisible(shape[i], msize):
+            spec[i] = axes.model
+        return P(*spec)
+
+    if leaf == "w" and nd >= 2:
+        if parent in ROW_PARALLEL:
+            set_from_end(2, axes.model, msize)          # d_in = TP contract
+            set_from_end(1, fsdp, fsize)                # FSDP on d_out
+        else:
+            set_from_end(1, axes.model, msize)          # d_out = TP
+            set_from_end(2, fsdp, fsize)                # FSDP on d_in
+        return P(*spec)
+
+    if leaf in ("probe", "b"):
+        if parent not in ROW_PARALLEL:
+            set_from_end(1, axes.model, msize)
+        return P(*spec)
+
+    if leaf in ("l_inv", "r_inv", "l_cov", "r_cov") and nd >= 2:
+        set_from_end(2, axes.model, msize)              # factor rows over TP
+        set_from_end(1, fsdp, fsize)                    # cols over FSDP
+        return P(*spec)
+
+    if leaf in ("conv_w", "conv_b", "D"):               # mamba channel dims
+        set_from_end(1, axes.model, msize)
+        return P(*spec)
+    if leaf == "A_log":                                 # (di, n)
+        set_from_end(2, axes.model, msize)
+        return P(*spec)
+
+    return P()
+
+
+def _tree_specs(tree, mesh: Mesh, axes: MeshAxes):
+    def walk(node, path):
+        if isinstance(node, dict):
+            return {k: walk(v, path + (k,)) for k, v in node.items()}
+        if isinstance(node, list):
+            return [walk(v, path + (i,)) for i, v in enumerate(node)]
+        if isinstance(node, tuple):
+            return tuple(walk(v, path + (i,)) for i, v in enumerate(node))
+        if node is None:
+            return None
+        return spec_for(path, node.shape, mesh, axes)
+
+    return walk(tree, ())
+
+
+def param_specs(params, mesh: Mesh, axes: MeshAxes):
+    return _tree_specs(params, mesh, axes)
+
+
+def opt_state_specs(opt_state, mesh: Mesh, axes: MeshAxes):
+    """Optimizer state: factor dicts + backend moments reuse the same
+    path-suffix rules (m/v trees mirror the params tree paths)."""
+    return _tree_specs(opt_state, mesh, axes)
+
+
+def batch_specs(batch_shapes, mesh: Mesh, axes: MeshAxes):
+    """Shard the batch dim over ("pod","data") when divisible."""
+    dsize = axes.data_size(mesh)
+
+    def one(path, sds):
+        if sds.shape and _divisible(sds.shape[0], dsize) and sds.shape[0] > 1:
+            return P(axes.batch, *([None] * (len(sds.shape) - 1)))
+        return P(*([None] * len(sds.shape)))
+
+    return jax.tree_util.tree_map_with_path(one, batch_shapes)
+
+
+def cache_specs(cache_shapes, mesh: Mesh, axes: MeshAxes):
+    """Decode caches.  Attn KV (R, B, L, Hk, Dh): batch over data when it
+    fills the axis, otherwise the *sequence* dim over data (flash-decoding
+    style sequence parallelism for long_500k's batch=1)."""
+    dsize = axes.data_size(mesh)
+    msize = axes.model_size(mesh)
+
+    def one(path, sds):
+        parts = [str(getattr(p, "key", getattr(p, "idx", p))) for p in path]
+        leaf = parts[-1] if parts else ""
+        shape = sds.shape
+        nd = len(shape)
+        spec = [None] * nd
+        if leaf in ("k", "v") and nd >= 4:
+            b_ax, s_ax = nd - 4, nd - 3
+            if _divisible(shape[b_ax], dsize) and shape[b_ax] > 1:
+                spec[b_ax] = axes.batch
+                # flash-decoding: split the context over the model axis;
+                # softmax partials are combined by GSPMD all-reduces
+                if _divisible(shape[s_ax], msize):
+                    spec[s_ax] = axes.model
+            elif _divisible(shape[s_ax], dsize * msize):
+                spec[s_ax] = (axes.batch, axes.model) \
+                    if len(axes.data) == 1 else (*axes.data, axes.model)
+            elif _divisible(shape[s_ax], dsize):
+                spec[s_ax] = axes.batch
+        elif leaf == "wkv" and nd >= 4:
+            if _divisible(shape[nd - 4], dsize) and shape[nd - 4] > 1:
+                spec[nd - 4] = axes.batch
+        elif leaf == "h" and nd >= 3:
+            if _divisible(shape[nd - 3], dsize) and shape[nd - 3] > 1:
+                spec[nd - 3] = axes.batch
+            if _divisible(shape[nd - 2], msize) \
+                    and shape[nd - 2] >= MIN_SHARD_DIM:
+                spec[nd - 2] = axes.model
+        elif leaf == "conv" and nd >= 3:
+            if _divisible(shape[nd - 3], dsize) and shape[nd - 3] > 1:
+                spec[nd - 3] = axes.batch
+            if _divisible(shape[nd - 1], msize) \
+                    and shape[nd - 1] >= MIN_SHARD_DIM:
+                spec[nd - 1] = axes.model
+        elif leaf in ("x_last", "cm_x_last") and nd >= 2:
+            if _divisible(shape[nd - 2], dsize) and shape[nd - 2] > 1:
+                spec[nd - 2] = axes.batch
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(one, cache_shapes)
+
+
+# ----------------------------------------------------------------------- #
+# Activation sharding constraints
+#
+# Input/output shardings alone are not enough: inside a scanned block GSPMD
+# is free to re-layout activations, and on big models it picks token-
+# replicated feature-sharded layouts that blow up per-chip attention memory
+# (observed on the 16x16 dry-run: full 256x4096 token activations and
+# B x H x S x S score tensors per chip).  The model code therefore pins the
+# token dim of every residual-stream tensor to the data axes via
+# ``with_sharding_constraint`` — enabled only when a mesh context is active
+# (dry-run / production), a no-op in single-device tests.
+# ----------------------------------------------------------------------- #
+_ACT_CTX = threading.local()
+
+
+@contextmanager
+def activation_sharding(mesh: Mesh, axes: MeshAxes):
+    prev = getattr(_ACT_CTX, "v", None)
+    _ACT_CTX.v = (mesh, axes)
+    try:
+        yield
+    finally:
+        _ACT_CTX.v = prev
+
+
+def constrain(x, *dim_kinds: Optional[str]):
+    """Constrain an activation: one kind per dim — "batch" | "model" | None.
+    Dims that don't divide their axis are left unconstrained."""
+    ctx = getattr(_ACT_CTX, "v", None)
+    if ctx is None or x is None:
+        return x
+    mesh, axes = ctx
+    spec = [None] * x.ndim
+    for d, kind in enumerate(dim_kinds[:x.ndim]):
+        if kind == "batch" and _divisible(x.shape[d], axes.data_size(mesh)) \
+                and x.shape[d] > 1:
+            spec[d] = axes.batch
+        elif kind == "model" \
+                and _divisible(x.shape[d], axes.model_size(mesh)) \
+                and x.shape[d] > 1:
+            spec[d] = axes.model
+    if all(s is None for s in spec):
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*spec)))
+
+
+def constrain_tokens(x):
+    """Residual-stream tensor (B, S, D) between blocks: batch over the data
+    axes AND sequence over the model axis (Megatron-style sequence
+    parallelism) — norms/residual adds run on S/model tokens per chip, the
+    row-parallel all-reduce becomes a cheaper reduce-scatter, and the
+    column-parallel input all-gather moves bf16 activations instead of
+    reducing fp32 cotangents."""
+    return constrain(x, "batch", "model")
+
+
+def named(tree_specs, mesh: Mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s) if s is not None else None,
+        tree_specs,
+        is_leaf=lambda x: isinstance(x, P) or x is None)
+
+
+def with_sharding(shapes, specs, mesh: Mesh):
+    """Attach NamedShardings onto a ShapeDtypeStruct tree."""
+    def one(sds, spec):
+        if spec is None:
+            return sds
+        return jax.ShapeDtypeStruct(sds.shape, sds.dtype,
+                                    sharding=NamedSharding(mesh, spec))
+    return jax.tree.map(one, shapes, specs,
+                        is_leaf=lambda x: isinstance(x, (P,)) or x is None)

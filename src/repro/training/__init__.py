@@ -1,0 +1,10 @@
+from repro.training.loop import (  # noqa: F401
+    lm_loss,
+    make_loss_fn,
+    make_train_step,
+    train_batch_shapes,
+)
+from repro.training.serving import (  # noqa: F401
+    make_prefill_step,
+    make_serve_step,
+)

@@ -1,0 +1,61 @@
+"""Serving: prefill and single-token decode steps (inference shapes).
+
+* ``prefill``: full forward over the prompt building the KV / recurrent
+  caches (``prefill_32k``).
+* ``serve_step``: one new token against an existing cache
+  (``decode_32k``, ``long_500k``).  Sliding-window layers keep ring-buffer
+  caches bounded by the window; SSM layers carry O(1) state — the
+  sub-quadratic story for the 524288-token shape (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as model_lib
+from repro.models.config import ModelConfig
+
+
+def make_prefill_step(cfg: ModelConfig, *, cache_extra: int = 1) -> Callable:
+    def prefill(params, batch):
+        logits, aux = model_lib.forward(params, cfg, batch,
+                                        collect_stats=False,
+                                        build_cache=True,
+                                        cache_extra=cache_extra)
+        return logits[:, -1:], aux["cache"]
+    return prefill
+
+
+def make_serve_step(cfg: ModelConfig, *, greedy: bool = True) -> Callable:
+    def serve_step(params, cache, tokens):
+        """tokens: (B, 1) — the most recent token.  Returns
+        (next_token (B, 1), logits (B, 1, V), new_cache)."""
+        logits, cache = model_lib.decode_step(params, cfg, tokens, cache)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return nxt, logits, cache
+    return serve_step
+
+
+def decode_batch_shapes(cfg: ModelConfig, batch: int, seq_len: int):
+    """(tokens, cache) ShapeDtypeStructs for the decode dry-run shapes."""
+    tokens = jax.ShapeDtypeStruct((batch, 1), jnp.int32)
+    cache = jax.eval_shape(
+        lambda: model_lib.init_decode_cache(cfg, batch, seq_len))
+    return tokens, cache
+
+
+def generate(params, cfg: ModelConfig, prompt: jnp.ndarray, n_tokens: int,
+             *, cache_extra: int = None) -> jnp.ndarray:
+    """Greedy generation used by the serving example and tests."""
+    prefill = make_prefill_step(
+        cfg, cache_extra=n_tokens if cache_extra is None else cache_extra)
+    step = jax.jit(make_serve_step(cfg))
+    logits, cache = prefill(params, {"tokens": prompt})
+    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    outs = [tok]
+    for _ in range(n_tokens - 1):
+        tok, _, cache = step(params, cache, tok)
+        outs.append(tok)
+    return jnp.concatenate(outs, axis=1)

@@ -1,0 +1,16 @@
+import jax
+import numpy as np
+import pytest
+
+# Tests run on the single real CPU device (the 512-device override is for
+# launch/dryrun.py ONLY — see the system design).  Use fp64-free defaults.
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+def pytest_configure(config):
+    config.addinivalue_line("markers", "slow: long-running integration test")

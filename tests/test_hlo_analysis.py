@@ -1,0 +1,89 @@
+"""HLO analyzer: real lowered modules with known costs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch import hlo_analysis as H
+
+
+def _analyze(fn, *args):
+    compiled = jax.jit(fn).lower(*args).compile()
+    return H.analyze(compiled.as_text())
+
+
+def test_single_matmul_flops():
+    m, k, n = 64, 128, 32
+    a = jnp.ones((m, k))
+    b = jnp.ones((k, n))
+    got = _analyze(lambda a, b: a @ b, a, b)
+    assert got["dot_flops"] == pytest.approx(2 * m * k * n, rel=0.01)
+
+
+def test_scan_trip_count_scaling():
+    d, reps = 32, 13
+
+    def f(w, x):
+        def body(x, w_i):
+            return jnp.tanh(x @ w_i), None
+        return jax.lax.scan(body, x, w)[0]
+
+    w = jnp.ones((reps, d, d))
+    x = jnp.ones((4, d))
+    got = _analyze(f, w, x)
+    assert got["dot_flops"] == pytest.approx(2 * 4 * d * d * reps, rel=0.01)
+
+
+def test_nested_scan_scaling():
+    d, outer, inner = 8, 3, 5
+
+    def f(w, x):
+        def obody(x, w_i):
+            def ibody(x, _):
+                return x @ w_i, None
+            return jax.lax.scan(ibody, x, None, length=inner)[0], None
+        return jax.lax.scan(obody, x, w)[0]
+
+    got = _analyze(f, jnp.ones((outer, d, d)), jnp.ones((2, d)))
+    assert got["dot_flops"] == pytest.approx(2 * 2 * d * d * outer * inner,
+                                             rel=0.01)
+
+
+def test_bytes_include_weights():
+    d = 128
+    got = _analyze(lambda a, b: a @ b, jnp.ones((d, d)), jnp.ones((d, d)))
+    # at least operands+result of the dot
+    assert got["bytes"] >= 3 * d * d * 4
+
+
+def test_roofline_dominant_term():
+    r = H.roofline(flops=1e15, bytes_accessed=1e9, coll_bytes=1e9)
+    assert r["dominant"] == "compute"
+    r = H.roofline(flops=1e9, bytes_accessed=1e13, coll_bytes=1e9)
+    assert r["dominant"] == "memory"
+    r = H.roofline(flops=1e9, bytes_accessed=1e9, coll_bytes=1e13)
+    assert r["dominant"] == "collective"
+
+
+def test_link_bytes_formulas():
+    hc = H.HloCost("ENTRY %e () -> f32[] {\n}\n")
+    rest = "replica_groups=[4,8]<=[32]"
+    assert hc._group_size(rest) == 8
+    assert hc._link_bytes("all-reduce", 100.0, rest) \
+        == pytest.approx(2 * 7 / 8 * 100)
+    assert hc._link_bytes("all-gather", 100.0, rest) == pytest.approx(700)
+    assert hc._link_bytes("reduce-scatter", 100.0, rest) \
+        == pytest.approx(7 / 8 * 100)
+    assert hc._link_bytes("collective-permute", 100.0, rest) == 100.0
+
+
+def test_shape_parsing():
+    assert H.shape_bytes("f32[16,4096,2304]{2,1,0}") == 16 * 4096 * 2304 * 4
+    assert H.shape_bytes("(s32[], f32[8]{0})") == 4 + 32
+    assert H.shape_dims("bf16[2,3,4]") == [2, 3, 4]
+    assert H.shape_elems("pred[]") == 1 or H.shape_elems("pred[]") == 0
+
+
+def test_model_flops_helper():
+    assert H.model_flops_per_step(1000, 10, "train") == 60000
+    assert H.model_flops_per_step(1000, 10, "infer") == 20000

@@ -1,0 +1,114 @@
+"""First-order backends + LR schedules: closed-form sanity checks."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import firstorder as fo
+from repro.core import schedule as sched
+
+
+def _one_param(val=1.0):
+    return {"w": jnp.full((3, 2), val, jnp.float32)}
+
+
+def test_sgd_matches_closed_form():
+    opt = fo.sgd(0.1)
+    p = _one_param()
+    s = opt.init(p)
+    g = {"w": jnp.ones((3, 2))}
+    upd, s = opt.update(g, s, params=p)
+    np.testing.assert_allclose(upd["w"], -0.1 * np.ones((3, 2)), rtol=1e-6)
+
+
+def test_sgd_momentum_accumulates():
+    opt = fo.sgd(1.0, momentum=0.5)
+    p = _one_param()
+    s = opt.init(p)
+    g = {"w": jnp.ones((3, 2))}
+    upd1, s = opt.update(g, s, params=p)
+    upd2, s = opt.update(g, s, params=p)
+    np.testing.assert_allclose(upd1["w"], -1.0 * np.ones((3, 2)))
+    np.testing.assert_allclose(upd2["w"], -1.5 * np.ones((3, 2)))
+
+
+def test_adam_first_step_is_lr_signed():
+    opt = fo.adam(0.01, eps=0.0)
+    p = _one_param()
+    s = opt.init(p)
+    g = {"w": 3.0 * jnp.ones((3, 2))}
+    upd, s = opt.update(g, s, params=p)
+    # bias-corrected m/sqrt(v) == sign(g) on step 1
+    np.testing.assert_allclose(upd["w"], -0.01 * np.ones((3, 2)), rtol=1e-5)
+
+
+def test_lamb_trust_ratio_scales_update():
+    opt = fo.lamb(0.1, weight_decay=0.0, eps=0.0)
+    p = {"w": 2.0 * jnp.ones((4, 4)) / 4.0}     # ||p|| = 2
+    s = opt.init(p)
+    g = {"w": jnp.ones((4, 4))}
+    upd, _ = opt.update(g, s, params=p)
+    # r == sign(g) matrix, ||r|| = 4, trust = ||p||/||r|| = 0.5
+    np.testing.assert_allclose(upd["w"], -0.1 * 0.5 * np.ones((4, 4)),
+                               rtol=1e-5)
+
+
+def test_clip_by_global_norm():
+    opt = fo.clip_by_global_norm(1.0)
+    g = {"w": 3.0 * jnp.ones((4,)), "b": 4.0 * jnp.ones((4,))}
+    out, _ = opt.update(g, opt.init(g))
+    gn = float(fo.global_norm(out))
+    assert gn == pytest.approx(1.0, rel=1e-5)
+
+
+def test_chain_applies_in_order():
+    opt = fo.chain(fo.clip_by_global_norm(1.0), fo.sgd(1.0))
+    p = _one_param()
+    s = opt.init(p)
+    g = {"w": 100.0 * jnp.ones((3, 2))}
+    upd, _ = opt.update(g, s, params=p)
+    assert float(fo.global_norm(upd)) == pytest.approx(1.0, rel=1e-4)
+
+
+def test_apply_updates_preserves_dtype():
+    p = {"w": jnp.ones((2,), jnp.bfloat16)}
+    u = {"w": jnp.full((2,), 0.5, jnp.float32)}
+    out = fo.apply_updates(p, u)
+    assert out["w"].dtype == jnp.bfloat16
+    np.testing.assert_allclose(np.asarray(out["w"], np.float32), 1.5)
+
+
+# ----------------------------------------------------------------------- #
+def test_wsd_schedule_phases():
+    f = sched.wsd(1.0, warmup=10, stable=20, decay=10, floor_frac=0.1)
+    assert float(f(jnp.asarray(0))) == 0.0
+    assert float(f(jnp.asarray(5))) == pytest.approx(0.5)
+    assert float(f(jnp.asarray(15))) == pytest.approx(1.0)
+    assert float(f(jnp.asarray(29))) == pytest.approx(1.0)
+    assert float(f(jnp.asarray(40))) == pytest.approx(0.1, abs=1e-6)
+
+
+def test_warmup_cosine_monotone_decay():
+    f = sched.warmup_cosine(1.0, warmup=5, total=50)
+    vals = [float(f(jnp.asarray(i))) for i in range(5, 50, 5)]
+    assert all(a >= b for a, b in zip(vals, vals[1:]))
+
+
+def test_step_decay():
+    f = sched.step_decay(1.0, [10, 20], factor=0.5)
+    assert float(f(jnp.asarray(5))) == 1.0
+    assert float(f(jnp.asarray(10))) == 0.5
+    assert float(f(jnp.asarray(25))) == 0.25
+
+
+def test_kneepoint_decays_on_plateau():
+    st = sched.kneepoint_init(1.0)
+    # steep improvement first
+    for i in range(30):
+        st = sched.kneepoint_update(st, jnp.asarray(10.0 - 0.3 * i))
+    assert float(st["lr"]) == 1.0
+    # plateau -> knee -> decay (EMA needs ~60 steps to fall below
+    # beta x avg-improvement-since-lr-set)
+    for _ in range(100):
+        st = sched.kneepoint_update(st, jnp.asarray(1.0))
+    assert float(st["lr"]) < 1.0

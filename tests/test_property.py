@@ -1,0 +1,127 @@
+"""Property-based tests (hypothesis) on the system's core invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.mkor import (rescale_update, smw_rank1_update, stabilize)
+from repro.launch import hlo_analysis
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def _pd_from_seed(seed: int, d: int) -> jnp.ndarray:
+    a = jax.random.normal(jax.random.key(seed), (d, d)) / np.sqrt(d)
+    return jnp.eye(d) + a @ a.T
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2**31 - 1), d=st.integers(2, 24),
+       gamma=st.floats(0.05, 0.99), scale=st.floats(1e-3, 1e3))
+def test_smw_update_preserves_pd(seed, d, gamma, scale):
+    """Lemma 3.1 as a property: PD in → PD out, any v, any γ ∈ (0,1)."""
+    j_inv = jnp.linalg.inv(_pd_from_seed(seed, d))
+    v = scale * jax.random.normal(jax.random.key(seed + 1), (d,))
+    out = smw_rank1_update(j_inv, v, gamma)
+    eigs = np.linalg.eigvalsh(np.asarray((out + out.T) / 2, np.float64))
+    assert eigs.min() > 0
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2**31 - 1), d=st.integers(2, 24),
+       gamma=st.floats(0.05, 0.99))
+def test_exact_smw_inverse_property(seed, d, gamma):
+    """(exact_smw update of J⁻¹) @ (γJ + (1-γ)vvᵀ) == I."""
+    j = _pd_from_seed(seed, d)
+    v = jax.random.normal(jax.random.key(seed + 1), (d,))
+    upd = smw_rank1_update(jnp.linalg.inv(j), v, gamma, variant="exact_smw")
+    prod = upd @ (gamma * j + (1 - gamma) * jnp.outer(v, v))
+    np.testing.assert_allclose(prod, np.eye(d), atol=5e-3)
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2**31 - 1), d=st.integers(2, 16),
+       zeta=st.floats(0.01, 0.99), thr=st.floats(0.1, 100.0))
+def test_stabilizer_bounds_inf_norm(seed, d, zeta, thr):
+    """After stabilization, ‖F⁻¹‖∞ ≤ ζ·‖F⁻¹‖∞ + (1-ζ) — a contraction
+    toward identity whenever it triggers."""
+    j = 10.0 * thr * jnp.linalg.inv(_pd_from_seed(seed, d))
+    out = stabilize(j, threshold=thr, zeta=zeta)
+    n_in = float(jnp.max(jnp.abs(j)))
+    n_out = float(jnp.max(jnp.abs(out)))
+    assert n_out <= zeta * n_in + (1 - zeta) + 1e-4
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2**31 - 1),
+       rows=st.integers(1, 12), cols=st.integers(1, 12),
+       mag=st.floats(1e-4, 1e4))
+def test_rescale_is_norm_projection(seed, rows, cols, mag):
+    """rescale(δ, g) always has ‖·‖_F == ‖g‖_F and direction of δ."""
+    k1, k2 = jax.random.split(jax.random.key(seed))
+    g = jax.random.normal(k1, (rows, cols))
+    delta = mag * jax.random.normal(k2, (rows, cols))
+    out = rescale_update(delta, g)
+    np.testing.assert_allclose(float(jnp.linalg.norm(out)),
+                               float(jnp.linalg.norm(g)), rtol=1e-4)
+    cos = float(jnp.sum(out * delta)
+                / (jnp.linalg.norm(out) * jnp.linalg.norm(delta) + 1e-30))
+    assert cos > 0.999
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2**31 - 1), d=st.integers(4, 24),
+       gamma=st.floats(0.5, 0.99))
+def test_lemma_3_2_quantization_error_bounded(seed, d, gamma):
+    """bf16 factor update error stays within a constant multiple of the
+    Lemma 3.2 bound O((γ + 4(1-γ)/γ² m³ d²) ε)."""
+    j_inv = jnp.linalg.inv(_pd_from_seed(seed, d))
+    v = jax.random.normal(jax.random.key(seed + 1), (d,))
+    full = smw_rank1_update(j_inv, v, gamma)
+    half = smw_rank1_update(j_inv.astype(jnp.bfloat16), v, gamma)
+    err = float(jnp.max(jnp.abs(full - half.astype(jnp.float32))))
+    m = max(float(jnp.max(jnp.abs(j_inv))), float(jnp.max(jnp.abs(v))), 1.0)
+    eps = 2.0 ** -8                                   # bf16 mantissa
+    bound = (gamma + 4 * (1 - gamma) / gamma ** 2 * m ** 3 * d ** 2) * eps
+    assert err <= 4.0 * bound
+
+
+@settings(**SETTINGS)
+@given(dims=st.lists(st.integers(1, 64), min_size=0, max_size=4),
+       dt=st.sampled_from(["f32", "bf16", "s32", "pred", "u8"]))
+def test_hlo_shape_bytes(dims, dt):
+    sizes = {"f32": 4, "bf16": 2, "s32": 4, "pred": 1, "u8": 1}
+    s = f"{dt}[{','.join(map(str, dims))}]"
+    n = 1
+    for d in dims:
+        n *= d
+    assert hlo_analysis.shape_bytes(s) == n * sizes[dt]
+
+
+@settings(max_examples=15, deadline=None)
+@given(trip=st.integers(1, 1000), m=st.integers(1, 32), k=st.integers(1, 32),
+       n=st.integers(1, 32))
+def test_hlo_while_trip_scaling(trip, m, k, n):
+    """Synthetic HLO: a dot inside a while is scaled by the trip count."""
+    text = f"""HloModule t, entry_computation_layout={{()->f32[]}}
+
+%body (p: (s32[], f32[{m},{k}])) -> (s32[], f32[{m},{k}]) {{
+  %p = (s32[], f32[{m},{k}]) parameter(0)
+  %a = f32[{m},{k}]{{1,0}} get-tuple-element(%p), index=1
+  %b = f32[{k},{n}]{{1,0}} constant(0)
+  %d = f32[{m},{n}]{{1,0}} dot(%a, %b), lhs_contracting_dims={{1}}, rhs_contracting_dims={{0}}
+}}
+
+%cond (p: (s32[], f32[{m},{k}])) -> pred[] {{
+  %p2 = (s32[], f32[{m},{k}]) parameter(0)
+  %c = s32[] constant({trip})
+}}
+
+ENTRY %main () -> f32[] {{
+  %t = (s32[], f32[{m},{k}]) tuple()
+  %w = (s32[], f32[{m},{k}]) while(%t), condition=%cond, body=%body, backend_config={{"known_trip_count":{{"n":"{trip}"}}}}
+}}
+"""
+    got = hlo_analysis.analyze(text)
+    assert got["dot_flops"] == pytest.approx(2 * m * n * k * trip)

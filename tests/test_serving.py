@@ -1,0 +1,130 @@
+"""Serving correctness: prefill + single-token decode must reproduce the
+full-sequence forward logits (per architecture family), and ring-buffer
+caches must respect sliding windows."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.models import model as model_lib
+from repro.models.config import LayerSpec, ModelConfig
+from repro.training import serving
+
+FAMILIES = ["minicpm-2b", "gemma2-9b", "mixtral-8x22b", "rwkv6-3b",
+            "jamba-v0.1-52b", "whisper-base", "pixtral-12b"]
+
+
+def _setup(arch, seq=24):
+    cfg = registry.get_config(arch).reduced()
+    if cfg.moe is not None:
+        # prefill routes s tokens under the capacity limit, decode routes 1
+        # token; equality between the two paths needs drop-free capacity
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=64.0))
+    params = model_lib.init_params(jax.random.key(0), cfg)
+    tokens = jax.random.randint(jax.random.key(1), (2, seq), 0,
+                                cfg.vocab_size)
+    batch = {"tokens": tokens}
+    if cfg.frontend != "none":
+        fl = cfg.encoder.n_positions if cfg.is_encoder_decoder \
+            else cfg.frontend_len
+        fd = cfg.frontend_dim or cfg.d_model
+        batch["frontend_embeds"] = 0.1 * jax.random.normal(
+            jax.random.key(2), (2, fl, fd), jnp.float32)
+    return cfg, params, batch
+
+
+@pytest.mark.parametrize("arch", FAMILIES)
+def test_decode_matches_full_forward(arch):
+    """Prefill on tokens[:, :-1] then decode token[-1] == full forward's
+    last-position logits."""
+    cfg, params, batch = _setup(arch)
+    tokens = batch["tokens"]
+
+    full_logits, _ = model_lib.forward(params, cfg, batch)
+
+    prefix = dict(batch, tokens=tokens[:, :-1])
+    prefill = serving.make_prefill_step(cfg, cache_extra=2)
+    step = serving.make_serve_step(cfg)
+    _, cache = prefill(params, prefix)
+    _, logits, _ = step(params, cache, tokens[:, -1:])
+
+    got = np.asarray(logits[:, 0], np.float32)
+    want = np.asarray(full_logits[:, -1], np.float32)
+    np.testing.assert_allclose(got, want, rtol=2e-2, atol=2e-2)
+
+
+def test_multi_step_decode_matches_full_forward():
+    """3 decode steps reproduce the full-forward logits trajectory."""
+    cfg, params, batch = _setup("minicpm-2b", seq=16)
+    tokens = batch["tokens"]
+    full_logits, _ = model_lib.forward(params, cfg, batch)
+
+    prefill = serving.make_prefill_step(cfg, cache_extra=8)
+    step = serving.make_serve_step(cfg)
+    _, cache = prefill(params, dict(batch, tokens=tokens[:, :13]))
+    for i in range(13, 16):
+        _, logits, cache = step(params, cache, tokens[:, i:i + 1])
+        np.testing.assert_allclose(np.asarray(logits[:, 0], np.float32),
+                                   np.asarray(full_logits[:, i], np.float32),
+                                   rtol=2e-2, atol=2e-2)
+
+
+def test_sliding_window_cache_is_bounded():
+    """A windowed layer's decode cache length == window, not seq_len."""
+    cfg = ModelConfig(
+        name="swa-test", arch_type="dense", n_layers=2, d_model=64,
+        n_heads=2, n_kv_heads=2, d_ff=128, vocab_size=128,
+        pattern=(LayerSpec(kind="attn", window=8, mlp="dense"),),
+        dtype="float32", scan_layers=False, remat=False,
+        vocab_pad_multiple=1)
+    cache = model_lib.init_decode_cache(cfg, batch=2, seq_len=4096)
+    k = cache["blocks"][0]["k"]
+    assert k.shape[-3] == 8, f"ring cache should be window-bounded: {k.shape}"
+
+
+def test_sliding_window_decode_matches_full():
+    """SWA prefill+decode == SWA full forward (ring buffer correctness)."""
+    cfg = ModelConfig(
+        name="swa-test", arch_type="dense", n_layers=2, d_model=64,
+        n_heads=2, n_kv_heads=2, d_ff=128, vocab_size=128,
+        pattern=(LayerSpec(kind="attn", window=6, mlp="dense"),),
+        dtype="float32", scan_layers=False, remat=False,
+        vocab_pad_multiple=1)
+    params = model_lib.init_params(jax.random.key(0), cfg)
+    tokens = jax.random.randint(jax.random.key(1), (1, 20), 0, 128)
+    full_logits, _ = model_lib.forward(params, cfg, {"tokens": tokens})
+
+    prefill = serving.make_prefill_step(cfg, cache_extra=8)
+    step = serving.make_serve_step(cfg)
+    _, cache = prefill(params, {"tokens": tokens[:, :15]})
+    for i in range(15, 20):
+        _, logits, cache = step(params, cache, tokens[:, i:i + 1])
+        np.testing.assert_allclose(
+            np.asarray(logits[:, 0], np.float32),
+            np.asarray(full_logits[:, i], np.float32), rtol=2e-2, atol=2e-2)
+
+
+def test_long_context_variant_makes_hybrid_subquadratic():
+    cfg = registry.get_config("jamba-v0.1-52b")
+    lc = registry.long_context_variant(cfg)
+    assert lc.supports_long_context()
+    for s in lc.pattern:
+        if s.kind == "attn":
+            assert s.window is not None
+
+
+def test_long_context_variant_rejects_full_attention():
+    with pytest.raises(ValueError):
+        registry.long_context_variant(registry.get_config("starcoder2-15b"))
+
+
+def test_generate_end_to_end():
+    cfg, params, batch = _setup("minicpm-2b", seq=12)
+    out = serving.generate(params, cfg, batch["tokens"], n_tokens=5)
+    assert out.shape == (2, 5)
+    assert (np.asarray(out) >= 0).all()
+    assert (np.asarray(out) < cfg.vocab_size).all()

@@ -1,0 +1,123 @@
+"""The probe-gradient identity and stat plumbing (models/layers.py,
+core/stats.py) — the mechanism that gives MKOR its rank-1 statistics with
+zero extra collectives."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import stats as statlib
+from repro.models import layers
+
+
+def test_probe_gradient_is_mean_output_gradient():
+    """For a mean-reduced loss, dL/dprobe == E_t[dℓ_t/dy_t] exactly."""
+    key = jax.random.key(0)
+    p = layers.dense_init(key, 6, 4, dtype=jnp.float32)
+    x = jax.random.normal(jax.random.key(1), (32, 6))
+    tgt = jax.random.normal(jax.random.key(2), (32, 4))
+
+    def loss_fn(p):
+        y = layers.dense(p, x)
+        return jnp.mean(jnp.sum((y - tgt) ** 2, -1) / 2)
+
+    g = jax.grad(loss_fn)(p)
+    # direct per-token output grads of the same loss
+    y = layers.dense(p, x)
+    per_tok = (y - tgt) / x.shape[0]                  # dL/dy_t for mean loss
+    np.testing.assert_allclose(g["probe"], per_tok.sum(0), rtol=1e-5,
+                               atol=1e-6)
+    np.testing.assert_allclose(g["probe"], per_tok.mean(0) * 1.0
+                               * x.shape[0] / x.shape[0] * x.shape[0]
+                               / x.shape[0] * x.shape[0] * 0 + per_tok.sum(0),
+                               rtol=1e-5)
+
+
+def test_stats_capture_mean_activation():
+    p = layers.dense_init(jax.random.key(0), 6, 4, dtype=jnp.float32)
+    x = jax.random.normal(jax.random.key(1), (5, 7, 6))
+    stats = {}
+    layers.dense(p, x, stats=stats, name="fc")
+    np.testing.assert_allclose(stats["fc"]["a"],
+                               x.reshape(-1, 6).mean(0), rtol=1e-6)
+
+
+def test_iter_dense_layers_and_paths():
+    params = {
+        "a": layers.dense_init(jax.random.key(0), 4, 4, dtype=jnp.float32),
+        "blk": {"q": layers.dense_init(jax.random.key(1), 4, 8,
+                                       dtype=jnp.float32),
+                "norm": {"scale": jnp.ones(4)}},
+        "lst": [layers.dense_init(jax.random.key(2), 8, 4,
+                                  dtype=jnp.float32)],
+    }
+    paths = statlib.iter_dense_layers(params)
+    assert ("a",) in paths
+    assert ("blk", "q") in paths
+    assert ("lst", 0) in paths
+    assert len(paths) == 3
+
+
+def test_tree_get_set_roundtrip():
+    tree = {"x": [{"y": 1}, {"y": 2}], "z": (3, 4)}
+    assert statlib.tree_get(tree, ("x", 1, "y")) == 2
+    new = statlib.tree_set(tree, ("x", 1, "y"), 9)
+    assert new["x"][1]["y"] == 9 and tree["x"][1]["y"] == 2
+    new2 = statlib.tree_set(tree, ("z", 0), 7)
+    assert new2["z"] == (7, 4)
+
+
+def test_layer_dims_stacked_and_expert():
+    dense = {"w": jnp.zeros((5, 3, 8, 16)),       # (R, E, d_in, d_out)
+             "probe": jnp.zeros((5, 16))}
+    stack, extra, d_in, d_out = statlib.layer_dims(dense)
+    assert stack == (5,) and extra == (3,) and (d_in, d_out) == (8, 16)
+
+
+def test_get_g_vec_strips_broadcast_dims():
+    grads = {"probe": jnp.ones((5, 1, 16))}
+    g = statlib.get_g_vec(grads, ())
+    assert g.shape == (5, 16)
+
+
+def test_zero_probes():
+    tree = {"a": {"w": jnp.ones((2, 2)), "probe": jnp.ones((2,))},
+            "lst": [{"probe": jnp.ones(3)}]}
+    out = statlib.zero_probes(tree)
+    assert float(out["a"]["probe"].sum()) == 0
+    assert float(out["lst"][0]["probe"].sum()) == 0
+    assert float(out["a"]["w"].sum()) == 4
+
+
+def test_model_level_probe_identity():
+    """End-to-end: the probe grads in a 2-layer MLP model equal the
+    directly-computed token-mean output gradients."""
+    from repro.models.config import LayerSpec, ModelConfig
+    from repro.models import model as model_lib
+    from repro.training.loop import make_loss_fn
+
+    cfg = ModelConfig(name="t", arch_type="dense", n_layers=2, d_model=32,
+                      n_heads=2, n_kv_heads=2, d_ff=64, vocab_size=64,
+                      dtype="float32", scan_layers=False, remat=False,
+                      vocab_pad_multiple=1)
+    params = model_lib.init_params(jax.random.key(0), cfg)
+    batch = {"tokens": jax.random.randint(jax.random.key(1), (2, 8), 0, 64),
+             "labels": jax.random.randint(jax.random.key(2), (2, 8), 0, 64)}
+    loss_fn = make_loss_fn(cfg)
+    (_, aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+
+    # independent check: dL/d(bias of lm_head) over all tokens == probe grad
+    def loss_with_shift(shift):
+        p2 = jax.tree_util.tree_map(lambda x: x, params)
+        logits_shift = shift
+
+        def f(params, batch):
+            import repro.models.model as M
+            logits, aux2 = M.forward(params, cfg, batch)
+            logits = logits + logits_shift
+            from repro.training.loop import lm_loss
+            return lm_loss(logits, batch["labels"])
+        return f(p2, batch)
+
+    g_shift = jax.grad(loss_with_shift)(jnp.zeros((cfg.vocab_size,)))
+    np.testing.assert_allclose(grads["lm_head"]["probe"], g_shift,
+                               rtol=1e-4, atol=1e-6)
