@@ -8,6 +8,7 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import emit, time_fn
+from repro.core import stats as statlib
 from repro.core.eva import _rank1_damped_apply
 from repro.core.kfac import damped_inverse
 from repro.core.mkor import precondition, rescale_update, smw_rank1_update
@@ -59,6 +60,32 @@ def breakdown_for_layer(d_in, d_out, batch, tag):
     return rows
 
 
+def factor_bank_rows():
+    """Per-bucket factor FLOPs/bytes + banked-vmap vs per-layer-loop SMW
+    wall time (factor-bank layout, DESIGN.md §2).  Timing comes from
+    benchmarks/factor_bank.bench_bucket — one methodology for both."""
+    from benchmarks.factor_bank import bench_bucket
+    rows = []
+    # (n_layers, d): transformer-LM block class and CNN/MLP class
+    for n, d, tag in ((24, 1024, "transformer_d1024_x24"),
+                      (53, 512, "cnn_d512_x53")):
+        bucket = statlib.FactorBucket(
+            bucket_id=f"{d}x{d}", stack=(), extra=(), d_in=d, d_out=d,
+            paths=tuple((f"layer{i}",) for i in range(n)))
+        cost = statlib.bucket_cost(bucket, factor_bytes=4)
+        timing = bench_bucket(n, d, interpret=True, skip_pallas=True)
+        rows.append({
+            "bucket": cost["bucket_id"], "layer_class": tag,
+            "slices": cost["slices"],
+            "smw_gflops_per_inv": cost["smw_flops_per_inv"] / 1e9,
+            "factor_mib": cost["factor_bytes"] / 2 ** 20,
+            "hbm_mib_per_inv": cost["hbm_bytes_per_inv"] / 2 ** 20,
+            "per_layer_loop_ms": timing["per_layer_loop_ms"],
+            "banked_vmap_ms": timing["banked_vmap_ms"],
+        })
+    return rows
+
+
 def main() -> None:
     # (a) transformer layer class (BERT-Large-like d=1024, long-seq batch)
     rows = breakdown_for_layer(1024, 1024, 2048, "transformer_d1024_b2048")
@@ -67,6 +94,8 @@ def main() -> None:
     emit(rows, "Fig. 3 — per-step optimizer time breakdown")
     print("# note: factor cost for KFAC is the per-inversion cost; divide "
           "by inv_freq for the amortised per-step cost (Fig. 4a).")
+    emit(factor_bank_rows(),
+         "factor banks — per-bucket SMW cost, banked vmap vs per-layer loop")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,87 @@
+"""Factor-bank micro-benchmark (DESIGN.md §2): SMW factor-update wall time
+for the three execution strategies the optimizer can take —
+
+  per_layer_loop : the legacy layout — one Python-unrolled smw_rank1_update
+                   per layer (n kernels per bucket per inversion)
+  banked_vmap    : the bank layout — a single vmapped update over the bank
+                   dim (one fused XLA kernel per bucket)
+  fused_pallas   : the bank layout through kernels/ops.smw_rank1_update_banked,
+                   i.e. the single-dispatch fused Pallas SMW kernel
+                   (interpret mode off-TPU: correctness-representative only,
+                   wall time is NOT — see the "interpret" flag in the JSON)
+
+  PYTHONPATH=src python -m benchmarks.factor_bank
+  PYTHONPATH=src python -m benchmarks.factor_bank --out BENCH_factor_bank.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.core.mkor import smw_rank1_update
+from repro.kernels import ops
+
+GAMMA = 0.9
+# (n_layers_in_bucket, d): transformer-block, FFN, and CNN bucket classes
+BUCKETS = ((24, 256), (8, 512), (4, 1024))
+
+
+def _bank(key, n, d):
+    a = jax.random.normal(key, (n, d, d)) / jnp.sqrt(d)
+    return jnp.eye(d) + 0.1 * jnp.einsum("nij,nkj->nik", a, a)
+
+
+def bench_bucket(n: int, d: int, interpret: bool, skip_pallas: bool):
+    bank = _bank(jax.random.key(d), n, d)
+    vs = jax.random.normal(jax.random.key(d + 1), (n, d))
+
+    loop = jax.jit(lambda bank, vs: jnp.stack(
+        [smw_rank1_update(bank[i], vs[i], GAMMA)
+         for i in range(bank.shape[0])]))
+    banked = jax.jit(jax.vmap(lambda j, v: smw_rank1_update(j, v, GAMMA)))
+    fused = jax.jit(partial(ops.smw_rank1_update_banked, gamma=GAMMA,
+                            interpret=interpret))
+
+    row = {
+        "bucket": f"{d}x{d}", "n_layers": n,
+        "per_layer_loop_ms": time_fn(loop, bank, vs) * 1e3,
+        "banked_vmap_ms": time_fn(banked, bank, vs) * 1e3,
+    }
+    row["fused_pallas_ms"] = (
+        time_fn(fused, bank, vs, warmup=1, iters=2) * 1e3
+        if not skip_pallas else float("nan"))
+    row["bank_speedup"] = row["per_layer_loop_ms"] / row["banked_vmap_ms"]
+    return row
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="BENCH_factor_bank.json")
+    ap.add_argument("--skip-pallas", action="store_true",
+                    help="skip the (interpret-mode, very slow on CPU) "
+                         "fused-kernel timing")
+    args, _ = ap.parse_known_args()
+
+    backend = jax.default_backend()
+    interpret = backend != "tpu"
+    rows = [bench_bucket(n, d, interpret, args.skip_pallas)
+            for n, d in BUCKETS]
+    emit(rows, "factor-bank SMW: per-layer loop vs banked vmap vs fused "
+               "Pallas")
+    if interpret and not args.skip_pallas:
+        print(f"# fused_pallas ran in interpret mode on {backend}: "
+              "correctness-representative, wall time is NOT (run on TPU "
+              "for real numbers)")
+    with open(args.out, "w") as f:
+        json.dump({"backend": backend, "interpret": interpret,
+                   "gamma": GAMMA, "rows": rows}, f, indent=1)
+    print(f"# wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -9,7 +9,7 @@ import sys
 import time
 import traceback
 
-from benchmarks import (breakdown, complexity, convergence,
+from benchmarks import (breakdown, complexity, convergence, factor_bank,
                         inversion_frequency, lr_sensitivity, memory,
                         quantization, rank1_error, roofline)
 
@@ -17,6 +17,7 @@ ALL = {
     "complexity": complexity.main,              # Table 1
     "convergence": convergence.main,            # Fig 2 / Tables 2-3
     "breakdown": breakdown.main,                # Fig 3
+    "factor_bank": factor_bank.main,            # bank vs per-layer SMW
     "inversion_frequency": inversion_frequency.main,  # Fig 4
     "rank1_error": rank1_error.main,            # Fig 5 / §8.7
     "lr_sensitivity": lr_sensitivity.main,      # Table 5

@@ -29,6 +29,24 @@ Beyond-paper options (each recorded in EXPERIMENTS.md):
   two-sided preconditioning (kernels/).
 * factor sharding over the "model" mesh axis (launch/dryrun.py) instead of
   the paper's per-worker replication.
+
+Factor banks (DESIGN.md §2)
+---------------------------
+With ``layout="bank"`` (the default) factors are not stored per layer but
+in shape-bucketed *banks*: at ``init`` all eligible layers are grouped by
+``(stack, extra, d_in, d_out)`` (core/stats.py bucket manifest) and each
+bucket owns two stacked arrays
+
+    l_inv: (n_layers_in_bucket, *stack, d_out, d_out)
+    r_inv: (n_layers_in_bucket, *stack, d_in,  d_in)
+
+``update`` then runs stabilize → SMW → precondition → rescale once per
+bucket, vmapped over the bank dim, instead of once per layer in Python —
+a handful of fused kernels per step regardless of depth.  The manifest is
+static (pure function of tree structure + shapes) and is rebuilt at trace
+time, so bank slots never need to be stored in the jitted state.
+``layout="per_layer"`` keeps the legacy dict-of-factors state and is the
+numerical reference the bank path is tested against (tests/test_mkor.py).
 """
 from __future__ import annotations
 
@@ -58,6 +76,7 @@ class MKORConfig:
     variant: str = "paper"             # "paper" | "exact_smw"
     use_pallas: bool = False           # fused TPU kernels (kernels/)
     interpret: bool = False            # pallas interpret mode (CPU tests)
+    layout: str = "bank"               # "bank" (bucketed) | "per_layer"
     # MKOR-H (§3.2)
     hybrid: bool = False
     hybrid_ema_fast: float = 0.9
@@ -185,9 +204,32 @@ def _hybrid_update(h: Dict, loss, count, cfg: MKORConfig) -> Dict:
     return {"on": h["on"] & ~stalled, "ema_fast": fast, "ema_slow": slow}
 
 
+def manifest_for(tree, cfg: MKORConfig) -> statlib.BucketManifest:
+    return statlib.build_bucket_manifest(
+        tree, lambda path, dense: _eligible(path, dense, cfg))
+
+
+def factor_slices(state, tree, cfg: MKORConfig = MKORConfig()):
+    """Per-layer ``{path_str: {"l_inv", "r_inv"}}`` views of the factor
+    state, regardless of layout.  Bank slices are lazy gathers — intended
+    for tests, checkpoints-in-flight inspection, and debugging."""
+    if "factors" in state:                          # layout="per_layer"
+        return dict(state["factors"])
+    out = {}
+    for bucket in manifest_for(tree, cfg):
+        bank = state["factor_banks"][bucket.bucket_id]
+        for i, key in enumerate(bucket.path_strs):
+            out[key] = {"l_inv": bank["l_inv"][i],
+                        "r_inv": bank["r_inv"][i]}
+    return out
+
+
 def mkor(backend: GradientTransformation,
          cfg: MKORConfig = MKORConfig()) -> GradientTransformation:
     """MKOR wrapping a first-order ``backend`` (Alg. 1)."""
+
+    if cfg.layout not in ("bank", "per_layer"):
+        raise ValueError(f"unknown layout {cfg.layout!r}")
 
     if cfg.use_pallas:
         from repro.kernels import ops as kops
@@ -195,24 +237,163 @@ def mkor(backend: GradientTransformation,
                          variant=cfg.variant, interpret=cfg.interpret)
         precond_fn = partial(kops.two_sided_precondition,
                              interpret=cfg.interpret)
+
+        def banked_smw(j, v, n_lead):
+            return kops.smw_rank1_update_banked(
+                j, v, gamma=cfg.gamma, variant=cfg.variant,
+                interpret=cfg.interpret)
     else:
         smw_fn = partial(smw_update_maybe_rank_r, gamma=cfg.gamma,
                          variant=cfg.variant)
         precond_fn = precondition
 
+        def banked_smw(j, v, n_lead):
+            return _vmap_over_stack(smw_fn, n_lead)(j, v)
+
+    stab_slice = partial(stabilize, threshold=cfg.stabilizer_threshold,
+                         zeta=cfg.zeta)
+
+    def precond_slice(linv, rinv, gw):
+        delta = precond_fn(linv, rinv, gw)
+        if cfg.rescale:
+            delta = rescale_update(delta, gw)
+        return delta.astype(gw.dtype)
+
+    # ------------------------------------------------------------------ #
+    # init
+    # ------------------------------------------------------------------ #
+    def init_factor_state(params):
+        if cfg.layout == "per_layer":
+            factors = {}
+            for path in statlib.iter_dense_layers(params):
+                dense = statlib.tree_get(params, path)
+                if _eligible(path, dense, cfg):
+                    factors[statlib.path_str(path)] = \
+                        _init_factors(dense, cfg)
+            return {"factors": factors}
+        fd = jnp.dtype(cfg.factor_dtype)
+        banks = {}
+        for b in manifest_for(params, cfg):
+            shape = (b.n_slots,) + b.stack
+
+            def eye(d):
+                return jnp.broadcast_to(jnp.eye(d, dtype=fd),
+                                        shape + (d, d))
+
+            banks[b.bucket_id] = {"l_inv": eye(b.d_out),
+                                  "r_inv": eye(b.d_in)}
+        return {"factor_banks": banks}
+
     def init(params):
-        factors = {}
-        for path in statlib.iter_dense_layers(params):
-            dense = statlib.tree_get(params, path)
-            if _eligible(path, dense, cfg):
-                factors[statlib.path_str(path)] = _init_factors(dense, cfg)
         return {
             "count": jnp.zeros((), jnp.int32),
-            "factors": factors,
+            **init_factor_state(params),
             "hybrid": _hybrid_init(),
             "backend": backend.init(params),
         }
 
+    # ------------------------------------------------------------------ #
+    # per-layer update (legacy layout — the bank path's numerical oracle)
+    # ------------------------------------------------------------------ #
+    def update_per_layer(grads, state, params, stats, do_inv, so_on):
+        layer_paths = {statlib.path_str(p): p
+                       for p in statlib.iter_dense_layers(grads)}
+        new_factors = {}
+        out = grads
+        for key, fac in state["factors"].items():
+            path = layer_paths[key]
+            g_w = statlib.tree_get(grads, path)["w"]
+            a_vec = statlib.get_a_vec(stats, path) if stats is not None \
+                else None
+            g_vec = statlib.get_g_vec(grads, path)
+            stack, _, _, _ = statlib.layer_dims(
+                statlib.tree_get(params if params is not None else grads,
+                                 path))
+            ns = len(stack)
+
+            l_inv, r_inv = fac["l_inv"], fac["r_inv"]
+
+            # --- lines 5-8: stabilize + SM factor update (every inv_freq) -
+            if a_vec is not None and g_vec is not None:
+                stab = _vmap_over_stack(stab_slice, ns)
+                upd = _vmap_over_stack(smw_fn, ns)
+                l_new = upd(stab(l_inv), g_vec)
+                r_new = upd(stab(r_inv), a_vec)
+                l_inv = jnp.where(do_inv, l_new, l_inv)
+                r_inv = jnp.where(do_inv, r_new, r_inv)
+            new_factors[key] = {"l_inv": l_inv, "r_inv": r_inv}
+
+            # --- line 9-10: precondition + rescale ----------------------- #
+            delta = _vmap_over_stack(precond_slice, ns)(l_inv, r_inv, g_w)
+            delta = jnp.where(so_on, delta, g_w)      # MKOR-H fallback
+            out = statlib.tree_set(
+                out, path, {**statlib.tree_get(out, path), "w": delta})
+        return out, {"factors": new_factors}
+
+    # ------------------------------------------------------------------ #
+    # bucketed bank update: one vmapped stabilize → SMW → precondition →
+    # rescale pipeline per bucket (DESIGN.md §2)
+    # ------------------------------------------------------------------ #
+    def update_banked(grads, state, params, stats, do_inv, so_on):
+        manifest = manifest_for(params if params is not None else grads,
+                                 cfg)
+        new_banks = {}
+        out = grads
+        for bucket in manifest:
+            bank = state["factor_banks"][bucket.bucket_id]
+            l_bank, r_bank = bank["l_inv"], bank["r_inv"]
+            ns = len(bucket.stack)
+
+            g_ws, g_vecs, a_vecs = [], [], []
+            for path in bucket.paths:
+                g_ws.append(statlib.tree_get(grads, path)["w"])
+                g_vecs.append(statlib.get_g_vec(grads, path))
+                a_vecs.append(statlib.get_a_vec(stats, path)
+                              if stats is not None else None)
+
+            # --- lines 5-8, banked.  Slots are sub-grouped by the runtime
+            # stat signature (rank-r stats may differ per layer); in the
+            # common case one group covers the whole bank. ---------------- #
+            sig_groups: Dict[Any, list] = {}
+            for slot, (av, gv) in enumerate(zip(a_vecs, g_vecs)):
+                if av is None or gv is None:
+                    continue                      # no stats: slot untouched
+                sig_groups.setdefault((av.shape, gv.shape),
+                                      []).append(slot)
+            for sig in sorted(sig_groups, key=str):
+                slots = sig_groups[sig]
+                whole = len(slots) == bucket.n_slots
+                idx = jnp.asarray(slots)
+                l_sub = l_bank if whole else l_bank[idx]
+                r_sub = r_bank if whole else r_bank[idx]
+                gv = jnp.stack([g_vecs[i] for i in slots])
+                av = jnp.stack([a_vecs[i] for i in slots])
+                stab = _vmap_over_stack(stab_slice, ns + 1)
+                l_new = banked_smw(stab(l_sub), gv, ns + 1)
+                r_new = banked_smw(stab(r_sub), av, ns + 1)
+                l_new = jnp.where(do_inv, l_new, l_sub)
+                r_new = jnp.where(do_inv, r_new, r_sub)
+                if whole:
+                    l_bank, r_bank = l_new, r_new
+                else:
+                    l_bank = l_bank.at[idx].set(l_new)
+                    r_bank = r_bank.at[idx].set(r_new)
+            new_banks[bucket.bucket_id] = {"l_inv": l_bank,
+                                           "r_inv": r_bank}
+
+            # --- lines 9-10, banked: one vmapped two-sided precondition +
+            # rescale over (bank, *stack); extra dims broadcast inside. --- #
+            gw = jnp.stack(g_ws)
+            delta = _vmap_over_stack(precond_slice, ns + 1)(
+                l_bank, r_bank, gw)
+            delta = jnp.where(so_on, delta, gw)       # MKOR-H fallback
+            for i, path in enumerate(bucket.paths):
+                out = statlib.tree_set(
+                    out, path,
+                    {**statlib.tree_get(out, path), "w": delta[i]})
+        return out, {"factor_banks": new_banks}
+
+    # ------------------------------------------------------------------ #
     def update(grads, state, params=None, stats=None, loss=None, **_):
         count = state["count"]
         hybrid = state["hybrid"]
@@ -223,49 +404,10 @@ def mkor(backend: GradientTransformation,
         so_on = hybrid["on"] if cfg.hybrid else jnp.ones((), jnp.bool_)
         do_inv = so_on & (count % cfg.inv_freq == 0)
 
-        layer_paths = {statlib.path_str(p): p
-                       for p in statlib.iter_dense_layers(grads)}
-        new_factors = {}
-        out = grads
-        for key, fac in state["factors"].items():
-            path = layer_paths[key]
-            g_w = statlib.tree_get(grads, path)["w"]
-            a_vec = statlib.get_a_vec(stats, path) if stats is not None else None
-            g_vec = statlib.get_g_vec(grads, path)
-            stack, extra, d_in, d_out = statlib.layer_dims(
-                statlib.tree_get(params if params is not None else grads,
-                                 path))
-            ns = len(stack)
-
-            l_inv, r_inv = fac["l_inv"], fac["r_inv"]
-
-            # --- lines 5-8: stabilize + SM factor update (every inv_freq) --
-            if a_vec is not None and g_vec is not None:
-                stab = _vmap_over_stack(
-                    partial(stabilize, threshold=cfg.stabilizer_threshold,
-                            zeta=cfg.zeta), ns)
-                upd = _vmap_over_stack(smw_fn, ns)
-
-                def compute_new(l_inv=l_inv, r_inv=r_inv, stab=stab, upd=upd,
-                                g_vec=g_vec, a_vec=a_vec):
-                    return upd(stab(l_inv), g_vec), upd(stab(r_inv), a_vec)
-
-                l_new, r_new = compute_new()
-                l_inv = jnp.where(do_inv, l_new, l_inv)
-                r_inv = jnp.where(do_inv, r_new, r_inv)
-            new_factors[key] = {"l_inv": l_inv, "r_inv": r_inv}
-
-            # --- line 9-10: precondition + rescale ------------------------ #
-            def one(linv, rinv, gw):
-                delta = precond_fn(linv, rinv, gw)
-                if cfg.rescale:
-                    delta = rescale_update(delta, gw)
-                return delta.astype(gw.dtype)
-
-            delta = _vmap_over_stack(one, ns)(l_inv, r_inv, g_w)
-            delta = jnp.where(so_on, delta, g_w)      # MKOR-H fallback
-            out = statlib.tree_set(
-                out, path, {**statlib.tree_get(out, path), "w": delta})
+        step_fn = update_per_layer if cfg.layout == "per_layer" \
+            else update_banked
+        out, factor_state = step_fn(grads, state, params, stats,
+                                    do_inv, so_on)
 
         # probes are stat taps: never step them, keep backend moments clean
         out = statlib.zero_probes(out)
@@ -274,7 +416,7 @@ def mkor(backend: GradientTransformation,
         updates = statlib.zero_probes(updates)
         return updates, {
             "count": count + 1,
-            "factors": new_factors,
+            **factor_state,
             "hybrid": hybrid,
             "backend": backend_state,
         }

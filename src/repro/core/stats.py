@@ -15,7 +15,8 @@ Conventions (see models/layers.py):
 """
 from __future__ import annotations
 
-from typing import Any, Dict, List, Optional, Tuple
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -114,6 +115,123 @@ def get_g_vec(grads, path: Path) -> Optional[jnp.ndarray]:
     probe = node["probe"]
     stack = stack_shape_of(probe)
     return probe.reshape(stack + probe.shape[-1:])
+
+
+# ----------------------------------------------------------------------- #
+# Factor-bank bucket manifest (DESIGN.md §2)
+#
+# Second-order optimizers group eligible dense layers into shape buckets so
+# factor work runs once per bucket (vmapped over a bank dim) instead of once
+# per layer in Python.  The manifest is *static*: it is a pure function of
+# the tree structure + leaf shapes, so rebuilding it at trace time inside
+# ``update`` yields exactly the bucketing chosen at ``init`` — no manifest
+# state needs to live inside the jitted optimizer state.
+# ----------------------------------------------------------------------- #
+@dataclass(frozen=True)
+class FactorBucket:
+    """One shape bucket: every layer with identical (stack, extra, d_in,
+    d_out) signature.  ``paths`` fixes the bank slot order (slot i of the
+    bank arrays belongs to ``paths[i]``)."""
+    bucket_id: str
+    stack: Tuple[int, ...]      # probe-derived stack dims (scan L, experts)
+    extra: Tuple[int, ...]      # w broadcast dims under shared factors (E,)
+    d_in: int
+    d_out: int
+    paths: Tuple[Path, ...]
+
+    @property
+    def n_slots(self) -> int:
+        return len(self.paths)
+
+    @property
+    def path_strs(self) -> Tuple[str, ...]:
+        return tuple(path_str(p) for p in self.paths)
+
+
+@dataclass(frozen=True)
+class BucketManifest:
+    buckets: Tuple[FactorBucket, ...]
+
+    def __iter__(self):
+        return iter(self.buckets)
+
+    def __len__(self) -> int:
+        return len(self.buckets)
+
+
+def bucket_id_for(stack: Tuple[int, ...], extra: Tuple[int, ...],
+                  d_in: int, d_out: int) -> str:
+    """Deterministic, human-readable bucket key; encodes the full shape
+    signature so distinct signatures can never collide."""
+    bid = f"{d_in}x{d_out}"
+    if stack:
+        bid += "_s" + "x".join(map(str, stack))
+    if extra:
+        bid += "_e" + "x".join(map(str, extra))
+    return bid
+
+
+def build_bucket_manifest(
+        tree, eligible: Optional[Callable[[Path, Dict], bool]] = None,
+) -> BucketManifest:
+    """Group eligible dense layers of ``tree`` by shape signature.
+
+    Invariants (DESIGN.md §2):
+    * bucket order is sorted by bucket_id, slot order by path string — both
+      total orders on static data, so init- and update-time rebuilds agree;
+    * every eligible layer appears in exactly one bucket slot;
+    * all slots of a bucket share (stack, extra, d_in, d_out), hence bank
+      arrays stack cleanly along a new leading dim.
+    """
+    groups: Dict[Tuple, List[Path]] = {}
+    for path in iter_dense_layers(tree):
+        dense = tree_get(tree, path)
+        if eligible is not None and not eligible(path, dense):
+            continue
+        stack, extra, d_in, d_out = layer_dims(dense)
+        groups.setdefault((stack, extra, d_in, d_out), []).append(path)
+    buckets = []
+    for (stack, extra, d_in, d_out), paths in groups.items():
+        buckets.append(FactorBucket(
+            bucket_id=bucket_id_for(stack, extra, d_in, d_out),
+            stack=stack, extra=extra, d_in=d_in, d_out=d_out,
+            paths=tuple(sorted(paths, key=path_str))))
+    buckets.sort(key=lambda b: b.bucket_id)
+    return BucketManifest(tuple(buckets))
+
+
+def bucket_cost(bucket: FactorBucket, factor_bytes: int = 2) -> Dict[str, Any]:
+    """Analytic per-bucket factor FLOPs/bytes (launch/dryrun, benchmarks).
+
+    Slices = bank slots x stacked repeats; each slice owns an (d_out, d_out)
+    L⁻¹ and (d_in, d_in) R⁻¹.  Per inversion each factor costs one matvec
+    (2d²) + the rank-1 axpy write (3d²); preconditioning is two matmuls per
+    step broadcast over the extra dims."""
+    n = bucket.n_slots
+    for d in bucket.stack:
+        n *= d
+    b = 1
+    for d in bucket.extra:
+        b *= d
+    di, do = bucket.d_in, bucket.d_out
+    smw_flops = n * 5 * (di * di + do * do)
+    precond_flops = n * b * 2 * di * do * (di + do)
+    factor_mem = n * (di * di + do * do) * factor_bytes
+    return {
+        "bucket_id": bucket.bucket_id,
+        "n_layers": bucket.n_slots,
+        "stack": list(bucket.stack),
+        "extra": list(bucket.extra),
+        "d_in": di,
+        "d_out": do,
+        "slices": n,
+        "factor_bytes": factor_mem,
+        "smw_flops_per_inv": smw_flops,
+        "precond_flops_per_step": precond_flops,
+        # SMW streams each factor twice (read for matvec + rank-1 read) and
+        # writes it once per inversion
+        "hbm_bytes_per_inv": 3 * factor_mem,
+    }
 
 
 def zero_probes(tree):

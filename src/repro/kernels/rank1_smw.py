@@ -6,6 +6,13 @@ The SM rank-1 inverse update
 
 is re-blocked for the TPU memory hierarchy (DESIGN.md §3):
 
+* ``fused_smw``: the whole update in ONE ``pallas_call`` with a two-pass
+  grid ``(2, d/B, d/B)``.  Pass 0 accumulates  u  into a persistent VMEM
+  scratch and the scalar  s  into SMEM tile-by-tile; pass 1 re-streams each
+  J tile and writes  scale·J + coef(s)·u_i u_kᵀ.  u and s never round-trip
+  through HBM and there is a single kernel dispatch per factor (the
+  separate matvec + rank1_update pair costs two dispatches plus an HBM
+  round-trip for u).
 * ``matvec``: row-tiled mat-vec with fp32 accumulation across the column
   grid — each (BR, BC) tile of J streams HBM→VMEM once; u lives in VMEM.
 * ``rank1_update``: writes  γ·J_tile + coef·u_r u_cᵀ  tile-by-tile; the
@@ -23,6 +30,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 DEFAULT_BLOCK = 256
 
@@ -98,3 +106,84 @@ def smw_vectors(j: jnp.ndarray, v: jnp.ndarray, *, block: int = DEFAULT_BLOCK,
     u = matvec(j, v, block=block, interpret=interpret)
     s = jnp.vdot(v[:, 0], u[:, 0])
     return u, s
+
+
+# ----------------------------------------------------------------------- #
+# Fused SMW: matvec + scalar + rank-1 write in one pallas_call
+# ----------------------------------------------------------------------- #
+def _fused_smw_kernel(j_ref, vr_ref, vc_ref, out_ref, u_ref, s_ref, *,
+                      gamma: float, variant: str, block: int):
+    """Two-pass grid (pass, rows, cols).
+
+    Pass 0: u[rows] += J[rows, cols] @ v[cols]  into the persistent VMEM
+    scratch, and  s += v[rows]ᵀ (J[rows, cols] v[cols])  into SMEM — the
+    tile-local partials of  s = vᵀJv  sum to the exact total because the
+    grid covers every tile exactly once.
+    Pass 1: out[rows, cols] = scale·J + coef(s)·u_rows u_colsᵀ, with the
+    coefficient math (Lemma 3.1 positive denominator) done in fp32 on the
+    scalar unit.  u lives in VMEM for the whole grid; only J tiles stream.
+    """
+    p, i, k = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+
+    @pl.when(p == 0)
+    def _accumulate():
+        t = jnp.dot(j_ref[...].astype(jnp.float32), vc_ref[...],
+                    preferred_element_type=jnp.float32)
+
+        @pl.when(k == 0)
+        def _init_u():
+            u_ref[pl.ds(i * block, block), :] = jnp.zeros_like(t)
+
+        u_ref[pl.ds(i * block, block), :] += t
+
+        @pl.when((i == 0) & (k == 0))
+        def _init_s():
+            s_ref[0, 0] = 0.0
+
+        s_ref[0, 0] += jnp.sum(vr_ref[...] * t)
+
+    @pl.when(p == 1)
+    def _write():
+        s = s_ref[0, 0]
+        if variant == "paper":
+            scale = gamma
+            coef = (1.0 - gamma) / (
+                gamma ** 2 * (1.0 + gamma * (1.0 - gamma) * s))
+        elif variant == "exact_smw":
+            scale = 1.0 / gamma
+            coef = -(1.0 - gamma) / (gamma * (gamma + (1.0 - gamma) * s))
+        else:
+            raise ValueError(variant)
+        outer = jnp.dot(u_ref[pl.ds(i * block, block), :],
+                        u_ref[pl.ds(k * block, block), :].T,
+                        preferred_element_type=jnp.float32)
+        out_ref[...] = (scale * j_ref[...].astype(jnp.float32)
+                        + coef * outer).astype(out_ref.dtype)
+
+
+def fused_smw(j: jnp.ndarray, v: jnp.ndarray, *, gamma: float,
+              variant: str = "paper", block: int = DEFAULT_BLOCK,
+              interpret: bool = False) -> jnp.ndarray:
+    """One-dispatch SMW inverse update (Alg. 1 line 7/8, Eq. 5/6).
+
+    J: (d, d) any dtype, v: (d, 1) fp32, d a block multiple (ops.py pads).
+    Returns  scale·J + coef(vᵀJv)·(Jv)(Jv)ᵀ  in J's dtype.
+    """
+    d = j.shape[0]
+    assert d % block == 0, f"pad to block multiple ({d} % {block})"
+    g = d // block
+    return pl.pallas_call(
+        functools.partial(_fused_smw_kernel, gamma=gamma, variant=variant,
+                          block=block),
+        grid=(2, g, g),
+        in_specs=[
+            pl.BlockSpec((block, block), lambda p, i, k: (i, k)),
+            pl.BlockSpec((block, 1), lambda p, i, k: (i, 0)),
+            pl.BlockSpec((block, 1), lambda p, i, k: (k, 0)),
+        ],
+        out_specs=pl.BlockSpec((block, block), lambda p, i, k: (i, k)),
+        out_shape=jax.ShapeDtypeStruct((d, d), j.dtype),
+        scratch_shapes=[pltpu.VMEM((d, 1), jnp.float32),
+                        pltpu.SMEM((1, 1), jnp.float32)],
+        interpret=interpret,
+    )(j, v, v)

@@ -38,6 +38,25 @@ def smw_rank1_update_ref(j_inv: jnp.ndarray, v: jnp.ndarray, gamma: float,
     return new.astype(j_inv.dtype)
 
 
+def smw_rank1_update_banked_ref(j: jnp.ndarray, v: jnp.ndarray, gamma: float,
+                                variant: str = "paper") -> jnp.ndarray:
+    """Banked oracle: per-slice (chained rank-r) SMW over flattened leading
+    dims of j (*lead, d, d) / v (*lead, [r,] d)."""
+    d = j.shape[-1]
+    lead = j.shape[:len(j.shape) - 2]
+    jf = j.reshape((-1, d, d))
+    vf = v.reshape((jf.shape[0],) + v.shape[len(lead):])
+    outs = []
+    for i in range(jf.shape[0]):
+        ji, vi = jf[i], vf[i]
+        if vi.ndim == 1:
+            vi = vi[None]
+        for r in range(vi.shape[0]):
+            ji = smw_rank1_update_ref(ji, vi[r], gamma, variant)
+        outs.append(ji)
+    return jnp.stack(outs).reshape(j.shape)
+
+
 def two_sided_precondition_ref(l_inv: jnp.ndarray, r_inv: jnp.ndarray,
                                g_w: jnp.ndarray) -> jnp.ndarray:
     """ΔW = R⁻¹ G L⁻¹ (fp32)."""

@@ -30,7 +30,8 @@ import jax.numpy as jnp
 
 from repro.configs import registry
 from repro.core import firstorder
-from repro.core.mkor import MKORConfig, mkor, mkor_h
+from repro.core import stats as statlib
+from repro.core.mkor import MKORConfig, manifest_for, mkor, mkor_h
 from repro.launch import hlo_analysis, mesh as mesh_lib
 from repro.models import model as model_lib
 from repro.models.config import INPUT_SHAPES, InputShape, ModelConfig
@@ -66,6 +67,14 @@ def input_specs(cfg: ModelConfig, shape: InputShape) -> Dict[str, Any]:
     cache = jax.eval_shape(partial(
         model_lib.init_decode_cache, cfg, shape.global_batch, shape.seq_len))
     return {"tokens": tokens, "cache": cache}
+
+
+def factor_bucket_report(params_sds, mcfg: MKORConfig = MKORConfig()):
+    """Per-bucket factor FLOPs/bytes for the MKOR bank layout (DESIGN.md
+    §2).  Works on ShapeDtypeStructs — no arrays are allocated."""
+    fbytes = jnp.dtype(mcfg.factor_dtype).itemsize
+    return [statlib.bucket_cost(b, fbytes)
+            for b in manifest_for(params_sds, mcfg)]
 
 
 def active_param_counts(cfg: ModelConfig, params_sds) -> Dict[str, int]:
@@ -149,6 +158,8 @@ def lower_one(cfg: ModelConfig, shape: InputShape, *, multi_pod: bool,
     t_compile = time.time() - t0
 
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):      # older jax: list of one dict
+        cost = cost[0] if cost else {}
     try:
         mem = compiled.memory_analysis()
         mem_info = {
@@ -167,6 +178,9 @@ def lower_one(cfg: ModelConfig, shape: InputShape, *, multi_pod: bool,
     ana = hlo_analysis.analyze(hlo)          # trip-count aware, per chip
     roof = hlo_analysis.roofline(ana["flops"], ana["bytes"],
                                  ana["collective_total_bytes"])
+
+    factor_buckets = factor_bucket_report(params_sds) \
+        if mode == "train" and optimizer in ("mkor", "mkor_h") else []
 
     counts = active_param_counts(cfg, params_sds)
     n_tokens = shape.global_batch * (shape.seq_len if mode != "decode" else 1)
@@ -195,6 +209,7 @@ def lower_one(cfg: ModelConfig, shape: InputShape, *, multi_pod: bool,
         "useful_flops_ratio": (model_flops / (ana["dot_flops"] * n_chips))
         if ana["dot_flops"] else None,
         "params": counts,
+        "factor_buckets": factor_buckets,
         "t_lower_s": t_lower,
         "t_compile_s": t_compile,
     }
@@ -202,7 +217,15 @@ def lower_one(cfg: ModelConfig, shape: InputShape, *, multi_pod: bool,
 
 def format_row(r: Dict[str, Any]) -> str:
     roof = r["roofline"]
+    fb = r.get("factor_buckets") or []
+    fb_note = ""
+    if fb:
+        flops = sum(b["smw_flops_per_inv"] for b in fb)
+        mem = sum(b["factor_bytes"] for b in fb)
+        fb_note = (f"buckets={len(fb)} "
+                   f"smw={flops:.2e}F factors={mem / 2**30:.2f}GiB ")
     return (f"{r['arch']:17s} {r['shape']:12s} {r['mesh']:8s} "
+            f"{fb_note}"
             f"flops={r['flops']:.3e} bytes={r['bytes_accessed']:.3e} "
             f"coll={r['collective_total_bytes']:.3e} "
             f"compute={roof['compute_s']*1e3:8.2f}ms "

@@ -121,8 +121,25 @@ def spec_for(path: Sequence[Any], shape: Tuple[int, ...], mesh: Mesh,
         return P(*spec)
 
     if leaf in ("l_inv", "r_inv", "l_cov", "r_cov") and nd >= 2:
+        # Bank-aware factor sharding (DESIGN.md §2/§6): factor banks carry
+        # leading (n_layers_in_bucket, *stack) dims.  Prefer sharding the
+        # first divisible bank/stack dim over the FSDP data axis — then each
+        # shard holds whole (d, d) factor slices, so the banked vmapped SMW
+        # (matvec + rank-1 write per slice) runs with ZERO collectives for
+        # replicated rank-1 vectors.  Factor rows still go over "model"
+        # (the SM update shards along rows at no extra traffic).  Only when
+        # no bank/stack dim divides do we fall back to 2-D (rows x cols)
+        # factor sharding to keep huge per-layer factors FSDP-resident.
+        banked = False
+        for i in range(nd - 2):
+            if shape[i] > 1 and _divisible(shape[i], fsize) \
+                    and spec[i] is None:
+                spec[i] = fsdp
+                banked = True
+                break
         set_from_end(2, axes.model, msize)              # factor rows over TP
-        set_from_end(1, fsdp, fsize)                    # cols over FSDP
+        if not banked:
+            set_from_end(1, fsdp, fsize)                # cols over FSDP
         return P(*spec)
 
     if leaf in ("conv_w", "conv_b", "D"):               # mamba channel dims

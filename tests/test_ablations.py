@@ -8,7 +8,7 @@ import numpy as np
 
 from repro.configs import registry
 from repro.core import lamb
-from repro.core.mkor import MKORConfig, mkor
+from repro.core.mkor import MKORConfig, factor_slices, mkor
 from repro.data import pipeline
 from repro.models import model as model_lib
 from repro.training import loop as train_lib
@@ -20,19 +20,21 @@ def _one_step(cfg, mcfg=MKORConfig(inv_freq=1)):
     step = jax.jit(train_lib.make_train_step(cfg, opt))
     state = opt.init(params)
     ds = pipeline.make_dataset(cfg, global_batch=2, seq_len=32)
-    params, state, m = step(params, state, pipeline.make_batch(ds, 0))
-    return state, float(m["loss"])
+    new_params, state, m = step(params, state, pipeline.make_batch(ds, 0))
+    return params, state, float(m["loss"])
 
 
 def test_per_expert_factors_shapes_and_training():
     cfg = registry.get_config("mixtral-8x22b").reduced()
     cfg = dataclasses.replace(
         cfg, moe=dataclasses.replace(cfg.moe, per_expert_factors=True))
-    state, loss = _one_step(cfg)
+    mcfg = MKORConfig(inv_freq=1)
+    params, state, loss = _one_step(cfg, mcfg)
     assert np.isfinite(loss)
-    moe_keys = [k for k in state["factors"] if "mlp/in" in k]
+    factors = factor_slices(state, params, mcfg)
+    moe_keys = [k for k in factors if "mlp/in" in k]
     assert moe_keys
-    l_inv = state["factors"][moe_keys[0]]["l_inv"]
+    l_inv = factors[moe_keys[0]]["l_inv"]
     # (repeats, experts, d_ff, d_ff): one factor pair per expert
     assert l_inv.ndim == 4
     assert l_inv.shape[1] == cfg.moe.n_experts
@@ -40,10 +42,12 @@ def test_per_expert_factors_shapes_and_training():
 
 def test_shared_factors_are_default_and_smaller():
     cfg = registry.get_config("mixtral-8x22b").reduced()
-    state, loss = _one_step(cfg)
+    mcfg = MKORConfig(inv_freq=1)
+    params, state, loss = _one_step(cfg, mcfg)
     assert np.isfinite(loss)
-    moe_keys = [k for k in state["factors"] if "mlp/in" in k]
-    l_inv = state["factors"][moe_keys[0]]["l_inv"]
+    factors = factor_slices(state, params, mcfg)
+    moe_keys = [k for k in factors if "mlp/in" in k]
+    l_inv = factors[moe_keys[0]]["l_inv"]
     assert l_inv.ndim == 3                  # (repeats, d_ff, d_ff) shared
 
 
@@ -51,7 +55,7 @@ def test_exact_smw_variant_trains():
     """The beyond-paper exact-SMW inverse (true NGD with rank-1 EMA'd
     covariance) runs end-to-end on a full model."""
     cfg = registry.get_config("minicpm-2b").reduced()
-    state, loss = _one_step(
+    _, state, loss = _one_step(
         cfg, MKORConfig(inv_freq=1, variant="exact_smw"))
     assert np.isfinite(loss)
 

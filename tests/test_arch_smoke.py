@@ -58,7 +58,8 @@ def test_one_train_step(arch):
     for a, b in zip(jax.tree.leaves(new_params), jax.tree.leaves(params)):
         assert a.shape == b.shape and a.dtype == b.dtype
     # MKOR saw second-order layers
-    assert len(state["factors"]) > 0, "no layer got second-order treatment"
+    assert len(state["factor_banks"]) > 0, \
+        "no layer got second-order treatment"
 
 
 @pytest.mark.parametrize("arch", registry.ASSIGNED + ["bert-large"])
@@ -77,6 +78,7 @@ def test_forward_logit_shapes(arch):
     assert aux["stats"], "stat capture returned nothing"
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch",
                          [a for a in registry.ASSIGNED
                           if a not in ("whisper-base", "pixtral-12b")]
@@ -99,6 +101,7 @@ def test_loss_decreases_over_steps(arch):
     assert min(losses[-3:]) < losses[0], f"no learning: {losses}"
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", registry.ASSIGNED)
 def test_decode_steps(arch):
     """Prefill + 3 decode steps with finite logits (every decoder arch)."""

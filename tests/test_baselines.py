@@ -78,6 +78,7 @@ def _train(opt, steps=60, d_in=64):
     return losses
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("make_opt", [
     lambda: kfac(firstorder.sgd(1e-2, momentum=0.9),
                  KFACConfig(inv_freq=5, exclude=())),
@@ -91,6 +92,7 @@ def test_second_order_baselines_converge(make_opt):
     assert losses[-1] < 0.5 * losses[0], f"no convergence: {losses[::10]}"
 
 
+@pytest.mark.slow
 def test_kfac_beats_sgd_in_steps():
     """At a large LR (where curvature matters) damped KFAC out-converges
     momentum-SGD on the autoencoder."""

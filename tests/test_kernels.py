@@ -98,12 +98,86 @@ def test_two_sided_precondition_expert_broadcast():
     np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
 
 
-def test_pallas_path_matches_jnp_path_in_mkor():
-    """MKOR with use_pallas=True produces the same update as the jnp path."""
+@pytest.mark.parametrize("variant", ["paper", "exact_smw"])
+def test_pallas_path_matches_jnp_path_in_mkor(variant):
+    """MKOR with use_pallas=True produces the same update as the jnp path
+    in core/mkor.py — for the paper variant AND the beyond-paper exact-SMW
+    (the coef/scale pair differs between them)."""
     from repro.core.mkor import smw_rank1_update as jnp_smw
     d = 96
     j = _pd_matrix(jax.random.key(5), d, jnp.float32)
     v = jax.random.normal(jax.random.key(6), (d,), jnp.float32)
-    got = ops.smw_rank1_update(j, v, gamma=0.9, interpret=True)
-    want = jnp_smw(j, v, 0.9)
+    got = ops.smw_rank1_update(j, v, gamma=0.9, variant=variant,
+                               interpret=True)
+    want = jnp_smw(j, v, 0.9, variant=variant)
     np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------- #
+# Fused SMW kernel + factor-bank entry points
+# ---------------------------------------------------------------------- #
+@pytest.mark.parametrize("d,blk", [(64, 64), (256, 128), (256, 256)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("variant", ["paper", "exact_smw"])
+def test_fused_smw_kernel_matches_ref(d, blk, dtype, variant):
+    """Raw fused kernel (single pallas_call: matvec + s + rank-1 write)
+    vs the oracle, at block-multiple dims."""
+    j = _pd_matrix(jax.random.key(d), d, dtype)
+    v = jax.random.normal(jax.random.key(d + 7), (d, 1), jnp.float32)
+    got = rk.fused_smw(j, v, gamma=0.9, variant=variant, block=blk,
+                       interpret=True)
+    want = ref.smw_rank1_update_ref(j, v[:, 0], 0.9, variant)
+    tol = 5e-2 if dtype == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(got.astype(jnp.float32),
+                               want.astype(jnp.float32), rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("lead", [(3,), (2, 3)])
+@pytest.mark.parametrize("variant", ["paper", "exact_smw"])
+def test_banked_smw_matches_ref(lead, variant):
+    """Bank-dim batched entry (vmapped fused kernel) vs the banked oracle,
+    with stacked leading dims and a non-block-multiple d."""
+    d = 100
+    n = int(np.prod(lead))
+    j = jnp.stack([_pd_matrix(jax.random.key(i), d, jnp.float32)
+                   for i in range(n)]).reshape(lead + (d, d))
+    v = jax.random.normal(jax.random.key(99), lead + (d,), jnp.float32)
+    got = ops.smw_rank1_update_banked(j, v, gamma=0.9, variant=variant,
+                                      interpret=True)
+    want = ref.smw_rank1_update_banked_ref(j, v, 0.9, variant)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_banked_smw_rank_r():
+    """Banked entry chains rank-r stats per slice (paper §4)."""
+    lead, r, d = (4,), 2, 64
+    j = jnp.stack([_pd_matrix(jax.random.key(i), d, jnp.float32)
+                   for i in range(4)])
+    v = jax.random.normal(jax.random.key(5), lead + (r, d), jnp.float32)
+    got = ops.smw_rank1_update_banked(j, v, gamma=0.9, interpret=True)
+    want = ref.smw_rank1_update_banked_ref(j, v, 0.9)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_pick_block_minimizes_padding():
+    """_pick_block picks the MXU-aligned block with the least padded size
+    (ties to the larger block), never the old any-block-smaller-than-d
+    rule; sub-128 blocks are only allowed for d <= 128 (TPU lane floor)."""
+    cases = {
+        300: 128,   # old rule: 256 -> pad 512 (~2.9x FLOPs); now 384
+        384: 128,   # divides exactly at 128
+        512: 256,   # every candidate divides -> largest wins
+        1000: 256,  # 1024 either way -> larger block wins the tie
+        100: 8,     # old rule: 64 -> pad 128; now 104
+        128: 128,
+        8: 8,
+        260: 128,
+    }
+    for d, want in cases.items():
+        got = ops._pick_block(d)
+        assert got == want, (d, got, want)
+        padded = -(-d // got) * got
+        aligned = (256, 128) if d > 128 else (128, 64, 32, 16, 8)
+        for b in aligned:
+            assert padded <= -(-d // b) * b, \
+                f"d={d}: block {got} pads to {padded}, {b} is tighter"

@@ -3,7 +3,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip(
+    "hypothesis",
+    reason="optional dev dependency (requirements-dev.txt); the property "
+           "suite is skipped, not errored, when it is absent")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.mkor import (rescale_update, smw_rank1_update, stabilize)
 from repro.launch import hlo_analysis

@@ -70,8 +70,27 @@ def test_router_replicated():
 
 
 def test_factor_rows_sharded():
+    # stack dim 40 doesn't divide data=16 -> 2-D factor sharding fallback
     s = spec(("factors", "x", "l_inv"), (40, 16384, 16384))
     assert s == P(None, "model", "data")
+
+
+def test_factor_bank_dim_sharded_over_data():
+    """Bank-aware rule: a divisible bank/stack dim takes the data axis and
+    the factor matrices stay whole per shard (rows over model only)."""
+    s = spec(("factor_banks", "4096x4096", "l_inv"), (48, 4096, 4096))
+    assert s == P("data", "model", None)
+    # bank dim indivisible but stack dim divisible -> stack takes data
+    s = spec(("factor_banks", "1024x1024_s32", "r_inv"), (3, 32, 4096, 4096))
+    assert s == P(None, "data", "model", None)
+    # nothing divisible in the lead dims -> 2-D fallback on the factor dims
+    s = spec(("factor_banks", "2048x2048_s5", "l_inv"), (3, 5, 2048, 2048))
+    assert s == P(None, None, "model", "data")
+
+
+def test_factor_2d_unchanged():
+    s = spec(("factors", "x", "l_cov"), (16384, 16384))
+    assert s == P("model", "data")
 
 
 def test_expert_weights():
