@@ -1,0 +1,12 @@
+# Single verification gate (ROADMAP.md tier-1 + launcher smokes).
+.PHONY: verify test bench-step-time
+
+verify:
+	bash scripts/verify.sh
+
+# tier-1 only (the fast suite; pytest.ini excludes slow-marked tests)
+test:
+	PYTHONPATH=src python -m pytest -x -q
+
+bench-step-time:
+	PYTHONPATH=src python -m benchmarks.step_time

@@ -28,20 +28,29 @@ STEPS = 60
 TARGET_DROP = 0.8
 
 
+CHUNK = 10
+
+
 def run(name, opt, cfg, steps=STEPS):
+    """Scan-chunked runner (training/loop.py train_epoch): one dispatch and
+    one metrics fetch per CHUNK steps; per-step time is the per-chunk wall
+    time divided by the chunk length (first chunk excluded — compile)."""
     params = model_lib.init_params(jax.random.key(0), cfg)
-    step_fn = jax.jit(train_lib.make_train_step(cfg, opt))
+    step_fn = train_lib.make_train_step(cfg, opt)
+    runner = train_lib.make_chunk_runner(step_fn)
     state = opt.init(params)
     ds = pipeline.make_dataset(cfg, global_batch=8, seq_len=64)
     losses, ts = [], []
-    for i in range(steps):
-        batch = pipeline.make_batch(ds, i)
+    for i in range(0, steps, CHUNK):
+        n = min(CHUNK, steps - i)
+        stacked = train_lib.stack_batches(
+            [pipeline.make_batch(ds, i + k) for k in range(n)])
         t0 = time.perf_counter()
-        params, state, m = step_fn(params, state, batch)
-        loss = float(m["loss"])
-        ts.append(time.perf_counter() - t0)
-        losses.append(loss)
-    return losses, float(np.median(ts[2:]))
+        params, state, m = runner(params, state, stacked)
+        m = jax.device_get(m)
+        ts.append((time.perf_counter() - t0) / n)
+        losses.extend(float(l) for l in m["loss"])
+    return losses, float(np.median(ts[1:] or ts))
 
 
 def main(steps=STEPS) -> None:

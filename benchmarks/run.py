@@ -11,13 +11,14 @@ import traceback
 
 from benchmarks import (breakdown, complexity, convergence, factor_bank,
                         inversion_frequency, lr_sensitivity, memory,
-                        quantization, rank1_error, roofline)
+                        quantization, rank1_error, roofline, step_time)
 
 ALL = {
     "complexity": complexity.main,              # Table 1
     "convergence": convergence.main,            # Fig 2 / Tables 2-3
     "breakdown": breakdown.main,                # Fig 3
     "factor_bank": factor_bank.main,            # bank vs per-layer SMW
+    "step_time": step_time.main,                # loop/scan + spike/stagger
     "inversion_frequency": inversion_frequency.main,  # Fig 4
     "rank1_error": rank1_error.main,            # Fig 5 / §8.7
     "lr_sensitivity": lr_sensitivity.main,      # Table 5

@@ -1,0 +1,223 @@
+"""Steady-state step-time distribution (DESIGN.md §9).
+
+Two comparisons on the same reduced config, written to BENCH_step_time.json:
+
+* ``loop_vs_scan`` — the per-step Python loop (one dispatch + one blocking
+  ``float(metrics)`` device sync per step) vs the scan-chunk runner
+  (``training/loop.py make_chunk_runner``: one jitted ``lax.scan`` dispatch
+  and one metrics fetch per chunk).  Reported: mean/p50/p95 per-step ms and
+  the scan speedup on the mean.
+* ``spike_vs_stagger`` — MKOR's inversion schedule with ``stagger=False``
+  (all buckets invert on every inv_freq-th step: a step-time spike) vs the
+  staggered round-robin (each step carries ~1/inv_freq of the SMW work).
+  Reported: p50/p95, the p95/p50 ratio (the spike signature), and
+  spike_ratio = max/p50.  Both run the per-step loop so individual step
+  times are observable.
+
+  PYTHONPATH=src python -m benchmarks.step_time
+  PYTHONPATH=src python -m benchmarks.step_time --steps 24 --out BENCH.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit
+from repro.configs import registry
+from repro.core import firstorder
+from repro.core.mkor import MKORConfig, manifest_for, mkor
+from repro.data import pipeline
+from repro.models import model as model_lib
+from repro.training import loop as train_lib
+
+ARCH = "bert-large"
+INV_FREQ = 3        # == bucket count on bert-large reduced: perfect stagger
+
+
+def dist(ts) -> dict:
+    a = np.asarray(ts, np.float64) * 1e3
+    p50, p95 = np.percentile(a, 50), np.percentile(a, 95)
+    return {"mean_ms": float(a.mean()), "p50_ms": float(p50),
+            "p95_ms": float(p95), "p95_over_p50": float(p95 / p50),
+            "spike_ratio": float(a.max() / p50), "n_steps": len(a)}
+
+
+def _reduced(args):
+    # steady-state regime of interest: small per-step compute (dispatch
+    # overhead visible) with factor dims large enough that the SMW
+    # inversion cost is a real fraction of the step
+    return registry.get_config(args.arch).reduced(
+        d_model=args.d_model, d_ff=2 * args.d_model,
+        n_heads=2, n_kv_heads=2)
+
+
+def _setup(args, mcfg: MKORConfig):
+    cfg = _reduced(args)
+    opt = mkor(firstorder.lamb(1e-3), mcfg)
+    params = model_lib.init_params(jax.random.PRNGKey(0), cfg)
+    ds = pipeline.make_dataset(cfg, global_batch=args.batch,
+                               seq_len=args.seq)
+    step_fn = train_lib.make_train_step(cfg, opt)
+    return cfg, opt, params, ds, step_fn
+
+
+# Each timing runs `repeats` times from the same seed — identical programs
+# and data per step — and keeps the elementwise MINIMUM across repeats.
+# On a contended host the min is the noise-floor estimate of each step's
+# true cost; it preserves the schedule structure (which steps carry SMW
+# work) that contention jitter would otherwise bury.
+def _min_over_repeats(run_once, repeats: int):
+    runs = [np.asarray(run_once()) for _ in range(repeats)]
+    return np.minimum.reduce(runs).tolist()
+
+
+def spike_vs_stagger_times(args):
+    """Per-step wall times for the spike (stagger=False) and staggered
+    schedules, one per-step loop pass each, run back-to-back per repeat so
+    both see comparable noise windows; elementwise min across repeats
+    (identical programs + data per step) recovers the schedule structure."""
+    progs = {}
+    for name, stagger in (("spike", False), ("staggered", True)):
+        mcfg = MKORConfig(inv_freq=args.inv_freq, stagger=stagger)
+        cfg, opt, params0, ds, step_fn = _setup(args, mcfg)
+        progs[name] = (jax.jit(step_fn), opt, params0, ds)
+
+    def one_pass(name):
+        jit_step, opt, params0, ds = progs[name]
+        params, state = params0, opt.init(params0)
+        ts = []
+        for i in range(args.warmup + args.steps):
+            batch = pipeline.make_batch(ds, i)
+            t0 = time.perf_counter()
+            params, state, m = jit_step(params, state, batch)
+            _ = {k: float(v) for k, v in m.items()}   # train_loop's sync
+            ts.append(time.perf_counter() - t0)
+        return ts[args.warmup:]
+
+    def run_once():
+        return one_pass("spike") + one_pass("staggered")
+
+    both = _min_over_repeats(run_once, args.repeats)
+    return both[:args.steps], both[args.steps:]
+
+
+def loop_vs_scan_times(args, mcfg: MKORConfig):
+    """Per-step times for the per-step loop and the scan-chunk runner.
+
+    Each repeat runs the loop pass then the scan pass back-to-back — every
+    pass is a homogeneous stretch of one compiled program (no cache
+    thrashing between programs), while the loop/scan pair stays adjacent in
+    time so the min-filter sees comparable noise windows for both."""
+    cfg, opt, params0, ds, step_fn = _setup(args, mcfg)
+    jit_step = jax.jit(step_fn)
+    runner = train_lib.make_chunk_runner(step_fn, donate=False)
+    n_chunks = (args.warmup + args.steps) // args.chunk
+    warm_chunks = max(args.warmup // args.chunk, 1)
+
+    def run_once():
+        params, state, loop_ts = params0, opt.init(params0), []
+        for i in range(args.warmup + args.steps):
+            batch = pipeline.make_batch(ds, i)
+            t0 = time.perf_counter()
+            params, state, m = jit_step(params, state, batch)
+            _ = {k: float(v) for k, v in m.items()}   # train_loop's sync
+            if i >= args.warmup:
+                loop_ts.append(time.perf_counter() - t0)
+
+        params, state, scan_ts = params0, opt.init(params0), []
+        for c in range(n_chunks):
+            stacked = train_lib.stack_batches(
+                [pipeline.make_batch(ds, c * args.chunk + k)
+                 for k in range(args.chunk)])
+            t0 = time.perf_counter()
+            params, state, m = runner(params, state, stacked)
+            jax.device_get(m)                      # one sync per chunk
+            if c >= warm_chunks:
+                scan_ts.append(time.perf_counter() - t0)
+        return loop_ts, scan_ts
+
+    # Min-filter both runners at CHUNK granularity: a per-step minimum only
+    # needs one quiet ~10 ms window while a chunk needs a quiet
+    # chunk-times-longer one, so per-step minima would systematically
+    # favour the loop on a contended host.  For each chunk window keep the
+    # repeat with the lowest total; the loop's per-step times inside that
+    # window are kept as-is for the distribution stats.
+    reps = [run_once() for _ in range(args.repeats)]
+    loop_ts, scan_ts = [], []
+    for g in range(args.steps // args.chunk):
+        lo, hi = g * args.chunk, (g + 1) * args.chunk
+        best = min(range(args.repeats),
+                   key=lambda r: sum(reps[r][0][lo:hi]))
+        loop_ts.extend(reps[best][0][lo:hi])
+        scan_ts.extend([min(r[1][g] for r in reps) / args.chunk]
+                       * args.chunk)
+    return loop_ts, scan_ts
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default=ARCH)
+    ap.add_argument("--steps", type=int, default=36)
+    ap.add_argument("--warmup", type=int, default=6)
+    ap.add_argument("--batch", type=int, default=1)
+    ap.add_argument("--seq", type=int, default=8)
+    ap.add_argument("--d-model", type=int, default=128)
+    ap.add_argument("--chunk", type=int, default=6)
+    ap.add_argument("--inv-freq", type=int, default=INV_FREQ)
+    ap.add_argument("--repeats", type=int, default=4,
+                    help="identical reruns per timing; elementwise min "
+                         "filters host contention noise")
+    ap.add_argument("--out", default="BENCH_step_time.json")
+    args, _ = ap.parse_known_args()
+
+    staggered = MKORConfig(inv_freq=args.inv_freq, stagger=True)
+    n_buckets = len(manifest_for(
+        model_lib.init_params(jax.random.PRNGKey(0), _reduced(args)),
+        staggered))
+
+    loop_ts, scan_ts = loop_vs_scan_times(args, staggered)
+    loop_d, scan_d = dist(loop_ts), dist(scan_ts)
+    scan_d["chunk"] = args.chunk
+    spike_ts, stag_ts = spike_vs_stagger_times(args)
+    spike_d, stag_d = dist(spike_ts), dist(stag_ts)
+
+    result = {
+        "arch": f"{args.arch} (reduced, d_model={args.d_model})",
+        "backend": jax.default_backend(),
+        "repeats": args.repeats,
+        "batch": args.batch, "seq_len": args.seq,
+        "steps": args.steps, "warmup": args.warmup,
+        "inv_freq": args.inv_freq, "n_buckets": n_buckets,
+        "loop_vs_scan": {
+            "python_loop": loop_d,
+            "scan_chunk": scan_d,
+            "scan_speedup_mean": loop_d["mean_ms"] / scan_d["mean_ms"],
+        },
+        "spike_vs_stagger": {
+            "spike": spike_d,
+            "staggered": stag_d,
+            "p95_over_p50_improvement":
+                spike_d["p95_over_p50"] / stag_d["p95_over_p50"],
+        },
+    }
+    emit([{"runner": "python_loop", **loop_d},
+          {"runner": "scan_chunk", **{k: v for k, v in scan_d.items()}}],
+         "per-step wall time: loop vs scan-chunk runner")
+    emit([{"schedule": "spike", **spike_d},
+          {"schedule": "staggered", **stag_d}],
+         "per-step wall time: spike vs staggered inversion schedule")
+    print(f"# scan speedup (mean): "
+          f"{result['loop_vs_scan']['scan_speedup_mean']:.2f}x; "
+          f"p95/p50 spike->staggered: {spike_d['p95_over_p50']:.2f} -> "
+          f"{stag_d['p95_over_p50']:.2f}")
+    with open(args.out, "w") as f:
+        json.dump(result, f, indent=1)
+    print(f"# wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

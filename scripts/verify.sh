@@ -1,0 +1,27 @@
+#!/usr/bin/env bash
+# The single verification gate for this repo — the builder and CI run the
+# same command:  make verify  (or scripts/verify.sh directly).
+#
+# 1. tier-1 pytest: the fast suite from ROADMAP.md (slow-marked tests are
+#    excluded by pytest.ini);
+# 2. a one-config launch/dryrun.py smoke (AOT lower + compile against the
+#    production mesh, no arrays allocated);
+# 3. a 2-step launch/train.py smoke on a reduced config through the
+#    scan-chunk runner (real arrays, checkpointing path untouched).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1 pytest =="
+python -m pytest -x -q
+
+echo "== dryrun smoke (bert-large / train_4k) =="
+python -m repro.launch.dryrun --arch bert-large --shape train_4k \
+    --out "$(mktemp -d)/dryrun"
+
+echo "== 2-step train smoke (bert-large reduced) =="
+python -m repro.launch.train --arch bert-large --reduced --steps 2 \
+    --global-batch 2 --seq-len 16 --chunk 2 --log-every 1
+
+echo "== verify OK =="

@@ -47,6 +47,17 @@ static (pure function of tree structure + shapes) and is rebuilt at trace
 time, so bank slots never need to be stored in the jitted state.
 ``layout="per_layer"`` keeps the legacy dict-of-factors state and is the
 numerical reference the bank path is tested against (tests/test_mkor.py).
+
+Staggered inversions (DESIGN.md §9)
+-----------------------------------
+With ``stagger=True`` (the default) bucket b inverts on steps where
+``count % inv_freq == manifest[b].phase(inv_freq)`` — a static round-robin
+that carries ~1/inv_freq of the SMW work per step instead of spiking it all
+on every inv_freq-th step.  Each bucket still inverts exactly once per
+window (factor staleness <= inv_freq, same bound as the paper's global
+schedule); ``stagger=False`` restores the paper-exact spike.  The per-layer
+oracle runs the identical schedule (each layer inherits its bucket's
+phase), so layouts stay numerically interchangeable.
 """
 from __future__ import annotations
 
@@ -77,6 +88,11 @@ class MKORConfig:
     use_pallas: bool = False           # fused TPU kernels (kernels/)
     interpret: bool = False            # pallas interpret mode (CPU tests)
     layout: str = "bank"               # "bank" (bucketed) | "per_layer"
+    # Staggered inversion schedule (DESIGN.md §9): bucket b inverts on steps
+    # where count % inv_freq == phase[b] (static round-robin), spreading the
+    # SMW work across the window instead of spiking every inv_freq-th step.
+    # stagger=False is the paper-exact global schedule (all phases 0).
+    stagger: bool = True
     # MKOR-H (§3.2)
     hybrid: bool = False
     hybrid_ema_fast: float = 0.9
@@ -150,7 +166,14 @@ def precondition(l_inv: jnp.ndarray, r_inv: jnp.ndarray,
 
 def rescale_update(delta: jnp.ndarray, g_w: jnp.ndarray) -> jnp.ndarray:
     """Line 10: match the raw gradient's Frobenius norm (per stacked layer
-    slice — all dims except none here; caller vmaps over stack dims)."""
+    slice — all dims except none here; caller vmaps over stack dims).
+
+    The ε = 1e-30 guard on ‖ΔW‖ is the all-zero-slice escape: a zero
+    gradient slice gives ΔW = R⁻¹·0·L⁻¹ = 0 and ‖G‖ = ‖ΔW‖ = 0, so the
+    ratio degenerates to 0/0.  Clamping the denominator turns that into
+    0 · (0/ε) = 0 — the update stays exactly zero instead of NaN.  The
+    fused Pallas kernel uses the identical guard (kernels/precond.py
+    RESCALE_EPS)."""
     gn = jnp.sqrt(jnp.sum(jnp.square(g_w.astype(jnp.float32))))
     dn = jnp.sqrt(jnp.sum(jnp.square(delta)))
     return delta * (gn / jnp.maximum(dn, 1e-30))
@@ -235,29 +258,43 @@ def mkor(backend: GradientTransformation,
         from repro.kernels import ops as kops
         smw_fn = partial(kops.smw_rank1_update, gamma=cfg.gamma,
                          variant=cfg.variant, interpret=cfg.interpret)
-        precond_fn = partial(kops.two_sided_precondition,
-                             interpret=cfg.interpret)
 
         def banked_smw(j, v, n_lead):
             return kops.smw_rank1_update_banked(
                 j, v, gamma=cfg.gamma, variant=cfg.variant,
                 interpret=cfg.interpret)
+
+        def precond_slice(linv, rinv, gw):
+            # fused precondition + Frobenius rescale, one dispatch per
+            # slice (kernels/precond.py; extra dims / VMEM overflow fall
+            # back to the two-matmul path inside)
+            delta = kops.fused_precondition(linv, rinv, gw,
+                                            rescale=cfg.rescale,
+                                            interpret=cfg.interpret)
+            return delta.astype(gw.dtype)
+
+        def banked_precond(l, r, gw, n_lead):
+            delta = kops.fused_precondition_banked(
+                l, r, gw, rescale=cfg.rescale, interpret=cfg.interpret)
+            return delta.astype(gw.dtype)
     else:
         smw_fn = partial(smw_update_maybe_rank_r, gamma=cfg.gamma,
                          variant=cfg.variant)
-        precond_fn = precondition
 
         def banked_smw(j, v, n_lead):
             return _vmap_over_stack(smw_fn, n_lead)(j, v)
 
+        def precond_slice(linv, rinv, gw):
+            delta = precondition(linv, rinv, gw)
+            if cfg.rescale:
+                delta = rescale_update(delta, gw)
+            return delta.astype(gw.dtype)
+
+        def banked_precond(l, r, gw, n_lead):
+            return _vmap_over_stack(precond_slice, n_lead)(l, r, gw)
+
     stab_slice = partial(stabilize, threshold=cfg.stabilizer_threshold,
                          zeta=cfg.zeta)
-
-    def precond_slice(linv, rinv, gw):
-        delta = precond_fn(linv, rinv, gw)
-        if cfg.rescale:
-            delta = rescale_update(delta, gw)
-        return delta.astype(gw.dtype)
 
     # ------------------------------------------------------------------ #
     # init
@@ -295,9 +332,12 @@ def mkor(backend: GradientTransformation,
     # ------------------------------------------------------------------ #
     # per-layer update (legacy layout — the bank path's numerical oracle)
     # ------------------------------------------------------------------ #
-    def update_per_layer(grads, state, params, stats, do_inv, so_on):
+    def update_per_layer(grads, state, params, stats, do_inv_fn, so_on):
         layer_paths = {statlib.path_str(p): p
                        for p in statlib.iter_dense_layers(grads)}
+        phases = statlib.layer_phases(
+            manifest_for(params if params is not None else grads, cfg),
+            cfg.inv_freq, cfg.stagger)
         new_factors = {}
         out = grads
         for key, fac in state["factors"].items():
@@ -313,14 +353,19 @@ def mkor(backend: GradientTransformation,
 
             l_inv, r_inv = fac["l_inv"], fac["r_inv"]
 
-            # --- lines 5-8: stabilize + SM factor update (every inv_freq) -
+            # --- lines 5-8: stabilize + SM factor update, on this layer's
+            # scheduled steps only.  lax.cond (not where) so non-inverting
+            # steps skip the SMW work entirely — the staggered schedule
+            # (DESIGN.md §9) relies on the skip for its flat step time. ----
             if a_vec is not None and g_vec is not None:
-                stab = _vmap_over_stack(stab_slice, ns)
-                upd = _vmap_over_stack(smw_fn, ns)
-                l_new = upd(stab(l_inv), g_vec)
-                r_new = upd(stab(r_inv), a_vec)
-                l_inv = jnp.where(do_inv, l_new, l_inv)
-                r_inv = jnp.where(do_inv, r_new, r_inv)
+                def inv_branch(l, r, gv=g_vec, av=a_vec, ns=ns):
+                    stab = _vmap_over_stack(stab_slice, ns)
+                    upd = _vmap_over_stack(smw_fn, ns)
+                    return upd(stab(l), gv), upd(stab(r), av)
+
+                l_inv, r_inv = jax.lax.cond(
+                    do_inv_fn(phases.get(key, 0)), inv_branch,
+                    lambda l, r: (l, r), l_inv, r_inv)
             new_factors[key] = {"l_inv": l_inv, "r_inv": r_inv}
 
             # --- line 9-10: precondition + rescale ----------------------- #
@@ -334,14 +379,16 @@ def mkor(backend: GradientTransformation,
     # bucketed bank update: one vmapped stabilize → SMW → precondition →
     # rescale pipeline per bucket (DESIGN.md §2)
     # ------------------------------------------------------------------ #
-    def update_banked(grads, state, params, stats, do_inv, so_on):
+    def update_banked(grads, state, params, stats, do_inv_fn, so_on):
         manifest = manifest_for(params if params is not None else grads,
                                  cfg)
+        phases = statlib.bucket_phases(manifest, cfg.inv_freq, cfg.stagger)
         new_banks = {}
         out = grads
         for bucket in manifest:
             bank = state["factor_banks"][bucket.bucket_id]
             l_bank, r_bank = bank["l_inv"], bank["r_inv"]
+            do_inv = do_inv_fn(phases[bucket.bucket_id])
             ns = len(bucket.stack)
 
             g_ws, g_vecs, a_vecs = [], [], []
@@ -368,11 +415,16 @@ def mkor(backend: GradientTransformation,
                 r_sub = r_bank if whole else r_bank[idx]
                 gv = jnp.stack([g_vecs[i] for i in slots])
                 av = jnp.stack([a_vecs[i] for i in slots])
-                stab = _vmap_over_stack(stab_slice, ns + 1)
-                l_new = banked_smw(stab(l_sub), gv, ns + 1)
-                r_new = banked_smw(stab(r_sub), av, ns + 1)
-                l_new = jnp.where(do_inv, l_new, l_sub)
-                r_new = jnp.where(do_inv, r_new, r_sub)
+
+                # lax.cond (not where): off-phase steps must skip the SMW
+                # work, or the staggered schedule has nothing to spread.
+                def inv_branch(l, r, gv=gv, av=av, ns=ns):
+                    stab = _vmap_over_stack(stab_slice, ns + 1)
+                    return (banked_smw(stab(l), gv, ns + 1),
+                            banked_smw(stab(r), av, ns + 1))
+
+                l_new, r_new = jax.lax.cond(
+                    do_inv, inv_branch, lambda l, r: (l, r), l_sub, r_sub)
                 if whole:
                     l_bank, r_bank = l_new, r_new
                 else:
@@ -381,11 +433,11 @@ def mkor(backend: GradientTransformation,
             new_banks[bucket.bucket_id] = {"l_inv": l_bank,
                                            "r_inv": r_bank}
 
-            # --- lines 9-10, banked: one vmapped two-sided precondition +
-            # rescale over (bank, *stack); extra dims broadcast inside. --- #
+            # --- lines 9-10, banked: one batched two-sided precondition +
+            # rescale over (bank, *stack); extra dims broadcast inside
+            # (the pallas path is the banked fused kernel entry). -------- #
             gw = jnp.stack(g_ws)
-            delta = _vmap_over_stack(precond_slice, ns + 1)(
-                l_bank, r_bank, gw)
+            delta = banked_precond(l_bank, r_bank, gw, ns + 1)
             delta = jnp.where(so_on, delta, gw)       # MKOR-H fallback
             for i, path in enumerate(bucket.paths):
                 out = statlib.tree_set(
@@ -402,12 +454,17 @@ def mkor(backend: GradientTransformation,
                 raise ValueError("MKOR-H needs the loss for switching")
             hybrid = _hybrid_update(hybrid, loss, count, cfg)
         so_on = hybrid["on"] if cfg.hybrid else jnp.ones((), jnp.bool_)
-        do_inv = so_on & (count % cfg.inv_freq == 0)
+
+        def do_inv_fn(phase):
+            # Staggered round-robin (DESIGN.md §9): phase is static per
+            # bucket, so every bucket inverts exactly once per inv_freq
+            # window and factor staleness stays <= inv_freq.
+            return so_on & (count % cfg.inv_freq == phase)
 
         step_fn = update_per_layer if cfg.layout == "per_layer" \
             else update_banked
         out, factor_state = step_fn(grads, state, params, stats,
-                                    do_inv, so_on)
+                                    do_inv_fn, so_on)
 
         # probes are stat taps: never step them, keep backend moments clean
         out = statlib.zero_probes(out)

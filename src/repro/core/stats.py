@@ -15,6 +15,7 @@ Conventions (see models/layers.py):
 """
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
@@ -131,13 +132,21 @@ def get_g_vec(grads, path: Path) -> Optional[jnp.ndarray]:
 class FactorBucket:
     """One shape bucket: every layer with identical (stack, extra, d_in,
     d_out) signature.  ``paths`` fixes the bank slot order (slot i of the
-    bank arrays belongs to ``paths[i]``)."""
+    bank arrays belongs to ``paths[i]``).  ``index`` is the bucket's
+    position in the manifest's sorted bucket order — the static anchor for
+    the staggered inversion schedule (DESIGN.md §9)."""
     bucket_id: str
     stack: Tuple[int, ...]      # probe-derived stack dims (scan L, experts)
     extra: Tuple[int, ...]      # w broadcast dims under shared factors (E,)
     d_in: int
     d_out: int
     paths: Tuple[Path, ...]
+    index: int = 0              # position in sorted bucket order
+
+    def phase(self, inv_freq: int) -> int:
+        """Round-robin inversion phase: this bucket inverts on steps where
+        ``count % inv_freq == phase`` (DESIGN.md §9)."""
+        return self.index % max(inv_freq, 1)
 
     @property
     def n_slots(self) -> int:
@@ -197,7 +206,33 @@ def build_bucket_manifest(
             stack=stack, extra=extra, d_in=d_in, d_out=d_out,
             paths=tuple(sorted(paths, key=path_str))))
     buckets.sort(key=lambda b: b.bucket_id)
+    buckets = [dataclasses.replace(b, index=i)
+               for i, b in enumerate(buckets)]
     return BucketManifest(tuple(buckets))
+
+
+def bucket_phases(manifest: BucketManifest, inv_freq: int,
+                  stagger: bool = True) -> Dict[str, int]:
+    """Per-bucket inversion phases ``{bucket_id: phase}`` (DESIGN.md §9).
+
+    With ``stagger=True`` bucket i gets phase ``i % inv_freq`` — a static
+    round-robin that spreads the SMW inversion work across the inv_freq
+    step window instead of spiking it all on ``count % inv_freq == 0``
+    steps.  Every bucket still inverts exactly once per window, so factor
+    staleness stays <= inv_freq, same as the paper's global schedule.
+    ``stagger=False`` is the paper-exact spike schedule (all phases 0)."""
+    if not stagger:
+        return {b.bucket_id: 0 for b in manifest}
+    return {b.bucket_id: b.phase(inv_freq) for b in manifest}
+
+
+def layer_phases(manifest: BucketManifest, inv_freq: int,
+                 stagger: bool = True) -> Dict[str, int]:
+    """Per-layer view of :func:`bucket_phases`: ``{path_str: phase}`` — each
+    layer inherits its bucket's phase, so the per-layer oracle runs the
+    identical schedule as the banked path."""
+    phases = bucket_phases(manifest, inv_freq, stagger)
+    return {ps: phases[b.bucket_id] for b in manifest for ps in b.path_strs}
 
 
 def bucket_cost(bucket: FactorBucket, factor_bytes: int = 2) -> Dict[str, Any]:

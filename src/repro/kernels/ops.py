@@ -10,8 +10,14 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import matmul as mm
+from repro.kernels import precond as pc
 from repro.kernels import rank1_smw as rk
 from repro.kernels import ref
+
+# fused_precondition falls back to the two-matmul path above this footprint
+# (the fused kernel keeps two (d_in, d_out) fp32 scratches + both factors
+# VMEM-resident; TPU VMEM is ~16 MB/core)
+_FUSED_PRECOND_VMEM_BUDGET = 12 * 2 ** 20
 
 
 def _pad_to(x: jnp.ndarray, block: int, dims) -> jnp.ndarray:
@@ -112,3 +118,71 @@ def two_sided_precondition(l_inv: jnp.ndarray, r_inv: jnp.ndarray,
         return jax.vmap(fn)(g_w)
     t = pallas_matmul(r_inv, g_w, block=block, interpret=interpret)
     return pallas_matmul(t, l_inv, block=block, interpret=interpret)
+
+
+def _fused_precond_fits(d_in_p: int, d_out_p: int, r_inv, l_inv) -> bool:
+    scratch = 2 * d_in_p * d_out_p * 4
+    factors = (d_in_p * d_in_p * r_inv.dtype.itemsize
+               + d_out_p * d_out_p * l_inv.dtype.itemsize)
+    return scratch + factors <= _FUSED_PRECOND_VMEM_BUDGET
+
+
+def fused_precondition(l_inv: jnp.ndarray, r_inv: jnp.ndarray,
+                       g_w: jnp.ndarray, *, rescale: bool = True,
+                       block: int = 0,
+                       interpret: bool = False) -> jnp.ndarray:
+    """Alg. 1 lines 9-10 in one dispatch: ΔW = R⁻¹ G L⁻¹ with the Frobenius
+    rescale reduction accumulated in the same kernel (kernels/precond.py).
+
+    g_w: (d_in, d_out) for the fused kernel.  Extra leading dims (experts
+    under shared factors) and VMEM-budget-exceeding shapes fall back to the
+    two-matmul path plus a jnp rescale; either way the rescale spans every
+    dim of the slice (the line-10 contract of core.mkor.rescale_update).
+    """
+    if g_w.ndim > 2 or not _fused_precond_fits(
+            _padded_size(g_w.shape[-2], block or _pick_block(g_w.shape[-2])),
+            _padded_size(g_w.shape[-1], block or _pick_block(g_w.shape[-1])),
+            r_inv, l_inv):
+        delta = two_sided_precondition(l_inv, r_inv, g_w, block=block,
+                                       interpret=interpret)
+        if rescale:
+            gf = g_w.astype(jnp.float32)
+            gn = jnp.sqrt(jnp.sum(gf * gf))
+            dn = jnp.sqrt(jnp.sum(delta * delta))
+            delta = delta * (gn / jnp.maximum(dn, pc.RESCALE_EPS))
+        return delta
+    d_in, d_out = g_w.shape
+    bi = block or _pick_block(d_in)
+    bj = block or _pick_block(d_out)
+    rp = _pad_to(r_inv, bi, (0, 1))
+    lp = _pad_to(l_inv, bj, (0, 1))
+    gp = _pad_to(_pad_to(g_w, bi, (0,)), bj, (1,))
+    out = pc.fused_precond(rp, gp, lp, rescale=rescale, block_i=bi,
+                           block_j=bj, interpret=interpret)
+    return out[:d_in, :d_out]
+
+
+def fused_precondition_banked(l_inv: jnp.ndarray, r_inv: jnp.ndarray,
+                              g_w: jnp.ndarray, *, rescale: bool = True,
+                              block: int = 0,
+                              interpret: bool = False) -> jnp.ndarray:
+    """Banked entry for the fused precondition kernel (DESIGN.md §9).
+
+    l_inv: (*lead, d_out, d_out), r_inv: (*lead, d_in, d_in), g_w:
+    (*lead, *extra, d_in, d_out) — lead = (n_bucket_layers, *stack).  Lead
+    dims are flattened and vmapped, one batched dispatch per bucket; the
+    per-slice Frobenius rescale spans the slice's extra dims (matching
+    core.mkor.rescale_update under ``_vmap_over_stack``).
+    """
+    lead = l_inv.shape[:-2]
+    assert r_inv.shape[:len(lead)] == lead, (r_inv.shape, l_inv.shape)
+    assert g_w.shape[:len(lead)] == lead, (g_w.shape, l_inv.shape)
+    fn = partial(fused_precondition, rescale=rescale, block=block,
+                 interpret=interpret)
+    if not lead:
+        return fn(l_inv, r_inv, g_w)
+    out = jax.vmap(fn)(
+        l_inv.reshape((-1,) + l_inv.shape[len(lead):]),
+        r_inv.reshape((-1,) + r_inv.shape[len(lead):]),
+        g_w.reshape((-1,) + g_w.shape[len(lead):]))
+    return out.reshape(lead + out.shape[1:])

@@ -63,3 +63,17 @@ def two_sided_precondition_ref(l_inv: jnp.ndarray, r_inv: jnp.ndarray,
     out = jnp.einsum("ij,...jk->...ik", r_inv.astype(jnp.float32),
                      g_w.astype(jnp.float32))
     return jnp.einsum("...ik,kl->...il", out, l_inv.astype(jnp.float32))
+
+
+def fused_precondition_ref(l_inv: jnp.ndarray, r_inv: jnp.ndarray,
+                           g_w: jnp.ndarray,
+                           rescale: bool = True) -> jnp.ndarray:
+    """Lines 9-10 oracle: einsum precondition + Frobenius rescale (the
+    guard epsilon matches core.mkor.rescale_update)."""
+    delta = two_sided_precondition_ref(l_inv, r_inv, g_w)
+    if not rescale:
+        return delta
+    gf = g_w.astype(jnp.float32)
+    gn = jnp.sqrt(jnp.sum(gf * gf))
+    dn = jnp.sqrt(jnp.sum(delta * delta))
+    return delta * (gn / jnp.maximum(dn, 1e-30))

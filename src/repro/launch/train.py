@@ -29,11 +29,17 @@ from repro.training import loop as train_lib
 
 
 def build_optimizer(name: str, lr, *, inv_freq: int = 10,
-                    use_pallas: bool = False):
+                    use_pallas: bool = False, platform: str = ""):
+    # Pallas interpret mode is a testing device, not an execution strategy:
+    # only a real TPU runs the compiled kernels (they use TPU memory
+    # spaces), every other backend interprets.  Before this gate,
+    # --use-pallas on a TPU silently ran the interpreter.
+    platform = platform or jax.default_backend()
+    interpret = use_pallas and platform != "tpu"
     backend = firstorder.lamb(lr)
     if name == "mkor":
         return mkor(backend, MKORConfig(
-            inv_freq=inv_freq, use_pallas=use_pallas, interpret=use_pallas))
+            inv_freq=inv_freq, use_pallas=use_pallas, interpret=interpret))
     if name == "mkor_h":
         return mkor_h(backend, MKORConfig(inv_freq=inv_freq))
     if name == "eva":
@@ -76,6 +82,10 @@ def main() -> None:
                     help="train the smoke-scale variant of the arch")
     ap.add_argument("--use-pallas", action="store_true",
                     help="MKOR via the Pallas kernels (interpret on CPU)")
+    ap.add_argument("--chunk", type=int, default=8,
+                    help="steps per jitted lax.scan chunk (1 = legacy "
+                         "per-step dispatch); log/ckpt cadence aligns to "
+                         "chunk boundaries")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--ckpt-every", type=int, default=0)
@@ -98,7 +108,8 @@ def main() -> None:
 
     ds = pipeline.make_dataset(cfg, global_batch=args.global_batch,
                                seq_len=args.seq_len, seed=args.seed)
-    step_fn = jax.jit(train_lib.make_train_step(cfg, opt))
+    step_fn = train_lib.make_train_step(cfg, opt)
+    runner = train_lib.make_chunk_runner(step_fn)
     opt_state = opt.init(params)
 
     start = 0
@@ -110,25 +121,40 @@ def main() -> None:
             start = int(meta.get("step", latest)) + 1
             print(f"restored checkpoint step {latest}")
 
-    history = []
-    t0 = time.time()
-    for i in range(start, args.steps):
-        batch = pipeline.make_batch(ds, i)
+    def make_batch(step: int):
+        batch = pipeline.make_batch(ds, step)
         if cfg.is_encoder_decoder:
             batch["frontend_embeds"] = pipeline.encoder_frames(
-                cfg, args.global_batch, i, args.seed)
-        params, opt_state, metrics = step_fn(params, opt_state, batch)
-        if i % args.log_every == 0 or i == args.steps - 1:
-            m = {k: float(v) for k, v in metrics.items()}
-            m["step"] = i
-            m["wall_s"] = time.time() - t0
-            history.append(m)
-            print(f"step {i:5d} loss={m['loss']:.4f} "
-                  f"gnorm={m['grad_norm']:.3f} ({m['wall_s']:.1f}s)")
-        if args.ckpt_dir and args.ckpt_every \
-                and i > 0 and i % args.ckpt_every == 0:
-            checkpointing.save(args.ckpt_dir, i, (params, opt_state),
-                               {"step": i, "loss": float(metrics["loss"])})
+                cfg, args.global_batch, step, args.seed)
+        return batch
+
+    history = []
+    t0 = time.time()
+    i = start
+    while i < args.steps:
+        # one jitted lax.scan per chunk (DESIGN.md §9); metrics come off
+        # device once per chunk, log/checkpoint at the chunk boundary
+        n = min(max(args.chunk, 1), args.steps - i)
+        stacked = train_lib.stack_batches([make_batch(i + k)
+                                           for k in range(n)])
+        params, opt_state, metrics = runner(params, opt_state, stacked)
+        metrics = jax.device_get(metrics)
+        wall = time.time() - t0
+        for k in range(n):
+            step = i + k
+            if step % args.log_every == 0 or step == args.steps - 1:
+                m = {key: float(v[k]) for key, v in metrics.items()}
+                m["step"] = step
+                m["wall_s"] = wall
+                history.append(m)
+                print(f"step {step:5d} loss={m['loss']:.4f} "
+                      f"gnorm={m['grad_norm']:.3f} ({m['wall_s']:.1f}s)")
+        prev, i = i, i + n
+        if args.ckpt_dir and args.ckpt_every and i < args.steps \
+                and (i // args.ckpt_every) > (prev // args.ckpt_every):
+            checkpointing.save(args.ckpt_dir, i - 1, (params, opt_state),
+                               {"step": i - 1,
+                                "loss": float(metrics["loss"][n - 1])})
     if args.ckpt_dir:
         checkpointing.save(args.ckpt_dir, args.steps - 1,
                            (params, opt_state), {"step": args.steps - 1})

@@ -1,8 +1,12 @@
 from repro.training.loop import (  # noqa: F401
     lm_loss,
+    make_chunk_runner,
     make_loss_fn,
     make_train_step,
+    stack_batches,
     train_batch_shapes,
+    train_epoch,
+    train_loop,
 )
 from repro.training.serving import (  # noqa: F401
     make_prefill_step,

@@ -9,10 +9,11 @@ line-4 AllReduce at O(d) volume.
 """
 from __future__ import annotations
 
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import firstorder
 from repro.core.firstorder import GradientTransformation
@@ -110,10 +111,91 @@ def make_train_step(cfg: ModelConfig, optimizer: GradientTransformation,
     return train_step
 
 
+# ----------------------------------------------------------------------- #
+# Scan-driven multi-step runner (DESIGN.md §9)
+#
+# The per-step Python loop pays one dispatch plus a blocking float(metrics)
+# device sync per step — at small scale that, not the optimizer, is the
+# bottleneck.  The chunk runner stacks `chunk` prefetched batches and runs
+# them under ONE jitted lax.scan with donated (params, opt_state): one
+# dispatch per chunk, metrics fetched off-device once per chunk.
+# ----------------------------------------------------------------------- #
+def stack_batches(batches: Sequence[Dict]) -> Dict:
+    """Stack a list of same-shaped batch dicts along a new leading scan dim
+    (host-side numpy: no device transfer until the runner call)."""
+    return jax.tree.map(lambda *xs: np.stack(xs), *batches)
+
+
+def make_chunk_runner(step_fn: Callable, *, donate: bool = True) -> Callable:
+    """Jit a ``(params, opt_state, stacked_batches) -> (params, opt_state,
+    stacked_metrics)`` runner that folds ``step_fn`` over the chunk with
+    ``lax.scan``.  (params, opt_state) are donated: the optimizer state
+    (factor banks included) is updated in place buffer-wise, so peak memory
+    stays at one copy regardless of chunk length."""
+
+    def run_chunk(params, opt_state, stacked):
+        def body(carry, batch):
+            params, opt_state = carry
+            params, opt_state, metrics = step_fn(params, opt_state, batch)
+            return (params, opt_state), metrics
+
+        (params, opt_state), metrics = jax.lax.scan(
+            body, (params, opt_state), stacked)
+        return params, opt_state, metrics
+
+    return jax.jit(run_chunk, donate_argnums=(0, 1) if donate else ())
+
+
+def train_epoch(step_fn: Callable, params, opt_state, batches, *,
+                chunk: int = 8, donate: bool = True,
+                runner: Optional[Callable] = None,
+                hooks: Optional[Callable[[int, Dict], None]] = None):
+    """Run ``batches`` through ``step_fn`` in jitted ``lax.scan`` chunks.
+
+    Metrics come off-device once per chunk (stacked), then are split into
+    per-step float dicts; ``hooks(step_idx, metrics)`` therefore fires in
+    bursts at chunk boundaries, not per step — checkpoint/log cadence
+    aligns to chunks (DESIGN.md §9).  A trailing partial chunk triggers one
+    extra compile at its shorter length.  Returns (params, opt_state,
+    history) like :func:`train_loop`.
+
+    Callers invoking this once per epoch should build the runner ONCE with
+    :func:`make_chunk_runner` and pass it via ``runner`` — a fresh runner
+    per call means a fresh jit cache, i.e. a full recompile of the scanned
+    step every epoch.
+    """
+    if runner is None:
+        runner = make_chunk_runner(step_fn, donate=donate)
+    history: List[Dict] = []
+
+    def flush(buf):
+        nonlocal params, opt_state
+        params, opt_state, metrics = runner(params, opt_state,
+                                            stack_batches(buf))
+        metrics = jax.device_get(metrics)          # one sync per chunk
+        for k in range(len(buf)):
+            m = {key: float(v[k]) for key, v in metrics.items()}
+            if hooks is not None:
+                hooks(len(history), m)
+            history.append(m)
+
+    buf = []
+    for batch in batches:
+        buf.append(batch)
+        if len(buf) == chunk:
+            flush(buf)
+            buf = []
+    if buf:
+        flush(buf)
+    return params, opt_state, history
+
+
 def train_loop(cfg: ModelConfig, optimizer: GradientTransformation,
                params, batches, *, jit: bool = True,
                hooks: Optional[Callable[[int, Dict], None]] = None):
-    """Simple single-host loop used by the examples and tests."""
+    """Simple single-host per-step loop, kept for the hook-based examples
+    (hooks fire synchronously every step; see train_epoch for the fast
+    scan-chunked path)."""
     step_fn = make_train_step(cfg, optimizer)
     if jit:
         step_fn = jax.jit(step_fn)

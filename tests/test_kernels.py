@@ -159,6 +159,81 @@ def test_banked_smw_rank_r():
     np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
 
 
+# ---------------------------------------------------------------------- #
+# Fused two-sided precondition + rescale kernel (Alg. 1 lines 9-10)
+# ---------------------------------------------------------------------- #
+@pytest.mark.parametrize("din,dout", [(32, 48), (64, 64), (100, 64),
+                                      (128, 128), (300, 200)])
+@pytest.mark.parametrize("rescale", [True, False])
+def test_fused_precondition_matches_einsum_reference(din, dout, rescale):
+    """ops.fused_precondition (padding wrapper over the 3-pass fused
+    kernel) vs core.mkor.precondition + rescale_update — both rescale
+    variants, including non-block-multiple dims."""
+    from repro.core.mkor import precondition, rescale_update
+    g = jax.random.normal(jax.random.key(0), (din, dout), jnp.float32)
+    l = _pd_matrix(jax.random.key(1), dout, jnp.float32)
+    r = _pd_matrix(jax.random.key(2), din, jnp.float32)
+    got = ops.fused_precondition(l, r, g, rescale=rescale, interpret=True)
+    want = precondition(l, r, g)
+    if rescale:
+        want = rescale_update(want, g)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(got, ref.fused_precondition_ref(
+        l, r, g, rescale=rescale), rtol=1e-4, atol=1e-4)
+
+
+def test_fused_precondition_bf16_factors():
+    """bf16 factors (the paper's half precision) through the fused kernel."""
+    from repro.core.mkor import precondition, rescale_update
+    din, dout = 96, 72
+    g = jax.random.normal(jax.random.key(0), (din, dout), jnp.float32)
+    l = _pd_matrix(jax.random.key(1), dout, jnp.bfloat16)
+    r = _pd_matrix(jax.random.key(2), din, jnp.bfloat16)
+    got = ops.fused_precondition(l, r, g, interpret=True)
+    want = rescale_update(precondition(l, r, g), g)
+    np.testing.assert_allclose(got, want, rtol=3e-2, atol=3e-2)
+
+
+def test_fused_precondition_expert_fallback():
+    """Extra leading dims (shared-factor experts) take the fallback path;
+    the rescale still spans the whole slice (all dims jointly)."""
+    from repro.core.mkor import precondition, rescale_update
+    e, din, dout = 3, 32, 48
+    g = jax.random.normal(jax.random.key(0), (e, din, dout), jnp.float32)
+    l = _pd_matrix(jax.random.key(1), dout, jnp.float32)
+    r = _pd_matrix(jax.random.key(2), din, jnp.float32)
+    got = ops.fused_precondition(l, r, g, interpret=True)
+    want = rescale_update(precondition(l, r, g), g)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_fused_precondition_banked():
+    """Banked entry: flattened lead dims vmapped over the fused kernel,
+    per-slice rescale."""
+    from repro.core.mkor import precondition, rescale_update
+    n, din, dout = 3, 40, 24
+    g = jax.random.normal(jax.random.key(0), (n, din, dout), jnp.float32)
+    l = jnp.stack([_pd_matrix(jax.random.key(i), dout, jnp.float32)
+                   for i in range(n)])
+    r = jnp.stack([_pd_matrix(jax.random.key(10 + i), din, jnp.float32)
+                   for i in range(n)])
+    got = ops.fused_precondition_banked(l, r, g, interpret=True)
+    for i in range(n):
+        want = rescale_update(precondition(l[i], r[i], g[i]), g[i])
+        np.testing.assert_allclose(got[i], want, rtol=1e-4, atol=1e-4)
+
+
+def test_fused_precondition_zero_gradient_is_zero():
+    """All-zero G: the ε guard in the rescale must return exact zeros
+    (no 0/0 NaN), matching rescale_update's documented guard path."""
+    din, dout = 32, 32
+    g = jnp.zeros((din, dout), jnp.float32)
+    l = _pd_matrix(jax.random.key(1), dout, jnp.float32)
+    r = _pd_matrix(jax.random.key(2), din, jnp.float32)
+    got = ops.fused_precondition(l, r, g, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got), 0.0)
+
+
 def test_pick_block_minimizes_padding():
     """_pick_block picks the MXU-aligned block with the least padded size
     (ties to the larger block), never the old any-block-smaller-than-d

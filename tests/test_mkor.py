@@ -94,6 +94,29 @@ def test_stabilizer_reduces_inf_norm():
     assert float(jnp.max(jnp.abs(out))) < float(jnp.max(jnp.abs(j)))
 
 
+def test_rescale_zero_gradient_slice_is_zero_not_nan():
+    """ε-guard path (documented on rescale_update): an all-zero gradient
+    slice yields ΔW = 0, so the Frobenius ratio degenerates to 0/0 — the
+    clamped denominator must return exact zeros, never NaN."""
+    g = jnp.zeros((12, 20))
+    delta = precondition(jnp.eye(20), jnp.eye(12), g)    # = 0
+    out = rescale_update(delta, g)
+    assert not np.isnan(np.asarray(out)).any()
+    np.testing.assert_array_equal(np.asarray(out), 0.0)
+    # nonzero delta against a zero gradient also collapses to zero
+    out2 = rescale_update(jnp.ones((12, 20)), g)
+    np.testing.assert_array_equal(np.asarray(out2), 0.0)
+
+
+def test_stabilizer_at_exactly_threshold_norm_is_identity():
+    """The trigger is strict (‖F⁻¹‖∞ > ε): a factor sitting exactly at the
+    threshold is neither blended nor rescaled."""
+    j = 50.0 * jnp.eye(8)
+    out = stabilize(j, threshold=50.0, zeta=0.9)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(j), rtol=0,
+                               atol=0)
+
+
 def test_rescale_matches_gradient_norm():
     g = jax.random.normal(jax.random.key(0), (12, 20))
     delta = 37.0 * jax.random.normal(jax.random.key(1), (12, 20))
@@ -336,6 +359,69 @@ def test_bank_pallas_matches_jnp():
         params = firstorder.apply_updates(params, u_p)
     _assert_trees_close(u_p, u_j, rtol=1e-4, atol=1e-5)
     _assert_trees_close(params, p_j, rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------- #
+# Staggered inversion schedule (DESIGN.md §9)
+# ---------------------------------------------------------------------- #
+@pytest.mark.parametrize("stagger", [True, False])
+def test_stagger_schedule_inverts_each_bucket_once_per_window(stagger):
+    """Trace do_inv per bucket over 2*inv_freq steps (observed as factor
+    changes): with stagger=True bucket b inverts exactly on the two steps
+    where count % inv_freq == phase[b]; with stagger=False every bucket
+    inverts on the global spike steps 0 and inv_freq."""
+    from repro.core import stats as statlib
+    from repro.core.mkor import manifest_for
+    inv_freq = 4
+    cfg = MKORConfig(inv_freq=inv_freq, stagger=stagger, exclude=())
+    opt = mkor(firstorder.sgd(1e-2, momentum=0.9), cfg)
+    params = baseline_net.init_autoencoder(jax.random.key(0), 96,
+                                           (48, 12, 48))
+    manifest = manifest_for(params, cfg)
+    assert len(manifest) >= 3          # stagger needs buckets to spread
+    phases = statlib.bucket_phases(manifest, inv_freq, stagger)
+    if stagger:
+        assert len(set(phases.values())) > 1
+    else:
+        assert set(phases.values()) == {0}
+
+    state = opt.init(params)
+    prev = factor_slices(state, params, cfg)
+    inverted = {b.bucket_id: [] for b in manifest}
+    for step in range(2 * inv_freq):
+        loss, grads, stats = baseline_net.grads_and_full_stats(
+            params, _autoencoder_batch(step))
+        upd, state = opt.update(grads, state, params=params, stats=stats,
+                                loss=loss)
+        cur = factor_slices(state, params, cfg)
+        for b in manifest:
+            key = b.path_strs[0]
+            if not np.allclose(np.asarray(cur[key]["l_inv"], np.float32),
+                               np.asarray(prev[key]["l_inv"], np.float32)):
+                inverted[b.bucket_id].append(step)
+        prev = cur
+        params = firstorder.apply_updates(params, upd)
+    for b in manifest:
+        want = [phases[b.bucket_id], phases[b.bucket_id] + inv_freq]
+        assert inverted[b.bucket_id] == want, \
+            (b.bucket_id, inverted[b.bucket_id], want)
+
+
+def test_stagger_banked_matches_per_layer_oracle():
+    """Banked-staggered == per-layer oracle with the same phases: updates,
+    params, and factors stay allclose across a multi-bucket run."""
+    params0 = baseline_net.init_autoencoder(jax.random.key(0), 96,
+                                            (48, 12, 48))
+    common = dict(inv_freq=3, stagger=True, exclude=())
+    p_b, s_b, u_b, cfg_b = _run_layout("bank", params0, 7, common)
+    p_l, s_l, u_l, cfg_l = _run_layout("per_layer", params0, 7, common)
+    _assert_trees_close(u_b, u_l)
+    _assert_trees_close(p_b, p_l)
+    fs_b = factor_slices(s_b, p_b, cfg_b)
+    fs_l = factor_slices(s_l, p_l, cfg_l)
+    assert set(fs_b) == set(fs_l)
+    for k in fs_b:
+        _assert_trees_close(fs_b[k], fs_l[k])
 
 
 def test_mkor_excluded_layers_passthrough():
