@@ -1,8 +1,12 @@
 # Single verification gate (ROADMAP.md tier-1 + launcher smokes).
-.PHONY: verify test bench-step-time
+.PHONY: verify verify-dist test bench-step-time
 
 verify:
 	bash scripts/verify.sh
+
+# shard_map/distributed suite on 8 fake CPU devices + a --dist train smoke
+verify-dist:
+	bash scripts/verify.sh dist
 
 # tier-1 only (the fast suite; pytest.ini excludes slow-marked tests)
 test:

@@ -9,9 +9,10 @@ import sys
 import time
 import traceback
 
-from benchmarks import (breakdown, complexity, convergence, factor_bank,
-                        inversion_frequency, lr_sensitivity, memory,
-                        quantization, rank1_error, roofline, step_time)
+from benchmarks import (breakdown, comm_volume, complexity, convergence,
+                        factor_bank, inversion_frequency, lr_sensitivity,
+                        memory, quantization, rank1_error, roofline,
+                        step_time)
 
 ALL = {
     "complexity": complexity.main,              # Table 1
@@ -19,6 +20,7 @@ ALL = {
     "breakdown": breakdown.main,                # Fig 3
     "factor_bank": factor_bank.main,            # bank vs per-layer SMW
     "step_time": step_time.main,                # loop/scan + spike/stagger
+    "comm_volume": comm_volume.main,            # rank-1 vs full-factor wire
     "inversion_frequency": inversion_frequency.main,  # Fig 4
     "rank1_error": rank1_error.main,            # Fig 5 / §8.7
     "lr_sensitivity": lr_sensitivity.main,      # Table 5

@@ -3,15 +3,33 @@
 # same command:  make verify  (or scripts/verify.sh directly).
 #
 # 1. tier-1 pytest: the fast suite from ROADMAP.md (slow-marked tests are
-#    excluded by pytest.ini);
+#    excluded by pytest.ini; tests/conftest.py pins 8 fake CPU devices so
+#    the shard_map/distributed paths are exercised);
 # 2. a one-config launch/dryrun.py smoke (AOT lower + compile against the
 #    production mesh, no arrays allocated);
 # 3. a 2-step launch/train.py smoke on a reduced config through the
 #    scan-chunk runner (real arrays, checkpointing path untouched).
+#
+#   scripts/verify.sh dist   (== make verify-dist) runs only the
+# distributed slice: the shard_map test file on 8 fake CPU devices plus a
+# 2-step --dist train smoke through the explicit-collective step.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+if [[ "${1:-}" == "dist" ]]; then
+    echo "== shard_map tests (8 fake CPU devices) =="
+    python -m pytest tests/test_dist.py -q
+
+    echo "== 2-step --dist train smoke (bert-large reduced, 8 workers) =="
+    python -m repro.launch.train --arch bert-large --reduced --steps 2 \
+        --global-batch 8 --seq-len 16 --chunk 2 --log-every 1 \
+        --dist --dist-devices 8
+
+    echo "== verify-dist OK =="
+    exit 0
+fi
 
 echo "== tier-1 pytest =="
 python -m pytest -x -q

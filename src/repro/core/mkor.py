@@ -71,6 +71,7 @@ import jax.numpy as jnp
 
 from repro.core import stats as statlib
 from repro.core.firstorder import GradientTransformation
+from repro.sharding import collectives
 
 
 @dataclass(frozen=True)
@@ -93,6 +94,14 @@ class MKORConfig:
     # SMW work across the window instead of spiking every inv_freq-th step.
     # stagger=False is the paper-exact global schedule (all phases 0).
     stagger: bool = True
+    # Owner-sharded inversions (DESIGN.md §10): static dist spec
+    # ((axis_name, axis_size), ...) of the data axes when the optimizer runs
+    # inside shard_map (training/loop.py make_dist_train_step).  Each worker
+    # then stabilizes+SMWs only its owned chunk of every bucket's bank dim
+    # (core/stats.py bucket_owner_map) and the updated inverse slices are
+    # all-gathered on that bucket's phase step.  None = single-program.
+    # Only the bank layout shards; the per-layer oracle stays replicated.
+    dist: Optional[Tuple[Tuple[str, int], ...]] = None
     # MKOR-H (§3.2)
     hybrid: bool = False
     hybrid_ema_fast: float = 0.9
@@ -418,10 +427,35 @@ def mkor(backend: GradientTransformation,
 
                 # lax.cond (not where): off-phase steps must skip the SMW
                 # work, or the staggered schedule has nothing to spread.
+                # With cfg.dist each worker stabilizes+SMWs only its owned
+                # chunk of the group's bank dim and the inverse slices are
+                # all-gathered — the collectives sit inside the cond, so
+                # off-phase steps move zero factor bytes (DESIGN.md §10).
                 def inv_branch(l, r, gv=gv, av=av, ns=ns):
                     stab = _vmap_over_stack(stab_slice, ns + 1)
-                    return (banked_smw(stab(l), gv, ns + 1),
-                            banked_smw(stab(r), av, ns + 1))
+                    if cfg.dist is None \
+                            or collectives.world_size(cfg.dist) <= 1:
+                        return (banked_smw(stab(l), gv, ns + 1),
+                                banked_smw(stab(r), av, ns + 1))
+
+                    # Owner-sharded: the shardable unit is a *slice* —
+                    # (bank slot x stacked repeat), i.e. the lead dims
+                    # flattened — so scan-stacked models parallelize over
+                    # depth, not just over the (often tiny) slot count.
+                    def sharded(j, v):
+                        n = 1
+                        for d in j.shape[:ns + 1]:
+                            n *= d
+                        jf = j.reshape((n,) + j.shape[ns + 1:])
+                        vf = v.reshape((n,) + v.shape[ns + 1:])
+                        jc = collectives.owner_shard(jf, cfg.dist)
+                        vc = collectives.owner_shard(vf, cfg.dist)
+                        new = banked_smw(_vmap_over_stack(stab_slice, 1)(jc),
+                                         vc, 1)
+                        return collectives.gather_shards(
+                            new, cfg.dist, n).reshape(j.shape)
+
+                    return sharded(l, gv), sharded(r, av)
 
                 l_new, r_new = jax.lax.cond(
                     do_inv, inv_branch, lambda l, r: (l, r), l_sub, r_sub)

@@ -269,6 +269,70 @@ def bucket_cost(bucket: FactorBucket, factor_bytes: int = 2) -> Dict[str, Any]:
     }
 
 
+def bucket_slices(bucket: FactorBucket) -> int:
+    """Flattened (slot x stack) slice count — the owner-shardable unit of
+    a factor bank (DESIGN.md §10)."""
+    n = bucket.n_slots
+    for d in bucket.stack:
+        n *= d
+    return n
+
+
+def bucket_owner_map(manifest: BucketManifest,
+                     world_size: int) -> Dict[str, Tuple[Tuple[int, int], ...]]:
+    """Manifest-driven owner map for the owner-sharded inversion schedule
+    (DESIGN.md §10): ``{bucket_id: ((start, stop), ...)}`` — worker w owns
+    the flattened (slot x stack) slices ``[start_w, stop_w)`` of every
+    bucket's factor bank.
+
+    Slices are split into ``world_size`` contiguous chunks of equal size
+    ``ceil(slices / world_size)`` (clipped; trailing workers may own empty
+    ranges) — the same rule as ``sharding/collectives.py: owner_chunk``,
+    which the optimizer applies per runtime stat-signature group (in the
+    common case one group spans the whole bucket, and this map IS the
+    ownership).  Equal static chunk sizes are what let the sharded
+    stabilize+SMW compile to one program: every worker slices a
+    ``chunk``-sized window (zero-padded past the slice count) and the
+    updated inverse slices are recombined in worker order
+    (``collectives.gather_shards``).  Like the bucket phases, the map is a
+    pure function of the (static) manifest + world size, so init- and
+    update-time rebuilds always agree."""
+    w = max(world_size, 1)
+    out = {}
+    for b in manifest:
+        n = bucket_slices(b)
+        chunk = -(-n // w)
+        out[b.bucket_id] = tuple(
+            (min(i * chunk, n), min((i + 1) * chunk, n)) for i in range(w))
+    return out
+
+
+def bucket_comm_cost(bucket: FactorBucket, world_size: int = 1,
+                     factor_bytes: int = 2,
+                     stats_bytes: int = 2) -> Dict[str, Any]:
+    """Analytic per-bucket collective payload bytes (per worker, per step)
+    for the distributed schedules (DESIGN.md §10; benchmarks/comm_volume).
+
+    * ``rank1_stats_bytes_per_step`` — MKOR's wire cost: every step each
+      worker contributes one ā (d_in,) and one ḡ (d_out,) per slice.  O(d).
+    * ``kfac_factor_bytes_per_inv`` — the KFAC/KAISA-style alternative:
+      full (d_in², d_out²) factor/inverse payload per factor update.  O(d²).
+    * ``owner_gather_bytes_per_phase_step`` — owner-sharded inversions:
+      on this bucket's phase step each worker ships only its owned chunk
+      of flattened (slot x stack) slices of the updated inverse bank —
+      ~1/min(world_size, slices) of the factor bytes.
+    """
+    n = bucket_slices(bucket)
+    di, do = bucket.d_in, bucket.d_out
+    factor_mem = n * (di * di + do * do) * factor_bytes
+    chunk = -(-n // max(world_size, 1))
+    return {
+        "rank1_stats_bytes_per_step": n * (di + do) * stats_bytes,
+        "kfac_factor_bytes_per_inv": factor_mem,
+        "owner_gather_bytes_per_phase_step": factor_mem * chunk // n,
+    }
+
+
 def zero_probes(tree):
     """Zero every ``probe`` leaf (probes are statistics taps, never updated)."""
 

@@ -81,7 +81,12 @@ def smw_rank1_update_banked(j: jnp.ndarray, v: jnp.ndarray, *, gamma: float,
     j: (*lead, d, d) — lead = (n_bucket_layers, *stack); v: (*lead, d) or
     (*lead, r, d) for chained rank-r stats.  The lead dims are flattened
     and vmapped over the fused kernel, producing one batched dispatch per
-    bucket instead of one per layer."""
+    bucket instead of one per layer.
+
+    Under the owner-sharded inversion schedule (DESIGN.md §10) the entry
+    receives a *locally-sliced* bank: lead[0] is this worker's owned chunk
+    (possibly zero-padded) rather than the full bucket — any lead extent
+    works, including an empty chunk, which is returned untouched."""
     d = j.shape[-1]
     lead = j.shape[:-2]
     assert v.shape[:len(lead)] == lead, (v.shape, j.shape)
@@ -90,6 +95,8 @@ def smw_rank1_update_banked(j: jnp.ndarray, v: jnp.ndarray, *, gamma: float,
                  block=block, interpret=interpret)
     if not lead:
         return fn(j, v)
+    if 0 in lead:                                   # empty owner slice
+        return j
     out = jax.vmap(fn)(j.reshape((-1, d, d)),
                        v.reshape((-1,) + rank + (d,)))
     return out.reshape(j.shape)
@@ -172,7 +179,8 @@ def fused_precondition_banked(l_inv: jnp.ndarray, r_inv: jnp.ndarray,
     (*lead, *extra, d_in, d_out) — lead = (n_bucket_layers, *stack).  Lead
     dims are flattened and vmapped, one batched dispatch per bucket; the
     per-slice Frobenius rescale spans the slice's extra dims (matching
-    core.mkor.rescale_update under ``_vmap_over_stack``).
+    core.mkor.rescale_update under ``_vmap_over_stack``).  As with the SMW
+    entry, lead may be a locally-sliced chunk of the full bank.
     """
     lead = l_inv.shape[:-2]
     assert r_inv.shape[:len(lead)] == lead, (r_inv.shape, l_inv.shape)
@@ -181,6 +189,8 @@ def fused_precondition_banked(l_inv: jnp.ndarray, r_inv: jnp.ndarray,
                  interpret=interpret)
     if not lead:
         return fn(l_inv, r_inv, g_w)
+    if 0 in lead:                                   # empty owner slice
+        return jnp.zeros(g_w.shape, g_w.dtype)
     out = jax.vmap(fn)(
         l_inv.reshape((-1,) + l_inv.shape[len(lead):]),
         r_inv.reshape((-1,) + r_inv.shape[len(lead):]),

@@ -69,11 +69,17 @@ def input_specs(cfg: ModelConfig, shape: InputShape) -> Dict[str, Any]:
     return {"tokens": tokens, "cache": cache}
 
 
-def factor_bucket_report(params_sds, mcfg: MKORConfig = MKORConfig()):
-    """Per-bucket factor FLOPs/bytes for the MKOR bank layout (DESIGN.md
-    §2).  Works on ShapeDtypeStructs — no arrays are allocated."""
+def factor_bucket_report(params_sds, mcfg: MKORConfig = MKORConfig(),
+                         world_size: int = 1):
+    """Per-bucket factor FLOPs/bytes + collective payload bytes for the
+    MKOR bank layout (DESIGN.md §2/§10).  Works on ShapeDtypeStructs — no
+    arrays are allocated.  ``world_size`` is the data-parallel degree the
+    comm columns assume (rank-1 stat exchange per step, KFAC-style full
+    factor payload per inversion, owner-sharded inverse gather per phase
+    step)."""
     fbytes = jnp.dtype(mcfg.factor_dtype).itemsize
-    return [statlib.bucket_cost(b, fbytes)
+    return [{**statlib.bucket_cost(b, fbytes),
+             **statlib.bucket_comm_cost(b, world_size, fbytes, fbytes)}
             for b in manifest_for(params_sds, mcfg)]
 
 
@@ -179,7 +185,8 @@ def lower_one(cfg: ModelConfig, shape: InputShape, *, multi_pod: bool,
     roof = hlo_analysis.roofline(ana["flops"], ana["bytes"],
                                  ana["collective_total_bytes"])
 
-    factor_buckets = factor_bucket_report(params_sds) \
+    factor_buckets = factor_bucket_report(
+        params_sds, world_size=axes.data_size(mesh)) \
         if mode == "train" and optimizer in ("mkor", "mkor_h") else []
 
     counts = active_param_counts(cfg, params_sds)
@@ -222,8 +229,15 @@ def format_row(r: Dict[str, Any]) -> str:
     if fb:
         flops = sum(b["smw_flops_per_inv"] for b in fb)
         mem = sum(b["factor_bytes"] for b in fb)
+        # per-step collective payload: rank-1 stats every step vs the
+        # KFAC-style full-factor payload a broadcast design would ship
+        # (amortized over the inversion window) — DESIGN.md §10
+        r1 = sum(b["rank1_stats_bytes_per_step"] for b in fb)
+        kfac = sum(b["kfac_factor_bytes_per_inv"] for b in fb)
         fb_note = (f"buckets={len(fb)} "
-                   f"smw={flops:.2e}F factors={mem / 2**30:.2f}GiB ")
+                   f"smw={flops:.2e}F factors={mem / 2**30:.2f}GiB "
+                   f"r1comm={r1 / 2**20:.2f}MiB/step "
+                   f"(kfac {kfac / 2**20:.0f}MiB/inv) ")
     return (f"{r['arch']:17s} {r['shape']:12s} {r['mesh']:8s} "
             f"{fb_note}"
             f"flops={r['flops']:.3e} bytes={r['bytes_accessed']:.3e} "

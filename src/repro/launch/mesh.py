@@ -28,9 +28,28 @@ def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     return jax.make_mesh(shape, axes, devices=devices[:n])
 
 
-def make_host_mesh() -> Mesh:
-    """1x1 mesh on the real local device (smoke tests / examples)."""
-    return jax.make_mesh((1, 1), ("data", "model"))
+def make_host_mesh(n_data: int = 1, *, n_model: int = 1,
+                   n_pod: int = 0) -> Mesh:
+    """Host-platform mesh for CPU tests / examples / ``train.py --dist``.
+
+    The default (1, 1) runs on the single real device.  Multi-device
+    variants need fake host devices: set
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` *before* jax
+    initializes (tests/conftest.py pins 8; launch/train.py sets it when
+    ``--dist`` is passed).  ``n_pod > 0`` builds the multi-pod
+    ("pod", "data", "model") axes so the ("pod", "data") FSDP/collective
+    paths are exercisable on CPU.
+    """
+    shape = ((n_pod,) if n_pod else ()) + (n_data, n_model)
+    axes = (("pod",) if n_pod else ()) + ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"host mesh {shape} needs {n} devices, have {len(devices)} — "
+            "set XLA_FLAGS=--xla_force_host_platform_device_count="
+            f"{n} before the first jax import")
+    return jax.make_mesh(shape, axes, devices=devices[:n])
 
 
 def mesh_axes(mesh: Mesh) -> MeshAxes:

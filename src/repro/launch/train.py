@@ -11,7 +11,28 @@ from __future__ import annotations
 import argparse
 import json
 import os
+import sys
 import time
+
+# --dist runs the explicit-collective shard_map step (DESIGN.md §10) over
+# fake host devices when no accelerator slice is attached.  The device
+# count must be forced before jax initializes, so peek at argv here; the
+# flag only affects the host platform (a real TPU backend ignores it).
+if "--dist" in sys.argv \
+        and "--xla_force_host_platform_device_count" \
+        not in os.environ.get("XLA_FLAGS", ""):
+    _n = 8
+    for _i, _a in enumerate(sys.argv):
+        try:
+            if _a == "--dist-devices":          # space-separated form
+                _n = int(sys.argv[_i + 1])
+            elif _a.startswith("--dist-devices="):
+                _n = int(_a.split("=", 1)[1])
+        except (ValueError, IndexError):
+            pass                                # argparse reports it below
+    os.environ["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={_n} "
+        + os.environ.get("XLA_FLAGS", ""))
 
 import jax
 import numpy as np
@@ -24,12 +45,14 @@ from repro.core.eva import EvaConfig, eva
 from repro.data import pipeline
 from repro.launch import mesh as mesh_lib
 from repro.models import model as model_lib
+from repro.sharding import collectives
 from repro.sharding import rules
 from repro.training import loop as train_lib
 
 
 def build_optimizer(name: str, lr, *, inv_freq: int = 10,
-                    use_pallas: bool = False, platform: str = ""):
+                    use_pallas: bool = False, platform: str = "",
+                    dist=None):
     # Pallas interpret mode is a testing device, not an execution strategy:
     # only a real TPU runs the compiled kernels (they use TPU memory
     # spaces), every other backend interprets.  Before this gate,
@@ -39,9 +62,10 @@ def build_optimizer(name: str, lr, *, inv_freq: int = 10,
     backend = firstorder.lamb(lr)
     if name == "mkor":
         return mkor(backend, MKORConfig(
-            inv_freq=inv_freq, use_pallas=use_pallas, interpret=interpret))
+            inv_freq=inv_freq, use_pallas=use_pallas, interpret=interpret,
+            dist=dist))
     if name == "mkor_h":
-        return mkor_h(backend, MKORConfig(inv_freq=inv_freq))
+        return mkor_h(backend, MKORConfig(inv_freq=inv_freq, dist=dist))
     if name == "eva":
         return eva(backend, EvaConfig())
     if name == "lamb":
@@ -86,6 +110,13 @@ def main() -> None:
                     help="steps per jitted lax.scan chunk (1 = legacy "
                          "per-step dispatch); log/ckpt cadence aligns to "
                          "chunk boundaries")
+    ap.add_argument("--dist", action="store_true",
+                    help="explicit-collective shard_map data-parallel step "
+                         "with owner-sharded MKOR inversions (DESIGN.md "
+                         "§10); on CPU this forces fake host devices")
+    ap.add_argument("--dist-devices", type=int, default=8,
+                    help="data-parallel world size for --dist "
+                         "(--global-batch must be a multiple of it)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--ckpt-every", type=int, default=0)
@@ -98,17 +129,30 @@ def main() -> None:
         cfg = cfg.reduced()
 
     lr = build_schedule(args.schedule, args.lr, args.steps)
+    mesh = dist = None
+    if args.dist:
+        if args.global_batch % args.dist_devices:
+            raise SystemExit(
+                f"--global-batch {args.global_batch} must be a multiple "
+                f"of --dist-devices {args.dist_devices}")
+        mesh = mesh_lib.make_host_mesh(n_data=args.dist_devices)
+        dist = collectives.dist_axes(mesh, mesh_lib.mesh_axes(mesh))
     opt = build_optimizer(args.optimizer, lr, inv_freq=args.inv_freq,
-                          use_pallas=args.use_pallas)
+                          use_pallas=args.use_pallas, dist=dist)
 
     params = model_lib.init_params(jax.random.PRNGKey(args.seed), cfg)
     n_params = model_lib.param_count(params)
     print(f"arch={cfg.name} params={n_params:,} optimizer={args.optimizer} "
-          f"steps={args.steps} batch={args.global_batch}x{args.seq_len}")
+          f"steps={args.steps} batch={args.global_batch}x{args.seq_len}"
+          + (f" dist={args.dist_devices}x data-parallel" if args.dist
+             else ""))
 
     ds = pipeline.make_dataset(cfg, global_batch=args.global_batch,
                                seq_len=args.seq_len, seed=args.seed)
-    step_fn = train_lib.make_train_step(cfg, opt)
+    if args.dist:
+        step_fn = train_lib.make_dist_train_step(cfg, opt, mesh)
+    else:
+        step_fn = train_lib.make_train_step(cfg, opt)
     runner = train_lib.make_chunk_runner(step_fn)
     opt_state = opt.init(params)
 

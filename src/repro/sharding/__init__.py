@@ -1,3 +1,4 @@
+from repro.sharding import collectives  # noqa: F401
 from repro.sharding.rules import (  # noqa: F401
     MeshAxes,
     batch_specs,

@@ -1,0 +1,212 @@
+"""Explicit collectives for the distributed MKOR step (DESIGN.md §10).
+
+MKOR's systems claim is *linear communication complexity*: per layer the
+workers exchange the rank-1 statistics vectors ā (d_in,) and ḡ (d_out,) —
+O(d) on the wire — instead of the O(d²) Kronecker factors/inverses that
+KFAC/KAISA-style distributions broadcast on every factor update.  This
+module is the communication layer that makes that schedule explicit under
+``jax.experimental.shard_map`` instead of leaving collective placement to
+GSPMD:
+
+* :func:`pmean_rank1_stats` — mean-reduce only the rank-1 ``"a"`` leaves of
+  the stats tree across the data axes.  The payload is quantized to bf16
+  (the factor dtype — Lemma 3.2 bounds the factor quantization error, so a
+  bf16 stat vector costs nothing extra) and accumulated in fp32.  Note the
+  wire dtype is whatever the backend lowers the fp32 psum to: the CPU
+  emulation moves fp32 (the quantization then only bounds the payload's
+  information content), while the TPU-target accounting
+  (launch/hlo_analysis.py's bf16-origin rule) counts the collective at
+  bf16 width.
+* :func:`all_reduce_mean_tree` — one flat-bucket gradient all-reduce:
+  every leaf is raveled into a single fp32 buffer, reduced with an explicit
+  reduce-scatter + all-gather pair (the two halves of a ring all-reduce),
+  and split back.  One pair of collectives per step instead of one
+  all-reduce per leaf.
+* :func:`owner_shard` / :func:`gather_shards` — the owner-sharded inversion
+  schedule: each data-parallel worker slices out the bank-dim chunk of the
+  factor bank it owns, runs stabilize+SMW on that chunk only, and the
+  updated inverse slices are all-gathered.  Per phase step each worker
+  ships 1/world_size of the bucket's factor bytes instead of the full
+  factors a single-owner broadcast would move.
+
+A "dist spec" is a static, hashable description of the data axes of the
+active mesh: ``((axis_name, axis_size), ...)``, e.g. ``(("data", 8),)`` or
+``(("pod", 2), ("data", 16))``.  Axis order follows the mesh's axis order,
+which matches the row-major concatenation order jax uses for multi-axis
+``all_gather``/``psum_scatter`` — :func:`worker_index` is defined to agree
+with it.  Everything here must run inside ``shard_map`` over those axes.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+DistSpec = Tuple[Tuple[str, int], ...]
+
+
+def dist_axes(mesh, axes) -> DistSpec:
+    """Build the dist spec for a mesh + MeshAxes (sharding/rules.py)."""
+    return tuple((a, int(mesh.shape[a])) for a in axes.data)
+
+
+def axis_names(dist: DistSpec) -> Tuple[str, ...]:
+    return tuple(n for n, _ in dist)
+
+
+def world_size(dist: Optional[DistSpec]) -> int:
+    if not dist:
+        return 1
+    w = 1
+    for _, s in dist:
+        w *= int(s)
+    return w
+
+
+def worker_index(dist: DistSpec) -> jnp.ndarray:
+    """Row-major linear worker index over the dist axes — the same order in
+    which multi-axis ``all_gather(..., tiled=True)`` concatenates shards."""
+    idx = jnp.zeros((), jnp.int32)
+    for name, size in dist:
+        idx = idx * size + lax.axis_index(name)
+    return idx
+
+
+def _names(dist: DistSpec):
+    names = axis_names(dist)
+    return names if len(names) > 1 else names[0]
+
+
+# --------------------------------------------------------------------- #
+# Mean reductions
+# --------------------------------------------------------------------- #
+def pmean(x: jnp.ndarray, dist: DistSpec) -> jnp.ndarray:
+    """Mean over the data axes, accumulated in fp32."""
+    out = lax.psum(x.astype(jnp.float32), _names(dist)) / world_size(dist)
+    return out.astype(x.dtype)
+
+
+def pmean_tree(tree, dist: DistSpec):
+    return jax.tree.map(lambda x: pmean(x, dist), tree)
+
+
+def pmean_rank1_stats(stats, dist: DistSpec,
+                      payload_dtype: Optional[str] = "bfloat16"):
+    """Synchronize ONLY the rank-1 statistics across the data axes.
+
+    The stats tree mirrors the params tree with each dense layer replaced
+    by a dict holding ``"a"`` = E[a] (plus, for the full-stat baselines,
+    per-sample ``"A"``/``"G"`` matrices).  Only the O(d) ``"a"`` means are
+    exchanged — that is MKOR's linear-communication contract; full-stat
+    leaves are dropped from the reduced tree (a KFAC-style optimizer needs
+    its own O(d²) schedule and cannot ride this one).
+
+    ``payload_dtype`` quantizes the payload (default bf16, matching
+    ``MKORConfig.factor_dtype``); the psum itself runs in fp32 — that is
+    the accumulation guarantee, and also what the CPU lowering puts on the
+    wire (see the module docstring for the TPU-target byte accounting).
+    ``None`` skips quantization — the bit-tight mode the single-device
+    equivalence tests use.
+    """
+    pd = jnp.dtype(payload_dtype) if payload_dtype is not None else None
+
+    def reduce_a(a):
+        payload = a.astype(pd) if pd is not None else a
+        out = lax.psum(payload.astype(jnp.float32), _names(dist))
+        return (out / world_size(dist)).astype(a.dtype)
+
+    def walk(node):
+        if isinstance(node, dict):
+            if "a" in node and hasattr(node["a"], "ndim"):
+                return {"a": reduce_a(node["a"])}
+            return {k: walk(v) for k, v in node.items()}
+        if isinstance(node, list):
+            return [walk(v) for v in node]
+        if isinstance(node, tuple):
+            return tuple(walk(v) for v in node)
+        return node
+
+    return walk(stats)
+
+
+def all_reduce_mean_tree(tree, dist: DistSpec):
+    """Flat-bucket gradient mean: ravel every leaf into one fp32 buffer,
+    reduce-scatter it across the data axes, all-gather the reduced shards
+    back, and unflatten.  Explicitly the two phases of a ring all-reduce —
+    one collective pair per step regardless of tree width."""
+    leaves, treedef = jax.tree.flatten(tree)
+    if not leaves:
+        return tree
+    w = world_size(dist)
+    flat = jnp.concatenate([l.astype(jnp.float32).ravel() for l in leaves])
+    n = flat.size
+    pad = (-n) % w
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    # reduce-scatter: worker i ends up owning (and having summed) shard i
+    shard = lax.psum_scatter(flat, _names(dist), scatter_dimension=0,
+                             tiled=True) / w
+    # all-gather: rebuild the full reduced buffer, shards back in order
+    full = lax.all_gather(shard, _names(dist), tiled=True)
+    if pad:
+        full = full[:n]
+    out, off = [], 0
+    for l in leaves:
+        k = l.size
+        out.append(full[off:off + k].reshape(l.shape).astype(l.dtype))
+        off += k
+    return jax.tree.unflatten(treedef, out)
+
+
+# --------------------------------------------------------------------- #
+# Owner-sharded factor inversions (DESIGN.md §10)
+# --------------------------------------------------------------------- #
+def owner_chunk(n_slots: int, world: int) -> int:
+    """Bank-dim slots each worker owns (last chunks may be pure padding)."""
+    return -(-n_slots // max(world, 1))
+
+
+def owner_shard(x: jnp.ndarray, dist: DistSpec) -> jnp.ndarray:
+    """Slice this worker's owned chunk of a bank-dim-leading array.
+
+    dim 0 is padded (zeros) to ``world * chunk`` so every worker slices a
+    static-size chunk; zero-padded slots are numerically inert through
+    stabilize + SMW (zero factor, zero vector → zero update) and are
+    dropped again by :func:`gather_shards`."""
+    w = world_size(dist)
+    chunk = owner_chunk(x.shape[0], w)
+    padded = w * chunk
+    if padded != x.shape[0]:
+        x = jnp.pad(x, [(0, padded - x.shape[0])] + [(0, 0)] * (x.ndim - 1))
+    off = worker_index(dist) * chunk
+    return lax.dynamic_slice_in_dim(x, off, chunk, axis=0)
+
+
+def gather_shards(x: jnp.ndarray, dist: DistSpec, n_slots: int) -> jnp.ndarray:
+    """Recombine the per-worker owned chunks into the full bank dim.
+
+    Each worker's wire *payload* is its chunk — ~1/min(world, n_slots) of
+    the bank bytes.  Two recombine strategies, chosen statically:
+
+    * ``all_gather`` (tiled, padded tail dropped) when the padded gather is
+      within ~2x of the useful bytes — the cheap case whenever the bank has
+      at least ~world/2 slices;
+    * masked-psum otherwise (world >> n_slots, where a padded all-gather
+      would move world/n_slots times the bank): every worker scatters its
+      chunk into a zero buffer at its owned offset and one all-reduce sums
+      the disjoint contributions — bit-exact (each slot has exactly one
+      non-zero contributor; adding zeros is exact in fp) and bounded at
+      ring-all-reduce cost ~2x the bank bytes regardless of world size.
+    """
+    w = world_size(dist)
+    chunk = x.shape[0]
+    padded = w * chunk
+    if (w - 1) * chunk <= 2 * n_slots:
+        full = lax.all_gather(x, _names(dist), axis=0, tiled=True)
+        return full[:n_slots]
+    buf = jnp.zeros((padded,) + x.shape[1:], x.dtype)
+    off = worker_index(dist) * chunk
+    buf = lax.dynamic_update_slice_in_dim(buf, x, off, axis=0)
+    return lax.psum(buf[:n_slots], _names(dist))

@@ -1,10 +1,25 @@
+import os
+
+# Multi-device paths (sharding/collectives.py, training/loop.py dist step)
+# are tested on 8 fake CPU devices via launch/mesh.make_host_mesh(n_data=..)
+# — the flag must be set before jax initializes, and the backend is locked
+# immediately below so a later import of launch/dryrun.py (which overwrites
+# XLA_FLAGS with its 512-device setting for its OWN process) cannot change
+# this process's device count mid-suite.
+_flags = os.environ.get("XLA_FLAGS", "")
+if "--xla_force_host_platform_device_count" not in _flags:
+    os.environ["XLA_FLAGS"] = \
+        "--xla_force_host_platform_device_count=8 " + _flags
+
 import jax
 import numpy as np
 import pytest
 
-# Tests run on the single real CPU device (the 512-device override is for
-# launch/dryrun.py ONLY — see the system design).  Use fp64-free defaults.
 jax.config.update("jax_enable_x64", False)
+# Lock the backend now, so device count can no longer change mid-suite.
+# On backends where the host flag has no effect (GPU, pre-set XLA_FLAGS)
+# this may be < 8 — the dist tests skip themselves rather than failing.
+N_DEVICES = jax.device_count()
 
 
 @pytest.fixture

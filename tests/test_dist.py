@@ -1,0 +1,334 @@
+"""Distributed MKOR (DESIGN.md §10): explicit collectives under shard_map
+on fake CPU devices (tests/conftest.py pins 8), owner-sharded inversions,
+and allclose-equivalence with the single-device banked path."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+from repro.core import baseline_net, firstorder
+from repro.core import stats as statlib
+from repro.core.mkor import MKORConfig, manifest_for, mkor
+from repro.launch import mesh as mesh_lib
+from repro.sharding import collectives
+from repro.training import loop as train_lib
+
+WORLD = 8
+pytestmark = pytest.mark.skipif(
+    jax.device_count() < WORLD,
+    reason=f"needs {WORLD} devices (conftest forces them on the CPU "
+           "backend only)")
+
+
+def _mesh(n_data=WORLD, **kw):
+    return mesh_lib.make_host_mesh(n_data, **kw)
+
+
+def _batch(step, d_in=96, n=64):
+    rng = np.random.default_rng(step)
+    basis = np.random.default_rng(0).standard_normal((8, d_in)) / 3
+    x = (rng.standard_normal((n, 8)) @ basis).astype(np.float32)
+    return {"x": x, "y": x}
+
+
+def _copy(tree):
+    return jax.tree.map(jnp.array, tree)
+
+
+def _grads_fn(params, batch):
+    return baseline_net.grads_and_full_stats(params, batch)
+
+
+def _run_single(opt, params0, steps):
+    """Per-step jitted single-device reference."""
+    def step_fn(params, state, batch):
+        loss, grads, stats = baseline_net.grads_and_full_stats(params, batch)
+        upd, state = opt.update(grads, state, params=params, stats=stats,
+                                loss=loss)
+        return firstorder.apply_updates(params, upd), state, {"loss": loss}
+
+    params, state = _copy(params0), opt.init(params0)
+    jit_step = jax.jit(step_fn)
+    losses = []
+    for i in range(steps):
+        params, state, m = jit_step(params, state, _batch(i))
+        losses.append(float(m["loss"]))
+    return params, state, losses
+
+
+def _assert_trees_close(a, b, rtol=2e-4, atol=1e-5):
+    jax.tree.map(
+        lambda x, y: np.testing.assert_allclose(
+            np.asarray(x, np.float32), np.asarray(y, np.float32),
+            rtol=rtol, atol=atol), a, b)
+
+
+# --------------------------------------------------------------------- #
+# Collective primitives
+# --------------------------------------------------------------------- #
+def test_flat_all_reduce_matches_psum_mean(rng):
+    mesh = _mesh()
+    dist = (("data", WORLD),)
+    tree = {"w": rng.standard_normal((WORLD, 5, 3)).astype(np.float32),
+            "b": rng.standard_normal((WORLD, 7)).astype(np.float32)}
+
+    def body(t):
+        got = collectives.all_reduce_mean_tree(t, dist)
+        want = jax.tree.map(
+            lambda x: jax.lax.pmean(x, "data"), t)
+        return got, want
+
+    got, want = jax.jit(shard_map(
+        body, mesh=mesh, in_specs=(P("data"),), out_specs=P(),
+        check_rep=False))(tree)
+    _assert_trees_close(got, want, rtol=1e-6, atol=1e-7)
+
+
+def test_pmean_rank1_stats_reduces_a_and_drops_full_stats(rng):
+    mesh = _mesh()
+    dist = (("data", WORLD),)
+    stats = {"layers": [{"a": rng.standard_normal((WORLD, 6))
+                         .astype(np.float32),
+                         "A": rng.standard_normal((WORLD, 4, 6))
+                         .astype(np.float32)}]}
+
+    def body(s):
+        local = jax.tree.map(lambda x: x[0], s)   # per-worker local stats
+        return collectives.pmean_rank1_stats(local, dist,
+                                             payload_dtype=None)
+
+    out = jax.jit(shard_map(
+        body, mesh=mesh, in_specs=(P("data"),), out_specs=P(),
+        check_rep=False))(stats)
+    node = out["layers"][0]
+    assert set(node) == {"a"}                 # O(d) contract: means only
+    np.testing.assert_allclose(np.asarray(node["a"]),
+                               stats["layers"][0]["a"].mean(0), rtol=1e-6)
+
+
+def test_owner_shard_gather_roundtrip_is_identity():
+    """owner_shard + per-chunk compute + gather_shards == full compute, for
+    bank dims that do and do not divide the world size."""
+    mesh = _mesh()
+    dist = (("data", WORLD),)
+    for n_slots in (3, 8, 11):
+        x = jnp.arange(n_slots * 4, dtype=jnp.float32).reshape(n_slots, 4)
+
+        def body(v):
+            mine = collectives.owner_shard(v, dist)
+            return collectives.gather_shards(2.0 * mine, dist, v.shape[0])
+
+        out = jax.jit(shard_map(body, mesh=mesh, in_specs=(P(),),
+                                out_specs=P(), check_rep=False))(x)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(2.0 * x))
+
+
+def test_bucket_owner_map_covers_every_slice_once():
+    params = baseline_net.init_autoencoder(jax.random.key(0), 96,
+                                           (48, 48, 12, 48))
+    manifest = manifest_for(params, MKORConfig(exclude=()))
+    for world in (1, 3, 8):
+        owners = statlib.bucket_owner_map(manifest, world)
+        for b in manifest:
+            n = statlib.bucket_slices(b)
+            ranges = owners[b.bucket_id]
+            assert len(ranges) == world
+            covered = [s for start, stop in ranges
+                       for s in range(start, stop)]
+            assert covered == list(range(n))
+            # same static chunk rule the optimizer's sharding applies
+            chunk = collectives.owner_chunk(n, world)
+            assert all(stop - start <= chunk for start, stop in ranges)
+
+
+def test_bucket_comm_cost_is_linear_vs_quadratic():
+    b = statlib.FactorBucket(bucket_id="1024x4096", stack=(), extra=(),
+                             d_in=1024, d_out=4096,
+                             paths=(("x",), ("y",)), index=0)
+    c = statlib.bucket_comm_cost(b, world_size=8)
+    assert c["rank1_stats_bytes_per_step"] == 2 * (1024 + 4096) * 2
+    assert c["kfac_factor_bytes_per_inv"] == \
+        2 * (1024 ** 2 + 4096 ** 2) * 2
+    # owner-sharded gather ships 1/world of the factor bytes (2 slots over
+    # 8 workers -> chunk 1 of 2 slots = 1/2; with slots >= world it is ~1/W)
+    assert c["owner_gather_bytes_per_phase_step"] == \
+        c["kfac_factor_bytes_per_inv"] // 2
+
+
+# --------------------------------------------------------------------- #
+# Acceptance: dist step == single-device banked path
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("stagger", [True, False])
+def test_dist_step_matches_single_device(stagger):
+    """8-worker shard_map step (flat grad reduce + rank-1 stat pmean +
+    owner-sharded inversions) reproduces the single-device banked run:
+    same params and opt_state after N steps, stagger on and off."""
+    steps = 6
+    mesh = _mesh()
+    dist = collectives.dist_axes(mesh, mesh_lib.mesh_axes(mesh))
+    common = dict(inv_freq=2, stagger=stagger, exclude=())
+    params0 = baseline_net.init_autoencoder(jax.random.key(0), 96,
+                                            (48, 12, 48))
+
+    p_ref, s_ref, ref_losses = _run_single(
+        mkor(firstorder.sgd(1e-2, momentum=0.9), MKORConfig(**common)),
+        params0, steps)
+
+    opt_d = mkor(firstorder.sgd(1e-2, momentum=0.9),
+                 MKORConfig(dist=dist, **common))
+    step = train_lib.make_dist_step_fn(_grads_fn, opt_d, mesh, ("data",),
+                                       stats_payload_dtype=None)
+    p, s = _copy(params0), opt_d.init(params0)
+    losses = []
+    for i in range(steps):
+        p, s, m = step(p, s, _batch(i))
+        losses.append(float(m["loss"]))
+
+    np.testing.assert_allclose(losses, ref_losses, rtol=1e-5)
+    _assert_trees_close(p, p_ref)
+    _assert_trees_close(s, s_ref)
+
+
+def test_dist_step_composes_with_chunk_runner():
+    """The dist step slots into train_epoch's jitted lax.scan chunk runner
+    unchanged (the tentpole's 'composed with the existing chunk runner')."""
+    steps = 4
+    mesh = _mesh()
+    dist = collectives.dist_axes(mesh, mesh_lib.mesh_axes(mesh))
+    common = dict(inv_freq=2, exclude=())
+    params0 = baseline_net.init_autoencoder(jax.random.key(0), 96,
+                                            (48, 12, 48))
+    p_ref, s_ref, _ = _run_single(
+        mkor(firstorder.sgd(1e-2, momentum=0.9), MKORConfig(**common)),
+        params0, steps)
+
+    opt_d = mkor(firstorder.sgd(1e-2, momentum=0.9),
+                 MKORConfig(dist=dist, **common))
+    step = train_lib.make_dist_step_fn(_grads_fn, opt_d, mesh, ("data",),
+                                       stats_payload_dtype=None)
+    p, s, hist = train_lib.train_epoch(
+        step, _copy(params0), opt_d.init(params0),
+        [_batch(i) for i in range(steps)], chunk=2)
+    assert len(hist) == steps
+    assert np.isfinite([h["loss"] for h in hist]).all()
+    _assert_trees_close(p, p_ref)
+    _assert_trees_close(s, s_ref)
+
+
+def test_dist_step_multi_pod_axes():
+    """Owner sharding + collectives across the composite ("pod", "data")
+    axis: worker_index/all_gather ordering must agree across axes."""
+    steps = 5
+    mesh = _mesh(2, n_pod=2)                  # (2, 2, 1) = 4 devices
+    axes = mesh_lib.mesh_axes(mesh)
+    assert axes.data == ("pod", "data")
+    dist = collectives.dist_axes(mesh, axes)
+    assert collectives.world_size(dist) == 4
+    common = dict(inv_freq=2, stagger=True, exclude=())
+    params0 = baseline_net.init_autoencoder(jax.random.key(1), 96,
+                                            (48, 12, 48))
+    p_ref, s_ref, _ = _run_single(
+        mkor(firstorder.sgd(1e-2, momentum=0.9), MKORConfig(**common)),
+        params0, steps)
+
+    opt_d = mkor(firstorder.sgd(1e-2, momentum=0.9),
+                 MKORConfig(dist=dist, **common))
+    step = train_lib.make_dist_step_fn(_grads_fn, opt_d, mesh,
+                                       ("pod", "data"),
+                                       stats_payload_dtype=None)
+    p, s = _copy(params0), opt_d.init(params0)
+    for i in range(steps):
+        p, s, _ = step(p, s, _batch(i))
+    _assert_trees_close(p, p_ref)
+    _assert_trees_close(s, s_ref)
+
+
+def test_dist_step_bf16_payload_default_stays_close():
+    """The default bf16 stat payload (Lemma 3.2 precision) tracks the fp32
+    run within bf16 tolerance and keeps training finite."""
+    steps = 6
+    mesh = _mesh()
+    dist = collectives.dist_axes(mesh, mesh_lib.mesh_axes(mesh))
+    common = dict(inv_freq=2, exclude=())
+    params0 = baseline_net.init_autoencoder(jax.random.key(0), 96,
+                                            (48, 12, 48))
+    p_ref, _, _ = _run_single(
+        mkor(firstorder.sgd(1e-2, momentum=0.9), MKORConfig(**common)),
+        params0, steps)
+
+    opt_d = mkor(firstorder.sgd(1e-2, momentum=0.9),
+                 MKORConfig(dist=dist, **common))
+    step = train_lib.make_dist_step_fn(_grads_fn, opt_d, mesh, ("data",))
+    p, s = _copy(params0), opt_d.init(params0)
+    for i in range(steps):
+        p, s, m = step(p, s, _batch(i))
+        assert np.isfinite(float(m["loss"]))
+    _assert_trees_close(p, p_ref, rtol=3e-2, atol=3e-3)
+
+
+def test_dist_owner_sharded_pallas_matches_jnp():
+    """use_pallas (interpret) under the dist step: the banked kernels accept
+    the locally-sliced owner chunks and match the jnp dist path."""
+    steps = 3
+    mesh = _mesh()
+    dist = collectives.dist_axes(mesh, mesh_lib.mesh_axes(mesh))
+    common = dict(inv_freq=1, exclude=(), dist=dist)
+    params0 = baseline_net.init_autoencoder(jax.random.key(2), 24, (16, 16))
+
+    outs = {}
+    for use_pallas in (False, True):
+        opt = mkor(firstorder.sgd(1e-2, momentum=0.9),
+                   MKORConfig(use_pallas=use_pallas, interpret=use_pallas,
+                              **common))
+        step = train_lib.make_dist_step_fn(_grads_fn, opt, mesh, ("data",),
+                                           stats_payload_dtype=None)
+        p, s = _copy(params0), opt.init(params0)
+        for i in range(steps):
+            p, s, _ = step(p, s, _batch(i, 24))
+        outs[use_pallas] = p
+    _assert_trees_close(outs[True], outs[False], rtol=2e-4, atol=5e-5)
+
+
+def test_dist_step_rejects_indivisible_batch():
+    mesh = _mesh()
+    opt = mkor(firstorder.sgd(1e-2), MKORConfig(exclude=()))
+    step = train_lib.make_dist_step_fn(_grads_fn, opt, mesh, ("data",))
+    params = baseline_net.init_autoencoder(jax.random.key(0), 96, (48,))
+    with pytest.raises(ValueError, match="does not divide"):
+        step(params, opt.init(params), _batch(0, n=12))
+
+
+def test_dist_train_step_model_matches_single_device():
+    """make_dist_train_step on a real reduced config == make_train_step
+    after 2 steps (params allclose; fp32 stat payload for tightness)."""
+    from repro.configs import registry
+    from repro.data import pipeline
+
+    from repro.models import model as model_lib
+    cfg = registry.get_config("bert-large").reduced()
+    params0 = model_lib.init_params(jax.random.key(0), cfg)
+    ds = pipeline.make_dataset(cfg, global_batch=8, seq_len=16)
+    batches = [pipeline.make_batch(ds, i) for i in range(2)]
+
+    mcfg = MKORConfig(inv_freq=1)
+    opt = mkor(firstorder.lamb(1e-3), mcfg)
+    step = jax.jit(train_lib.make_train_step(cfg, opt))
+    p_ref, s_ref = _copy(params0), opt.init(params0)
+    for b in batches:
+        p_ref, s_ref, m_ref = step(p_ref, s_ref, b)
+
+    mesh = _mesh()
+    dist = collectives.dist_axes(mesh, mesh_lib.mesh_axes(mesh))
+    opt_d = mkor(firstorder.lamb(1e-3),
+                 MKORConfig(inv_freq=1, dist=dist))
+    dstep = train_lib.make_dist_train_step(cfg, opt_d, mesh,
+                                           stats_payload_dtype=None)
+    p, s = _copy(params0), opt_d.init(params0)
+    for b in batches:
+        p, s, m = dstep(p, s, b)
+
+    assert float(m["loss"]) == pytest.approx(float(m_ref["loss"]),
+                                             rel=1e-4)
+    _assert_trees_close(p, p_ref, rtol=5e-4, atol=5e-5)

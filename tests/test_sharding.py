@@ -93,6 +93,32 @@ def test_factor_2d_unchanged():
     assert s == P("model", "data")
 
 
+def test_factor_bank_multi_pod_uses_inner_data_axis():
+    """Bank-aware factor specs under the ("pod", "data") FSDP axes: the
+    bank/stack dim takes the *within-pod* data axis only (weights and
+    factors replicate across pods, the pod axis is pure DP), exactly like
+    the weight FSDP rule."""
+    s = spec(("factor_banks", "4096x4096", "l_inv"), (48, 4096, 4096),
+             MESH_MP, AXES_MP)
+    assert s == P("data", "model", None)
+    # stack dim divisible by the inner data axis, bank dim not
+    s = spec(("factor_banks", "1024x1024_s32", "r_inv"),
+             (3, 32, 4096, 4096), MESH_MP, AXES_MP)
+    assert s == P(None, "data", "model", None)
+
+
+def test_factor_bank_multi_pod_2d_fallback():
+    """No divisible bank/stack dim under multi-pod -> 2-D factor sharding
+    falls back to (rows x cols) over ("model", inner "data"), never the
+    pod axis."""
+    s = spec(("factor_banks", "2048x2048_s5", "l_inv"), (3, 5, 2048, 2048),
+             MESH_MP, AXES_MP)
+    assert s == P(None, None, "model", "data")
+    s = spec(("factors", "x", "l_inv"), (40, 16384, 16384),
+             MESH_MP, AXES_MP)
+    assert s == P(None, "model", "data")
+
+
 def test_expert_weights():
     s = spec(("blocks", 0, "mlp", "in", "w"), (56, 8, 6144, 16384))
     assert s == P(None, None, "data", "model")
