@@ -286,6 +286,16 @@ def run(args) -> None:
     print(f"wrote {args.out}")
 
 
+def _strip_device_flag(flags: str) -> str:
+    """Drop any --xla_force_host_platform_device_count=... from XLA_FLAGS.
+    XLA honors the LAST occurrence, so prepending a bigger count in front
+    of an existing smaller one would be ignored — and the re-exec below
+    would loop forever re-seeing the old count."""
+    return " ".join(
+        f for f in flags.split()
+        if not f.startswith("--xla_force_host_platform_device_count"))
+
+
 def main(argv=None) -> None:
     args = _parse(argv if argv is not None else sys.argv[1:])
     need = max(args.devices, DEVICES if args.full else args.devices)
@@ -297,10 +307,11 @@ def main(argv=None) -> None:
     import jax
     if jax.device_count() < need:
         # backend already locked at a smaller device count (e.g. under
-        # benchmarks/run.py) — re-exec with the forced count
+        # benchmarks/run.py, or an inherited XLA_FLAGS) — re-exec with the
+        # forced count, replacing any pre-set device-count flag
         env = dict(os.environ)
         env["XLA_FLAGS"] = (f"--xla_force_host_platform_device_count={need} "
-                            + flags)
+                            + _strip_device_flag(flags))
         cmd = [sys.executable, "-m", "benchmarks.comm_volume",
                "--arch", args.arch, "--devices", str(args.devices),
                "--inv-freq", str(args.inv_freq), "--out", args.out] \

@@ -1,0 +1,146 @@
+"""Block rank-r Woodbury micro-benchmark (paper §4, DESIGN.md §11).
+
+Sweeps r ∈ {1, 2, 4, 8} over a factor-bank bucket and compares the block
+update against the chained-rank-1 baseline it replaces on three axes:
+
+  step time      : one banked factor update (jit'd, min-over-repeats)
+  dispatch count : pallas_call dispatches per bucket per phase step —
+                   counted from the jaxpr, r for the chained fused kernel
+                   vs 1 for the fused block kernel
+  inverse quality: ‖(γ^r J + Σ w_i v_i v_iᵀ) · J⁻¹_new − I‖_F against the
+                   exact EMA target — the chained and block exact_smw
+                   paths should both sit at fp roundoff, and the paper
+                   variant's gap is the PD-preserving approximation error
+
+At r=1 the block path must reproduce today's rank-1 numbers (same math,
+same single dispatch).
+
+  PYTHONPATH=src python -m benchmarks.rank_r
+  PYTHONPATH=src python -m benchmarks.rank_r --out BENCH_rank_r.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.core.mkor import block_weights, smw_block_update, smw_rank1_update
+from repro.kernels import ops
+
+GAMMA = 0.9
+RANKS = (1, 2, 4, 8)
+# (n_layers_in_bucket, d): a transformer-block-class bucket
+BUCKET = (8, 256)
+
+
+def _bank(key, n, d):
+    a = jax.random.normal(key, (n, d, d)) / jnp.sqrt(d)
+    return jnp.eye(d) + 0.1 * jnp.einsum("nij,nkj->nik", a, a)
+
+
+def _chained(bank, vs, variant):
+    """Today's baseline: r sequential rank-1 SMW updates per slice."""
+    def per_slice(j, v):
+        for i in range(v.shape[0]):
+            j = smw_rank1_update(j, v[i], GAMMA, variant)
+        return j
+    return jax.vmap(per_slice)(bank, vs)
+
+
+def _block(bank, vs, variant):
+    return jax.vmap(
+        lambda j, v: smw_block_update(j, v, GAMMA, variant))(bank, vs)
+
+
+def _pallas_dispatches(fn, *args) -> int:
+    return str(jax.make_jaxpr(fn)(*args)).count("pallas_call")
+
+
+def _inv_quality(bank, vs, new_inv):
+    """‖target · J⁻¹_new − I‖_F per slice (mean), target = the exact EMA."""
+    n, d = bank.shape[0], bank.shape[-1]
+    r = vs.shape[1]
+    sq, gm = block_weights(r, r, GAMMA)
+    w = sq ** 2
+    target = gm * bank + jnp.einsum("r,nri,nrj->nij", w, vs, vs)
+    prod = jnp.einsum("nij,njk->nik", target,
+                      new_inv.astype(jnp.float32))
+    err = jnp.sqrt(jnp.sum(
+        (prod - jnp.eye(d)) ** 2, axis=(-2, -1)))
+    return float(jnp.mean(err))
+
+
+def bench_rank(n: int, d: int, r: int, interpret: bool, skip_pallas: bool):
+    bank = _bank(jax.random.key(d), n, d)
+    bank_inv = jnp.linalg.inv(bank)
+    vs = jax.random.normal(jax.random.key(d + r), (n, r, d))
+    nv = jnp.full((n,), r, jnp.int32)
+
+    chained = jax.jit(partial(_chained, variant="exact_smw"))
+    block = jax.jit(partial(_block, variant="exact_smw"))
+    block_paper = jax.jit(partial(_block, variant="paper"))
+
+    fused_chained = jax.jit(partial(
+        ops.smw_rank1_update_banked, gamma=GAMMA, variant="exact_smw",
+        interpret=interpret))
+    fused_block = jax.jit(partial(
+        ops.smw_block_update_banked, gamma=GAMMA, variant="exact_smw",
+        interpret=interpret))
+
+    row = {
+        "bucket": f"{d}x{d}", "n_layers": n, "rank": r,
+        "chained_rank1_ms": time_fn(chained, bank_inv, vs) * 1e3,
+        "block_einsum_ms": time_fn(block, bank_inv, vs) * 1e3,
+        "block_paper_ms": time_fn(block_paper, bank_inv, vs) * 1e3,
+        # dispatches per bucket per phase step on the pallas path
+        "chained_pallas_dispatches": _pallas_dispatches(
+            fused_chained, bank_inv, vs),
+        "block_pallas_dispatches": _pallas_dispatches(
+            fused_block, bank_inv, vs, nv),
+        "inv_err_chained": _inv_quality(bank, vs, chained(bank_inv, vs)),
+        "inv_err_block": _inv_quality(bank, vs, block(bank_inv, vs)),
+        "inv_err_paper": _inv_quality(bank, vs, block_paper(bank_inv, vs)),
+    }
+    row["block_speedup"] = row["chained_rank1_ms"] / row["block_einsum_ms"]
+    # Interpret-mode Pallas wall time is NOT comparable to compiled XLA
+    # (see benchmarks/factor_bank.py) — label it and keep it out of speedups.
+    if not skip_pallas:
+        suffix = "_interpret_ms" if interpret else "_ms"
+        row["fused_chained_pallas" + suffix] = time_fn(
+            fused_chained, bank_inv, vs, warmup=1, iters=2) * 1e3
+        row["fused_block_pallas" + suffix] = time_fn(
+            fused_block, bank_inv, vs, nv, warmup=1, iters=2) * 1e3
+    return row
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="BENCH_rank_r.json")
+    ap.add_argument("--skip-pallas", action="store_true",
+                    help="skip the (interpret-mode, very slow on CPU) "
+                         "fused-kernel timings")
+    args, _ = ap.parse_known_args()
+
+    backend = jax.default_backend()
+    interpret = backend != "tpu"
+    n, d = BUCKET
+    rows = [bench_rank(n, d, r, interpret, args.skip_pallas) for r in RANKS]
+    emit(rows, "block rank-r Woodbury vs chained rank-1 "
+               "(time / dispatches / inverse quality)")
+    if interpret and not args.skip_pallas:
+        print(f"# fused kernels ran in interpret mode on {backend}: "
+              "correctness-representative, wall time is NOT (run on TPU "
+              "for real numbers)")
+    with open(args.out, "w") as f:
+        json.dump({"backend": backend, "interpret": interpret,
+                   "gamma": GAMMA, "bucket": list(BUCKET), "rows": rows},
+                  f, indent=1)
+    print(f"# wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

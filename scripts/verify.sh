@@ -32,7 +32,19 @@ if [[ "${1:-}" == "dist" ]]; then
 fi
 
 echo "== tier-1 pytest =="
-python -m pytest -x -q
+# TIER1_BUDGET_S (set by the CI fast job) turns the tier-1 wall-time budget
+# into a hard failure: exceeding it exits 124 instead of silently creeping.
+if [[ -n "${TIER1_BUDGET_S:-}" ]]; then
+    timeout "${TIER1_BUDGET_S}" python -m pytest -x -q || {
+        ec=$?
+        if [[ $ec -eq 124 ]]; then
+            echo "tier-1 exceeded the ${TIER1_BUDGET_S}s wall-time budget"
+        fi
+        exit $ec
+    }
+else
+    python -m pytest -x -q
+fi
 
 echo "== dryrun smoke (bert-large / train_4k) =="
 python -m repro.launch.dryrun --arch bert-large --shape train_4k \

@@ -23,8 +23,13 @@ Beyond-paper options (each recorded in EXPERIMENTS.md):
 * ``variant="exact_smw"`` — the *exact* Sherman–Morrison inverse of the
   EMA'd factor  (γL + (1−γ)ḡḡᵀ)⁻¹  (the paper's Eq. 5 is a PD-preserving
   approximation of it; see DESIGN.md).
-* rank-r statistics (paper §4): if the captured stats carry an extra
-  leading rank dim, the SMW update is chained r times at O(r·d²).
+* block rank-r updates (paper §4, DESIGN.md §11): ``rank=r`` buffers the
+  last r per-step stat vectors per factor in a ring window (core/stats.py)
+  and consumes the whole window on the factor's phase step with ONE
+  block-Woodbury update (:func:`smw_block_update`) — O(r·d² + r³) in a
+  single dispatch instead of r chained rank-1 dispatches.  (Legacy: stats
+  carrying an extra leading rank dim still chain r rank-1 updates at
+  rank=1.)
 * ``use_pallas`` — fused Pallas TPU kernels for the SM update and the
   two-sided preconditioning (kernels/).
 * factor sharding over the "model" mesh axis (launch/dryrun.py) instead of
@@ -86,6 +91,14 @@ class MKORConfig:
     rescale: bool = True               # line 10 gradient rescaling
     exclude: Tuple[str, ...] = ("embed", "lm_head")
     variant: str = "paper"             # "paper" | "exact_smw"
+    # Block rank-r updates (paper §4, DESIGN.md §11): buffer the last
+    # ``rank`` per-step stat vectors per factor in a ring window
+    # (core/stats.py window_push) and consume the WHOLE window with one
+    # block-Woodbury update on the factor's phase step — O(r·d²+r³) in a
+    # single dispatch instead of r chained rank-1 dispatches.  rank=1 is
+    # bit-identical to the original per-step rank-1 schedule (no window
+    # state is allocated).
+    rank: int = 1
     use_pallas: bool = False           # fused TPU kernels (kernels/)
     interpret: bool = False            # pallas interpret mode (CPU tests)
     layout: str = "bank"               # "bank" (bucketed) | "per_layer"
@@ -139,6 +152,63 @@ def smw_update_maybe_rank_r(j_inv, v, gamma, variant):
     for i in range(v.shape[0]):
         j_inv = smw_rank1_update(j_inv, v[i], gamma, variant)
     return j_inv
+
+
+def block_weights(n_valid, rank: int, gamma: float):
+    """Per-row sqrt-weights + base scale of the block rank-r update.
+
+    Chaining m = min(n_valid, rank) rank-1 EMA updates composes to
+
+        J_m = γ^m J_0 + Σ_{i<m} (1-γ) γ^(m-1-i) v_i v_iᵀ   (i=0 oldest)
+
+    so the block update folds row i of the window by √w_i with
+    w_i = (1-γ)γ^(m-1-i) and scales the base factor by γ^m.  Rows at or
+    beyond ``n_valid`` (unwritten/stale ring slots) get weight zero, and
+    n_valid = 0 makes the whole update an exact no-op (γ⁰ = 1, Ṽ = 0).
+    ``n_valid`` may be traced (it is optimizer state)."""
+    i = jnp.arange(rank, dtype=jnp.float32)
+    m = jnp.minimum(jnp.asarray(n_valid, jnp.float32), float(rank))
+    w = jnp.where(i < m, (1.0 - gamma) * gamma ** jnp.maximum(m - 1.0 - i,
+                                                              0.0), 0.0)
+    return jnp.sqrt(w), gamma ** m
+
+
+def smw_block_update(j_inv: jnp.ndarray, v: jnp.ndarray, gamma: float,
+                     variant: str = "paper",
+                     n_valid=None) -> jnp.ndarray:
+    """Block rank-r Woodbury inverse update (paper §4, DESIGN.md §11).
+
+    v: (r, d) window rows, oldest first.  One O(r·d² + r³) shot instead of
+    r sequential rank-1 dispatches:
+
+      exact_smw:  (γ^m J + ṼᵀṼ)⁻¹
+                  = (1/γ^m)(J⁻¹ − J⁻¹Ṽᵀ (γ^m I_r + ṼJ⁻¹Ṽᵀ)⁻¹ ṼJ⁻¹)
+                  — EXACTLY equal to m chained rank-1 exact SMW updates
+                  (Ṽ rows = √w_i v_i, see :func:`block_weights`);
+      paper:      J⁻¹ ← γ^m J⁻¹ + J⁻¹Ṽᵀ (γ^{2m}(I_r + γ^m S))⁻¹ ṼJ⁻¹,
+                  S = ṼJ⁻¹Ṽᵀ — the PD-preserving generalization of Eq. 5/6
+                  (the middle matrix is PD whenever S is PSD, so Lemma 3.1
+                  carries over); at r = 1 it reduces to Eq. 5/6 exactly.
+
+    ``n_valid`` masks a partially-filled window (see block_weights);
+    n_valid = 0 returns the factor bit-unchanged."""
+    r = v.shape[0]
+    dtype = j_inv.dtype
+    jf = j_inv.astype(jnp.float32)
+    sq, gm = block_weights(r if n_valid is None else n_valid, r, gamma)
+    vt = v.astype(jnp.float32) * sq[:, None]              # Ṽ rows (r, d)
+    u = jnp.einsum("ij,rj->ri", jf, vt)                   # rows = J⁻¹ṽ_i
+    s = vt @ u.T                                          # ṼJ⁻¹Ṽᵀ (r, r)
+    eye = jnp.eye(r, dtype=jnp.float32)
+    if variant == "paper":
+        mid = gm ** 2 * eye + gm ** 3 * s
+        new = gm * jf + u.T @ jnp.linalg.solve(mid, u)
+    elif variant == "exact_smw":
+        mid = gm * eye + s
+        new = (jf - u.T @ jnp.linalg.solve(mid, u)) / gm
+    else:
+        raise ValueError(variant)
+    return new.astype(dtype)
 
 
 def stabilize(j_inv: jnp.ndarray, threshold: float, zeta: float) -> jnp.ndarray:
@@ -262,6 +332,8 @@ def mkor(backend: GradientTransformation,
 
     if cfg.layout not in ("bank", "per_layer"):
         raise ValueError(f"unknown layout {cfg.layout!r}")
+    if cfg.rank < 1:
+        raise ValueError(f"rank must be >= 1, got {cfg.rank}")
 
     if cfg.use_pallas:
         from repro.kernels import ops as kops
@@ -271,6 +343,16 @@ def mkor(backend: GradientTransformation,
         def banked_smw(j, v, n_lead):
             return kops.smw_rank1_update_banked(
                 j, v, gamma=cfg.gamma, variant=cfg.variant,
+                interpret=cfg.interpret)
+
+        def block_slice(j, v, n):
+            return kops.smw_block_update(
+                j, v, gamma=cfg.gamma, variant=cfg.variant, n_valid=n,
+                interpret=cfg.interpret)
+
+        def banked_block(j, v, n, n_lead):
+            return kops.smw_block_update_banked(
+                j, v, n, gamma=cfg.gamma, variant=cfg.variant,
                 interpret=cfg.interpret)
 
         def precond_slice(linv, rinv, gw):
@@ -293,6 +375,12 @@ def mkor(backend: GradientTransformation,
         def banked_smw(j, v, n_lead):
             return _vmap_over_stack(smw_fn, n_lead)(j, v)
 
+        def block_slice(j, v, n):
+            return smw_block_update(j, v, cfg.gamma, cfg.variant, n_valid=n)
+
+        def banked_block(j, v, n, n_lead):
+            return _vmap_over_stack(block_slice, n_lead)(j, v, n)
+
         def precond_slice(linv, rinv, gw):
             delta = precondition(linv, rinv, gw)
             if cfg.rescale:
@@ -309,16 +397,31 @@ def mkor(backend: GradientTransformation,
     # init
     # ------------------------------------------------------------------ #
     def init_factor_state(params):
+        # rank > 1: fp32 ring windows of the last `rank` stat vectors per
+        # factor plus a per-slot write count (DESIGN.md §11).  At rank=1
+        # no window state is allocated — the state tree is bit-identical
+        # to the original rank-1 optimizer (checkpoint compatible).
+        def window(lead, d):
+            return jnp.zeros(lead + (cfg.rank, d), jnp.float32)
+
         if cfg.layout == "per_layer":
-            factors = {}
+            factors, windows = {}, {}
             for path in statlib.iter_dense_layers(params):
                 dense = statlib.tree_get(params, path)
                 if _eligible(path, dense, cfg):
-                    factors[statlib.path_str(path)] = \
-                        _init_factors(dense, cfg)
-            return {"factors": factors}
+                    key = statlib.path_str(path)
+                    factors[key] = _init_factors(dense, cfg)
+                    if cfg.rank > 1:
+                        stack, _, d_in, d_out = statlib.layer_dims(dense)
+                        windows[key] = {"a": window(stack, d_in),
+                                        "g": window(stack, d_out),
+                                        "n": jnp.zeros((), jnp.int32)}
+            out = {"factors": factors}
+            if cfg.rank > 1:
+                out["stat_windows"] = windows
+            return out
         fd = jnp.dtype(cfg.factor_dtype)
-        banks = {}
+        banks, windows = {}, {}
         for b in manifest_for(params, cfg):
             shape = (b.n_slots,) + b.stack
 
@@ -328,7 +431,15 @@ def mkor(backend: GradientTransformation,
 
             banks[b.bucket_id] = {"l_inv": eye(b.d_out),
                                   "r_inv": eye(b.d_in)}
-        return {"factor_banks": banks}
+            if cfg.rank > 1:
+                windows[b.bucket_id] = {
+                    "a": window(shape, b.d_in),
+                    "g": window(shape, b.d_out),
+                    "n": jnp.zeros((b.n_slots,), jnp.int32)}
+        out = {"factor_banks": banks}
+        if cfg.rank > 1:
+            out["stat_windows"] = windows
+        return out
 
     def init(params):
         return {
@@ -348,6 +459,7 @@ def mkor(backend: GradientTransformation,
             manifest_for(params if params is not None else grads, cfg),
             cfg.inv_freq, cfg.stagger)
         new_factors = {}
+        new_windows = {}
         out = grads
         for key, fac in state["factors"].items():
             path = layer_paths[key]
@@ -366,7 +478,42 @@ def mkor(backend: GradientTransformation,
             # scheduled steps only.  lax.cond (not where) so non-inverting
             # steps skip the SMW work entirely — the staggered schedule
             # (DESIGN.md §9) relies on the skip for its flat step time. ----
-            if a_vec is not None and g_vec is not None:
+            if cfg.rank > 1:
+                # Rank-r window schedule (DESIGN.md §11): every step pushes
+                # the current stat vectors into the ring window; the phase
+                # step consumes the whole window with one block-Woodbury
+                # update and resets the write count.  The push precedes the
+                # consume so the phase step's own stats are included —
+                # exactly the rank-1 schedule at rank=1.
+                win = state["stat_windows"][key]
+                a_win, g_win, n_cnt = win["a"], win["g"], win["n"]
+                if a_vec is not None and g_vec is not None:
+                    a_win = statlib.window_push(a_win, n_cnt, a_vec)
+                    g_win = statlib.window_push(g_win, n_cnt, g_vec)
+                    n_cnt = n_cnt + 1
+                    do_inv = do_inv_fn(phases.get(key, 0))
+
+                    # A layer with NO stats this step never reaches this
+                    # branch (same skip as the rank-1 path), so cnt >= 1
+                    # here; a whole window of absent stats therefore leaves
+                    # the factor bit-untouched — the zero-window no-op.
+                    def inv_branch(l, r, aw=a_win, gw=g_win, cnt=n_cnt,
+                                   ns=ns, stack=stack):
+                        stab = _vmap_over_stack(stab_slice, ns)
+                        upd = _vmap_over_stack(block_slice, ns)
+                        cnt_s = jnp.broadcast_to(cnt, stack)
+                        l_new = upd(stab(l), statlib.window_ordered(gw, cnt),
+                                    cnt_s)
+                        r_new = upd(stab(r), statlib.window_ordered(aw, cnt),
+                                    cnt_s)
+                        return l_new, r_new
+
+                    l_inv, r_inv = jax.lax.cond(
+                        do_inv, inv_branch, lambda l, r: (l, r),
+                        l_inv, r_inv)
+                    n_cnt = jnp.where(do_inv, 0, n_cnt)
+                new_windows[key] = {"a": a_win, "g": g_win, "n": n_cnt}
+            elif a_vec is not None and g_vec is not None:
                 def inv_branch(l, r, gv=g_vec, av=a_vec, ns=ns):
                     stab = _vmap_over_stack(stab_slice, ns)
                     upd = _vmap_over_stack(smw_fn, ns)
@@ -382,7 +529,10 @@ def mkor(backend: GradientTransformation,
             delta = jnp.where(so_on, delta, g_w)      # MKOR-H fallback
             out = statlib.tree_set(
                 out, path, {**statlib.tree_get(out, path), "w": delta})
-        return out, {"factors": new_factors}
+        fstate = {"factors": new_factors}
+        if cfg.rank > 1:
+            fstate["stat_windows"] = new_windows
+        return out, fstate
 
     # ------------------------------------------------------------------ #
     # bucketed bank update: one vmapped stabilize → SMW → precondition →
@@ -393,12 +543,16 @@ def mkor(backend: GradientTransformation,
                                  cfg)
         phases = statlib.bucket_phases(manifest, cfg.inv_freq, cfg.stagger)
         new_banks = {}
+        new_windows = {}
         out = grads
         for bucket in manifest:
             bank = state["factor_banks"][bucket.bucket_id]
             l_bank, r_bank = bank["l_inv"], bank["r_inv"]
             do_inv = do_inv_fn(phases[bucket.bucket_id])
             ns = len(bucket.stack)
+            if cfg.rank > 1:
+                win = state["stat_windows"][bucket.bucket_id]
+                a_win, g_win, n_cnt = win["a"], win["g"], win["n"]
 
             g_ws, g_vecs, a_vecs = [], [], []
             for path in bucket.paths:
@@ -425,6 +579,77 @@ def mkor(backend: GradientTransformation,
                 gv = jnp.stack([g_vecs[i] for i in slots])
                 av = jnp.stack([a_vecs[i] for i in slots])
 
+                if cfg.rank > 1:
+                    # Rank-r window schedule, banked (DESIGN.md §11):
+                    # push this step's vectors into the ring windows of the
+                    # group's slots (O(r·d) selects, every step), then on
+                    # the bucket's phase step consume each slot's whole
+                    # window with ONE block-Woodbury dispatch and reset the
+                    # per-slot write counts.  Slots with no stats are not
+                    # in any sig group, so window, count, and factors stay
+                    # untouched — the rank-1 no-op contract; inside the
+                    # branch cnt >= 1 always (the push precedes it).
+                    aw = a_win if whole else a_win[idx]
+                    gw = g_win if whole else g_win[idx]
+                    cnt = n_cnt if whole else n_cnt[idx]
+                    cnt_b = cnt.reshape(cnt.shape + (1,) * ns)
+                    aw = statlib.window_push(aw, cnt_b, av)
+                    gw = statlib.window_push(gw, cnt_b, gv)
+                    cnt = cnt + 1
+
+                    def inv_branch(l, r, aw=aw, gw=gw, cnt=cnt, ns=ns):
+                        stab = _vmap_over_stack(stab_slice, ns + 1)
+                        cnt_full = jnp.broadcast_to(
+                            cnt.reshape(cnt.shape + (1,) * ns),
+                            l.shape[:ns + 1])
+                        g_ord = statlib.window_ordered(gw, cnt_full)
+                        a_ord = statlib.window_ordered(aw, cnt_full)
+                        if cfg.dist is None \
+                                or collectives.world_size(cfg.dist) <= 1:
+                            l_new = banked_block(stab(l), g_ord, cnt_full,
+                                                 ns + 1)
+                            r_new = banked_block(stab(r), a_ord, cnt_full,
+                                                 ns + 1)
+                        else:
+                            # Owner-sharded block inversions (DESIGN.md
+                            # §10/§11): flatten (slot x stack) slices, each
+                            # worker block-updates only its owned chunk of
+                            # factors + windows + counts, inverse slices
+                            # all-gathered.  Zero-padded slices carry
+                            # count 0 -> exact no-op -> inert.
+                            def sharded(j, v, c):
+                                n = 1
+                                for d in j.shape[:ns + 1]:
+                                    n *= d
+                                new = collectives.owner_sharded_map(
+                                    lambda jc, vc, cc: banked_block(
+                                        _vmap_over_stack(stab_slice, 1)(jc),
+                                        vc, cc, 1),
+                                    (j.reshape((n,) + j.shape[ns + 1:]),
+                                     v.reshape((n,) + v.shape[ns + 1:]),
+                                     c.reshape((n,))),
+                                    cfg.dist, n)
+                                return new.reshape(j.shape)
+
+                            l_new = sharded(l, g_ord, cnt_full)
+                            r_new = sharded(r, a_ord, cnt_full)
+                        return l_new, r_new
+
+                    l_new, r_new = jax.lax.cond(
+                        do_inv, inv_branch, lambda l, r: (l, r),
+                        l_sub, r_sub)
+                    cnt = jnp.where(do_inv, 0, cnt)
+                    if whole:
+                        l_bank, r_bank = l_new, r_new
+                        a_win, g_win, n_cnt = aw, gw, cnt
+                    else:
+                        l_bank = l_bank.at[idx].set(l_new)
+                        r_bank = r_bank.at[idx].set(r_new)
+                        a_win = a_win.at[idx].set(aw)
+                        g_win = g_win.at[idx].set(gw)
+                        n_cnt = n_cnt.at[idx].set(cnt)
+                    continue
+
                 # lax.cond (not where): off-phase steps must skip the SMW
                 # work, or the staggered schedule has nothing to spread.
                 # With cfg.dist each worker stabilizes+SMWs only its owned
@@ -446,14 +671,13 @@ def mkor(backend: GradientTransformation,
                         n = 1
                         for d in j.shape[:ns + 1]:
                             n *= d
-                        jf = j.reshape((n,) + j.shape[ns + 1:])
-                        vf = v.reshape((n,) + v.shape[ns + 1:])
-                        jc = collectives.owner_shard(jf, cfg.dist)
-                        vc = collectives.owner_shard(vf, cfg.dist)
-                        new = banked_smw(_vmap_over_stack(stab_slice, 1)(jc),
-                                         vc, 1)
-                        return collectives.gather_shards(
-                            new, cfg.dist, n).reshape(j.shape)
+                        new = collectives.owner_sharded_map(
+                            lambda jc, vc: banked_smw(
+                                _vmap_over_stack(stab_slice, 1)(jc), vc, 1),
+                            (j.reshape((n,) + j.shape[ns + 1:]),
+                             v.reshape((n,) + v.shape[ns + 1:])),
+                            cfg.dist, n)
+                        return new.reshape(j.shape)
 
                     return sharded(l, gv), sharded(r, av)
 
@@ -466,6 +690,9 @@ def mkor(backend: GradientTransformation,
                     r_bank = r_bank.at[idx].set(r_new)
             new_banks[bucket.bucket_id] = {"l_inv": l_bank,
                                            "r_inv": r_bank}
+            if cfg.rank > 1:
+                new_windows[bucket.bucket_id] = {"a": a_win, "g": g_win,
+                                                 "n": n_cnt}
 
             # --- lines 9-10, banked: one batched two-sided precondition +
             # rescale over (bank, *stack); extra dims broadcast inside
@@ -477,7 +704,10 @@ def mkor(backend: GradientTransformation,
                 out = statlib.tree_set(
                     out, path,
                     {**statlib.tree_get(out, path), "w": delta[i]})
-        return out, {"factor_banks": new_banks}
+        fstate = {"factor_banks": new_banks}
+        if cfg.rank > 1:
+            fstate["stat_windows"] = new_windows
+        return out, fstate
 
     # ------------------------------------------------------------------ #
     def update(grads, state, params=None, stats=None, loss=None, **_):

@@ -235,13 +235,17 @@ def layer_phases(manifest: BucketManifest, inv_freq: int,
     return {ps: phases[b.bucket_id] for b in manifest for ps in b.path_strs}
 
 
-def bucket_cost(bucket: FactorBucket, factor_bytes: int = 2) -> Dict[str, Any]:
+def bucket_cost(bucket: FactorBucket, factor_bytes: int = 2,
+                rank: int = 1) -> Dict[str, Any]:
     """Analytic per-bucket factor FLOPs/bytes (launch/dryrun, benchmarks).
 
     Slices = bank slots x stacked repeats; each slice owns an (d_out, d_out)
-    L⁻¹ and (d_in, d_in) R⁻¹.  Per inversion each factor costs one matvec
-    (2d²) + the rank-1 axpy write (3d²); preconditioning is two matmuls per
-    step broadcast over the extra dims."""
+    L⁻¹ and (d_in, d_in) R⁻¹.  At ``rank`` r the phase-step inversion is one
+    block-Woodbury update per factor (DESIGN.md §11): r matvecs (2rd²), the
+    r×r Gram + solve (O(r²d + r³)), and the rank-r axpy write (~(2r+1)d²) —
+    still O(d²) in the factor dim, vs the chained path's r full rank-1
+    dispatches.  Preconditioning is two matmuls per step broadcast over the
+    extra dims, independent of rank."""
     n = bucket.n_slots
     for d in bucket.stack:
         n *= d
@@ -249,9 +253,14 @@ def bucket_cost(bucket: FactorBucket, factor_bytes: int = 2) -> Dict[str, Any]:
     for d in bucket.extra:
         b *= d
     di, do = bucket.d_in, bucket.d_out
-    smw_flops = n * 5 * (di * di + do * do)
+    r = max(rank, 1)
+    smw_flops = n * sum(
+        (4 * r + 1) * d * d + 2 * r * r * d + 2 * r ** 3
+        for d in (di, do))
     precond_flops = n * b * 2 * di * do * (di + do)
     factor_mem = n * (di * di + do * do) * factor_bytes
+    # fp32 ring windows of the last r stat vectors per factor (rank > 1)
+    window_mem = n * r * (di + do) * 4 if r > 1 else 0
     return {
         "bucket_id": bucket.bucket_id,
         "n_layers": bucket.n_slots,
@@ -260,12 +269,14 @@ def bucket_cost(bucket: FactorBucket, factor_bytes: int = 2) -> Dict[str, Any]:
         "d_in": di,
         "d_out": do,
         "slices": n,
+        "rank": r,
         "factor_bytes": factor_mem,
+        "window_bytes": window_mem,
         "smw_flops_per_inv": smw_flops,
         "precond_flops_per_step": precond_flops,
-        # SMW streams each factor twice (read for matvec + rank-1 read) and
-        # writes it once per inversion
-        "hbm_bytes_per_inv": 3 * factor_mem,
+        # block SMW streams each factor twice (read for the V matvecs +
+        # re-read for the axpy) and writes it once per inversion
+        "hbm_bytes_per_inv": 3 * factor_mem + 2 * window_mem,
     }
 
 
@@ -309,12 +320,18 @@ def bucket_owner_map(manifest: BucketManifest,
 
 def bucket_comm_cost(bucket: FactorBucket, world_size: int = 1,
                      factor_bytes: int = 2,
-                     stats_bytes: int = 2) -> Dict[str, Any]:
+                     stats_bytes: int = 2, rank: int = 1) -> Dict[str, Any]:
     """Analytic per-bucket collective payload bytes (per worker, per step)
     for the distributed schedules (DESIGN.md §10; benchmarks/comm_volume).
 
     * ``rank1_stats_bytes_per_step`` — MKOR's wire cost: every step each
       worker contributes one ā (d_in,) and one ḡ (d_out,) per slice.  O(d).
+      Independent of ``rank``: the rank-r window is rebuilt identically on
+      every worker from the per-step synced vectors (DESIGN.md §11), so
+      higher rank ships nothing extra per step.
+    * ``rank_window_bytes_per_inv`` — the O(r·d) total stat payload a
+      rank-r inversion window accumulates across its r contributing steps
+      (already counted step-wise above; reported for the wire-cost table).
     * ``kfac_factor_bytes_per_inv`` — the KFAC/KAISA-style alternative:
       full (d_in², d_out²) factor/inverse payload per factor update.  O(d²).
     * ``owner_gather_bytes_per_phase_step`` — owner-sharded inversions:
@@ -326,11 +343,53 @@ def bucket_comm_cost(bucket: FactorBucket, world_size: int = 1,
     di, do = bucket.d_in, bucket.d_out
     factor_mem = n * (di * di + do * do) * factor_bytes
     chunk = -(-n // max(world_size, 1))
+    step_bytes = n * (di + do) * stats_bytes
     return {
-        "rank1_stats_bytes_per_step": n * (di + do) * stats_bytes,
+        "rank1_stats_bytes_per_step": step_bytes,
+        "rank_window_bytes_per_inv": max(rank, 1) * step_bytes,
         "kfac_factor_bytes_per_inv": factor_mem,
         "owner_gather_bytes_per_phase_step": factor_mem * chunk // n,
     }
+
+
+# ----------------------------------------------------------------------- #
+# Rank-r stat windows (paper §4, DESIGN.md §11)
+#
+# With ``MKORConfig.rank = r > 1`` the optimizer buffers the last r per-step
+# rank-1 statistic vectors per factor in a ring window and consumes the
+# whole window with ONE block-Woodbury update on the factor's phase step.
+# The window is plain optimizer state: every worker builds it from the
+# already-synchronised per-step stats, so rank-r adds zero wire bytes per
+# step (O(r·d) total per inversion window, still linear in d).
+# ----------------------------------------------------------------------- #
+def window_push(win: jnp.ndarray, count: jnp.ndarray,
+                vec: jnp.ndarray) -> jnp.ndarray:
+    """Ring-write ``vec`` into row ``count % r`` of the window.
+
+    win: (*lead, r, d); vec: (*lead, d); count: int32 broadcastable to
+    ``lead`` — the number of writes since the last consume (BEFORE this
+    push).  Pure where-select, so the push costs O(r·d) per slice and
+    stays trivially vmappable/shardable."""
+    r = win.shape[-2]
+    pos = jnp.mod(jnp.asarray(count), r)
+    onehot = jnp.arange(r) == pos[..., None]               # (*lead, r)
+    return jnp.where(onehot[..., None], vec[..., None, :].astype(win.dtype),
+                     win)
+
+
+def window_ordered(win: jnp.ndarray, count: jnp.ndarray) -> jnp.ndarray:
+    """Return the window rows ordered oldest-first for consumption.
+
+    Until the ring wraps (count <= r) rows 0..count-1 already sit in write
+    order; after wrapping the oldest row is at ``count % r``, so the rows
+    are rotated to restore chaining order.  Rows beyond ``count`` are
+    stale/unwritten — the block update masks them via its n_valid weights."""
+    r = win.shape[-2]
+    count = jnp.asarray(count)
+    shift = jnp.where(count > r, jnp.mod(count, r), 0)
+    rows = (shift[..., None] + jnp.arange(r)) % r          # (*lead, r)
+    rows = jnp.broadcast_to(rows, win.shape[:-1])
+    return jnp.take_along_axis(win, rows[..., None], axis=-2)
 
 
 def zero_probes(tree):

@@ -102,6 +102,62 @@ def smw_rank1_update_banked(j: jnp.ndarray, v: jnp.ndarray, *, gamma: float,
     return out.reshape(j.shape)
 
 
+def smw_block_update(j_inv: jnp.ndarray, v: jnp.ndarray, *, gamma: float,
+                     variant: str = "paper", n_valid=None, block: int = 0,
+                     interpret: bool = False) -> jnp.ndarray:
+    """Fused-Pallas block rank-r Woodbury update (DESIGN.md §11).
+
+    v: (r, d) window rows oldest-first.  The √w_i row weights and the γ^m
+    base scale (core.mkor.block_weights — ``n_valid`` masks a partially
+    filled window) are applied here in fp32; the r matvecs, the r×r solve,
+    and the rank-r axpy then run in ONE ``pallas_call``
+    (kernels/rank1_smw.fused_block_smw) — vs r dispatches for the chained
+    rank-1 path.  The rank dim is sublane-padded with zero (inert) rows."""
+    from repro.core.mkor import block_weights
+    r, d = v.shape
+    assert j_inv.shape == (d, d), (j_inv.shape, v.shape)
+    sq, gm = block_weights(r if n_valid is None else n_valid, r, gamma)
+    vt = v.astype(jnp.float32) * sq[:, None]
+    blk = block or _pick_block(d)
+    rpad = -(-r // 8) * 8
+    jp = _pad_to(j_inv, blk, (0, 1))
+    vp = _pad_to(vt, blk, (1,))
+    if rpad != r:
+        vp = jnp.pad(vp, ((0, rpad - r), (0, 0)))
+    out = rk.fused_block_smw(
+        jp, vp, jnp.asarray(gm, jnp.float32).reshape(1, 1),
+        variant=variant, block=blk, interpret=interpret)
+    return out[:d, :d]
+
+
+def smw_block_update_banked(j: jnp.ndarray, v: jnp.ndarray, n_valid, *,
+                            gamma: float, variant: str = "paper",
+                            block: int = 0,
+                            interpret: bool = False) -> jnp.ndarray:
+    """Banked fused block update: ONE batched dispatch per bucket per phase
+    step (DESIGN.md §11).
+
+    j: (*lead, d, d); v: (*lead, r, d) ring windows ordered oldest-first
+    (core/stats.py window_ordered); n_valid: int broadcastable to ``lead``
+    — per-slice window fill counts (0 slices are exact no-ops).  As with
+    the rank-1 entry, lead may be a locally-sliced owner chunk, including
+    an empty one."""
+    d = j.shape[-1]
+    lead = j.shape[:-2]
+    r = v.shape[-2]
+    assert v.shape[:len(lead)] == lead, (v.shape, j.shape)
+    fn = partial(smw_block_update, gamma=gamma, variant=variant,
+                 block=block, interpret=interpret)
+    if not lead:
+        return fn(j, v, n_valid=n_valid)
+    if 0 in lead:                                   # empty owner slice
+        return j
+    nv = jnp.broadcast_to(jnp.asarray(n_valid), lead).reshape((-1,))
+    out = jax.vmap(lambda jj, vv, nn: fn(jj, vv, n_valid=nn))(
+        j.reshape((-1, d, d)), v.reshape((-1, r, d)), nv)
+    return out.reshape(j.shape)
+
+
 def pallas_matmul(a: jnp.ndarray, b: jnp.ndarray, *, block: int = 0,
                   out_dtype=jnp.float32, interpret: bool = False):
     m, k = a.shape

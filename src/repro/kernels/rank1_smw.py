@@ -13,6 +13,13 @@ is re-blocked for the TPU memory hierarchy (DESIGN.md §3):
   through HBM and there is a single kernel dispatch per factor (the
   separate matvec + rank1_update pair costs two dispatches plus an HBM
   round-trip for u).
+* ``fused_block_smw``: the rank-r generalization (paper §4, DESIGN.md
+  §11) on the same grid — pass 0 accumulates  U = JṼᵀ (d, r)  and the
+  Gram matrix  S = ṼJṼᵀ (r, r)  in VMEM, the first pass-1 tile inverts
+  the r×r mid matrix in-register (unrolled Gauss–Jordan; PD by the block
+  Lemma 3.1, so no pivoting), and every pass-1 tile writes the rank-r
+  axpy.  One dispatch per factor regardless of r, vs r chained
+  ``fused_smw`` dispatches.
 * ``matvec``: row-tiled mat-vec with fp32 accumulation across the column
   grid — each (BR, BC) tile of J streams HBM→VMEM once; u lives in VMEM.
 * ``rank1_update``: writes  γ·J_tile + coef·u_r u_cᵀ  tile-by-tile; the
@@ -159,6 +166,125 @@ def _fused_smw_kernel(j_ref, vr_ref, vc_ref, out_ref, u_ref, s_ref, *,
                         preferred_element_type=jnp.float32)
         out_ref[...] = (scale * j_ref[...].astype(jnp.float32)
                         + coef * outer).astype(out_ref.dtype)
+
+
+def _fused_block_smw_kernel(j_ref, vr_ref, vc_ref, gm_ref, out_ref,
+                            u_ref, s_ref, m_ref, *, variant: str,
+                            block: int, rank: int):
+    """Two-pass grid (pass, rows, cols) — the block rank-r SMW update
+    (DESIGN.md §11) in ONE dispatch.
+
+    Pass 0 accumulates the r matvecs  U = J Ṽᵀ (d, r)  into a persistent
+    VMEM scratch and the Gram matrix  S = Ṽ J Ṽᵀ (r, r)  tile-by-tile
+    (Ṽ rows arrive pre-weighted by √w_i — ops.py).  At the first pass-1
+    tile the r×r mid matrix  A(gm, S)  is inverted in-register with an
+    unrolled Gauss–Jordan (A is PD by Lemma 3.1's block generalization, so
+    no pivoting; rank is tiny and static) into m_ref; every pass-1 tile
+    then re-streams its J tile and writes the rank-r axpy
+
+        paper:      out = gm·J + U_i M U_kᵀ,   A = gm²I + gm³S
+        exact_smw:  out = (J − U_i M U_kᵀ)/gm, A = gm·I + S
+
+    U, S, and M never round-trip through HBM; gm = γ^m is a runtime scalar
+    (the window may be partially filled)."""
+    p, i, k = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+
+    @pl.when(p == 0)
+    def _accumulate():
+        t = jnp.dot(j_ref[...].astype(jnp.float32), vc_ref[...].T,
+                    preferred_element_type=jnp.float32)        # (B, r)
+
+        @pl.when(k == 0)
+        def _init_u():
+            u_ref[pl.ds(i * block, block), :] = jnp.zeros_like(t)
+
+        u_ref[pl.ds(i * block, block), :] += t
+
+        @pl.when((i == 0) & (k == 0))
+        def _init_s():
+            s_ref[...] = jnp.zeros_like(s_ref)
+
+        s_ref[...] += jnp.dot(vr_ref[...], t,
+                              preferred_element_type=jnp.float32)
+
+    @pl.when(p == 1)
+    def _write():
+        gm = gm_ref[0, 0]
+
+        @pl.when((i == 0) & (k == 0))
+        def _invert_mid():
+            rows = jax.lax.broadcasted_iota(jnp.int32, (rank, rank), 0)
+            cols = jax.lax.broadcasted_iota(jnp.int32, (rank, rank), 1)
+            eye = (rows == cols).astype(jnp.float32)
+            s = s_ref[...]
+            if variant == "paper":
+                a = gm * gm * eye + gm * gm * gm * s
+            elif variant == "exact_smw":
+                a = gm * eye + s
+            else:
+                raise ValueError(variant)
+            minv = eye
+            for kk in range(rank):          # unrolled: rank is static+tiny
+                piv = jnp.sum(jnp.where((rows == kk) & (cols == kk), a, 0.0))
+                arow = jnp.sum(jnp.where(rows == kk, a, 0.0),
+                               axis=0, keepdims=True) / piv
+                mrow = jnp.sum(jnp.where(rows == kk, minv, 0.0),
+                               axis=0, keepdims=True) / piv
+                col = jnp.sum(jnp.where(cols == kk, a, 0.0),
+                              axis=1, keepdims=True)
+                col = jnp.where(rows[:, :1] == kk, 0.0, col)
+                a = a - jnp.dot(col, arow,
+                                preferred_element_type=jnp.float32)
+                minv = minv - jnp.dot(col, mrow,
+                                      preferred_element_type=jnp.float32)
+                a = jnp.where(rows == kk, arow, a)
+                minv = jnp.where(rows == kk, mrow, minv)
+            m_ref[...] = minv
+
+        ui = u_ref[pl.ds(i * block, block), :]
+        uk = u_ref[pl.ds(k * block, block), :]
+        term = jnp.dot(
+            jnp.dot(ui, m_ref[...], preferred_element_type=jnp.float32),
+            uk.T, preferred_element_type=jnp.float32)
+        jf = j_ref[...].astype(jnp.float32)
+        if variant == "paper":
+            outv = gm * jf + term
+        else:
+            outv = (jf - term) / gm
+        out_ref[...] = outv.astype(out_ref.dtype)
+
+
+def fused_block_smw(j: jnp.ndarray, vt: jnp.ndarray, gm: jnp.ndarray, *,
+                    variant: str = "paper", block: int = DEFAULT_BLOCK,
+                    interpret: bool = False) -> jnp.ndarray:
+    """One-dispatch block rank-r SMW inverse update (DESIGN.md §11).
+
+    J: (d, d) any dtype; vt: (r, d) fp32 PRE-WEIGHTED window rows
+    (√w_i · v_i, ops.py computes the weights); gm: (1, 1) fp32 scalar γ^m.
+    d must be a block multiple and zero rows of vt are inert, so callers
+    pad both dims freely (kernels/ops.py)."""
+    d = j.shape[0]
+    r = vt.shape[0]
+    assert d % block == 0, f"pad to block multiple ({d} % {block})"
+    assert vt.shape == (r, d), (vt.shape, j.shape)
+    g = d // block
+    return pl.pallas_call(
+        functools.partial(_fused_block_smw_kernel, variant=variant,
+                          block=block, rank=r),
+        grid=(2, g, g),
+        in_specs=[
+            pl.BlockSpec((block, block), lambda p, i, k: (i, k)),
+            pl.BlockSpec((r, block), lambda p, i, k: (0, i)),
+            pl.BlockSpec((r, block), lambda p, i, k: (0, k)),
+            pl.BlockSpec((1, 1), lambda p, i, k: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block, block), lambda p, i, k: (i, k)),
+        out_shape=jax.ShapeDtypeStruct((d, d), j.dtype),
+        scratch_shapes=[pltpu.VMEM((d, r), jnp.float32),
+                        pltpu.VMEM((r, r), jnp.float32),
+                        pltpu.VMEM((r, r), jnp.float32)],
+        interpret=interpret,
+    )(j, vt, vt, gm)
 
 
 def fused_smw(j: jnp.ndarray, v: jnp.ndarray, *, gamma: float,

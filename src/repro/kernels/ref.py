@@ -57,6 +57,40 @@ def smw_rank1_update_banked_ref(j: jnp.ndarray, v: jnp.ndarray, gamma: float,
     return jnp.stack(outs).reshape(j.shape)
 
 
+def smw_block_update_ref(j_inv: jnp.ndarray, v: jnp.ndarray, gamma: float,
+                         variant: str = "paper", n_valid=None) -> jnp.ndarray:
+    """Dense oracle for the block rank-r Woodbury update (DESIGN.md §11),
+    written against the *forward* EMA target with an explicit r×r inverse
+    (independent of both the einsum path and the fused kernel).
+
+    m = min(n_valid, r) chained rank-1 EMAs compose to
+    γ^m J + Σ_{i<m} (1-γ)γ^(m-1-i) v_i v_iᵀ; the exact_smw variant is that
+    matrix's inverse via Woodbury, the paper variant the PD-preserving
+    generalization of Eq. 5/6 (positive rank-r term)."""
+    r, d = v.shape
+    jf = j_inv.astype(jnp.float32)
+    idx = jnp.arange(r, dtype=jnp.float32)
+    m = jnp.minimum(jnp.asarray(r if n_valid is None else n_valid,
+                                jnp.float32), float(r))
+    w = jnp.where(idx < m,
+                  (1.0 - gamma) * gamma ** jnp.maximum(m - 1.0 - idx, 0.0),
+                  0.0)
+    gm = gamma ** m
+    vt = v.astype(jnp.float32) * jnp.sqrt(w)[:, None]
+    u = vt @ jf.T                               # rows (J⁻¹ṽ_i)ᵀ, J symmetric
+    s = vt @ u.T
+    eye = jnp.eye(r, dtype=jnp.float32)
+    if variant == "paper":
+        mid = jnp.linalg.inv(gm ** 2 * eye + gm ** 3 * s)
+        new = gm * jf + u.T @ mid @ u
+    elif variant == "exact_smw":
+        mid = jnp.linalg.inv(gm * eye + s)
+        new = (jf - u.T @ mid @ u) / gm
+    else:
+        raise ValueError(variant)
+    return new.astype(j_inv.dtype)
+
+
 def two_sided_precondition_ref(l_inv: jnp.ndarray, r_inv: jnp.ndarray,
                                g_w: jnp.ndarray) -> jnp.ndarray:
     """ΔW = R⁻¹ G L⁻¹ (fp32)."""

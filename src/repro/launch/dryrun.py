@@ -78,8 +78,9 @@ def factor_bucket_report(params_sds, mcfg: MKORConfig = MKORConfig(),
     factor payload per inversion, owner-sharded inverse gather per phase
     step)."""
     fbytes = jnp.dtype(mcfg.factor_dtype).itemsize
-    return [{**statlib.bucket_cost(b, fbytes),
-             **statlib.bucket_comm_cost(b, world_size, fbytes, fbytes)}
+    return [{**statlib.bucket_cost(b, fbytes, rank=mcfg.rank),
+             **statlib.bucket_comm_cost(b, world_size, fbytes, fbytes,
+                                        rank=mcfg.rank)}
             for b in manifest_for(params_sds, mcfg)]
 
 

@@ -50,7 +50,7 @@ from repro.sharding import rules
 from repro.training import loop as train_lib
 
 
-def build_optimizer(name: str, lr, *, inv_freq: int = 10,
+def build_optimizer(name: str, lr, *, inv_freq: int = 10, rank: int = 1,
                     use_pallas: bool = False, platform: str = "",
                     dist=None):
     # Pallas interpret mode is a testing device, not an execution strategy:
@@ -62,10 +62,11 @@ def build_optimizer(name: str, lr, *, inv_freq: int = 10,
     backend = firstorder.lamb(lr)
     if name == "mkor":
         return mkor(backend, MKORConfig(
-            inv_freq=inv_freq, use_pallas=use_pallas, interpret=interpret,
-            dist=dist))
+            inv_freq=inv_freq, rank=rank, use_pallas=use_pallas,
+            interpret=interpret, dist=dist))
     if name == "mkor_h":
-        return mkor_h(backend, MKORConfig(inv_freq=inv_freq, dist=dist))
+        return mkor_h(backend, MKORConfig(inv_freq=inv_freq, rank=rank,
+                                          dist=dist))
     if name == "eva":
         return eva(backend, EvaConfig())
     if name == "lamb":
@@ -102,6 +103,10 @@ def main() -> None:
     ap.add_argument("--schedule", default="cosine",
                     choices=["constant", "wsd", "cosine", "linear"])
     ap.add_argument("--inv-freq", type=int, default=10)
+    ap.add_argument("--rank", type=int, default=1,
+                    help="block rank-r updates (paper §4): buffer the last "
+                         "r stat vectors per factor and consume the window "
+                         "with one block-Woodbury update per phase step")
     ap.add_argument("--reduced", action="store_true",
                     help="train the smoke-scale variant of the arch")
     ap.add_argument("--use-pallas", action="store_true",
@@ -138,7 +143,8 @@ def main() -> None:
         mesh = mesh_lib.make_host_mesh(n_data=args.dist_devices)
         dist = collectives.dist_axes(mesh, mesh_lib.mesh_axes(mesh))
     opt = build_optimizer(args.optimizer, lr, inv_freq=args.inv_freq,
-                          use_pallas=args.use_pallas, dist=dist)
+                          rank=args.rank, use_pallas=args.use_pallas,
+                          dist=dist)
 
     params = model_lib.init_params(jax.random.PRNGKey(args.seed), cfg)
     n_params = model_lib.param_count(params)

@@ -101,7 +101,11 @@ def pmean_rank1_stats(stats, dist: DistSpec,
     per-sample ``"A"``/``"G"`` matrices).  Only the O(d) ``"a"`` means are
     exchanged — that is MKOR's linear-communication contract; full-stat
     leaves are dropped from the reduced tree (a KFAC-style optimizer needs
-    its own O(d²) schedule and cannot ride this one).
+    its own O(d²) schedule and cannot ride this one).  The reduction is
+    shape-agnostic: a rank-r stat block (r, d) still rides it at O(r·d) —
+    though the block rank-r schedule (DESIGN.md §11) deliberately ships
+    only the per-step (d,) vectors and rebuilds its ring windows from them
+    on every worker, so ``MKORConfig.rank`` adds zero wire bytes per step.
 
     ``payload_dtype`` quantizes the payload (default bf16, matching
     ``MKORConfig.factor_dtype``); the psum itself runs in fp32 — that is
@@ -182,6 +186,22 @@ def owner_shard(x: jnp.ndarray, dist: DistSpec) -> jnp.ndarray:
         x = jnp.pad(x, [(0, padded - x.shape[0])] + [(0, 0)] * (x.ndim - 1))
     off = worker_index(dist) * chunk
     return lax.dynamic_slice_in_dim(x, off, chunk, axis=0)
+
+
+def owner_sharded_map(fn, arrays, dist: DistSpec,
+                      n_slots: int) -> jnp.ndarray:
+    """Owner-sharded map over dim 0: slice each array's owned chunk
+    (:func:`owner_shard`), apply ``fn`` to the local chunks, and recombine
+    the result's dim 0 (:func:`gather_shards`).
+
+    ``fn(*chunks)`` must return ONE array whose dim 0 matches the chunk
+    extent; zero-padded slots reach it and must be numerically inert (the
+    factor paths guarantee this: zero factor + zero vector, or a rank-r
+    window count of 0, is a no-op).  This is the single home of the
+    pad/slice/compute/recombine contract the optimizer's rank-1 and
+    block-rank-r inversions share (DESIGN.md §10/§11)."""
+    chunks = [owner_shard(x, dist) for x in arrays]
+    return gather_shards(fn(*chunks), dist, n_slots)
 
 
 def gather_shards(x: jnp.ndarray, dist: DistSpec, n_slots: int) -> jnp.ndarray:

@@ -27,5 +27,39 @@ def rng():
     return np.random.default_rng(0)
 
 
+# --------------------------------------------------------------------- #
+# Session-scoped caches (tier-1 budget): the standard small workloads are
+# built once per session instead of once per test.  Everything handed out
+# here is treated functionally by the optimizers (params are never mutated
+# in place), so sharing is safe.
+# --------------------------------------------------------------------- #
+@pytest.fixture(scope="session")
+def ae_params():
+    """The canonical autoencoder params (96 -> 48/12/48) used across the
+    MKOR/dist equivalence tests."""
+    from repro.core import baseline_net
+    return baseline_net.init_autoencoder(jax.random.key(0), 96,
+                                         (48, 12, 48))
+
+
+@pytest.fixture(scope="session")
+def ae_manifest(ae_params):
+    """Bucket manifest of :func:`ae_params` under the default exclusions."""
+    from repro.core.mkor import MKORConfig, manifest_for
+    return manifest_for(ae_params, MKORConfig(exclude=()))
+
+
+@pytest.fixture(scope="session")
+def tiny_model_cfg():
+    """A 2-layer dense ModelConfig small enough that full train-step
+    compiles stay cheap — the shared fixture for model-level plumbing
+    tests that do not need a real architecture."""
+    from repro.models.config import ModelConfig
+    return ModelConfig(name="t", arch_type="dense", n_layers=2, d_model=32,
+                       n_heads=2, n_kv_heads=2, d_ff=64, vocab_size=64,
+                       dtype="float32", scan_layers=False, remat=False,
+                       vocab_pad_multiple=1)
+
+
 def pytest_configure(config):
     config.addinivalue_line("markers", "slow: long-running integration test")

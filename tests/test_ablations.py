@@ -2,6 +2,8 @@
 and the exact-SMW inverse variant."""
 import dataclasses
 
+import pytest
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -24,6 +26,7 @@ def _one_step(cfg, mcfg=MKORConfig(inv_freq=1)):
     return params, state, float(m["loss"])
 
 
+@pytest.mark.slow   # heaviest MoE compile (~29s); nightly CI job
 def test_per_expert_factors_shapes_and_training():
     cfg = registry.get_config("mixtral-8x22b").reduced()
     cfg = dataclasses.replace(

@@ -160,6 +160,92 @@ def test_banked_smw_rank_r():
 
 
 # ---------------------------------------------------------------------- #
+# Fused block rank-r Woodbury kernel (paper §4, DESIGN.md §11)
+# ---------------------------------------------------------------------- #
+@pytest.mark.parametrize("d,r", [(64, 2), (100, 3), (128, 8)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("variant", ["paper", "exact_smw"])
+def test_fused_block_smw_matches_ref(d, r, dtype, variant):
+    """ops.smw_block_update (one pallas_call: r matvecs + r×r Gauss-Jordan
+    solve + rank-r axpy, with rank/dim padding) vs the dense oracle."""
+    j = _pd_matrix(jax.random.key(d), d, dtype)
+    v = jax.random.normal(jax.random.key(d + r), (r, d), jnp.float32)
+    got = ops.smw_block_update(j, v, gamma=0.9, variant=variant,
+                               interpret=True)
+    want = ref.smw_block_update_ref(j, v, 0.9, variant)
+    tol = 5e-2 if dtype == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(got.astype(jnp.float32),
+                               want.astype(jnp.float32), rtol=tol, atol=tol)
+
+
+def test_fused_block_smw_equals_chained_rank1():
+    """The exact_smw block kernel == r chained rank-1 exact updates — the
+    fused dispatch replaces the chain without changing the math."""
+    d, r = 64, 4
+    j = _pd_matrix(jax.random.key(0), d, jnp.float32)
+    v = jax.random.normal(jax.random.key(1), (r, d), jnp.float32)
+    got = ops.smw_block_update(j, v, gamma=0.9, variant="exact_smw",
+                               interpret=True)
+    want = j
+    for i in range(r):
+        want = ref.smw_rank1_update_ref(want, v[i], 0.9, "exact_smw")
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("n_valid", [0, 1, 2])
+def test_fused_block_smw_partial_window(n_valid):
+    """Runtime n_valid masks stale ring rows; n_valid=0 is an exact no-op
+    (the zero-window edge case, core/mkor.py)."""
+    d, r = 64, 3
+    j = _pd_matrix(jax.random.key(5), d, jnp.float32)
+    v = jax.random.normal(jax.random.key(6), (r, d), jnp.float32)
+    got = ops.smw_block_update(j, v, gamma=0.9, variant="exact_smw",
+                               n_valid=jnp.asarray(n_valid), interpret=True)
+    want = ref.smw_block_update_ref(j, v, 0.9, "exact_smw", n_valid=n_valid)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+    if n_valid == 0:
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(j))
+
+
+@pytest.mark.parametrize("lead", [(3,), (2, 2)])
+def test_fused_block_smw_banked(lead):
+    """Banked entry: flattened lead dims vmapped over ONE fused kernel with
+    per-slice n_valid — one batched dispatch per bucket per phase step."""
+    d, r = 100, 2
+    n = int(np.prod(lead))
+    j = jnp.stack([_pd_matrix(jax.random.key(i), d, jnp.float32)
+                   for i in range(n)]).reshape(lead + (d, d))
+    v = jax.random.normal(jax.random.key(50), lead + (r, d), jnp.float32)
+    nv = (jnp.arange(n) % (r + 1)).reshape(lead)
+    got = ops.smw_block_update_banked(j, v, nv, gamma=0.9,
+                                      variant="paper", interpret=True)
+    jf = j.reshape((n, d, d))
+    vf = v.reshape((n, r, d))
+    nf = nv.reshape((n,))
+    for i in range(n):
+        want = ref.smw_block_update_ref(jf[i], vf[i], 0.9, "paper",
+                                        n_valid=int(nf[i]))
+        np.testing.assert_allclose(got.reshape((n, d, d))[i], want,
+                                   rtol=1e-4, atol=1e-4)
+    # one pallas dispatch for the whole bank, r-independent
+    jaxpr = str(jax.make_jaxpr(
+        lambda a, b, c: ops.smw_block_update_banked(
+            a, b, c, gamma=0.9, interpret=True))(j, v, nv))
+    assert jaxpr.count("pallas_call") == 1
+
+
+def test_fused_block_smw_banked_empty_owner_chunk():
+    """Owner-sharded dist path hands locally-sliced (possibly empty) bank
+    chunks to the banked entry — an empty chunk returns unchanged."""
+    d, r = 32, 2
+    j = jnp.zeros((0, d, d), jnp.float32)
+    v = jnp.zeros((0, r, d), jnp.float32)
+    out = ops.smw_block_update_banked(j, v, jnp.zeros((0,), jnp.int32),
+                                      gamma=0.9, interpret=True)
+    assert out.shape == j.shape
+
+
+# ---------------------------------------------------------------------- #
 # Fused two-sided precondition + rescale kernel (Alg. 1 lines 9-10)
 # ---------------------------------------------------------------------- #
 @pytest.mark.parametrize("din,dout", [(32, 48), (64, 64), (100, 64),

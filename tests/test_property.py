@@ -10,7 +10,8 @@ pytest.importorskip(
            "suite is skipped, not errored, when it is absent")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
-from repro.core.mkor import (rescale_update, smw_rank1_update, stabilize)
+from repro.core.mkor import (rescale_update, smw_block_update,
+                             smw_rank1_update, stabilize)
 from repro.launch import hlo_analysis
 
 SETTINGS = dict(max_examples=25, deadline=None)
@@ -90,6 +91,88 @@ def test_lemma_3_2_quantization_error_bounded(seed, d, gamma):
     eps = 2.0 ** -8                                   # bf16 mantissa
     bound = (gamma + 4 * (1 - gamma) / gamma ** 2 * m ** 3 * d ** 2) * eps
     assert err <= 4.0 * bound
+
+
+# --------------------------------------------------------------------- #
+# Block rank-r Woodbury differential properties (paper §4, DESIGN.md §11)
+# --------------------------------------------------------------------- #
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2**31 - 1), d=st.integers(2, 20),
+       r=st.integers(1, 6), gamma=st.floats(0.1, 0.99),
+       dtype=st.sampled_from(["float32", "bfloat16"]))
+def test_block_woodbury_equals_chained_and_dense(seed, d, r, gamma, dtype):
+    """Differential: block-Woodbury == r chained exact_smw rank-1 updates
+    == dense jnp.linalg.inv of the composed EMA target — any d, r, γ, and
+    factor dtype (bf16 compared at bf16 tolerance)."""
+    j = _pd_from_seed(seed, d)
+    j_inv = jnp.linalg.inv(j).astype(dtype)
+    v = jax.random.normal(jax.random.key(seed + 1), (r, d))
+    block = smw_block_update(j_inv, v, gamma, "exact_smw")
+    chained = j_inv
+    for i in range(r):
+        chained = smw_rank1_update(chained, v[i], gamma, "exact_smw")
+    tol = 5e-2 if dtype == "bfloat16" else 1e-3
+    np.testing.assert_allclose(np.asarray(block, np.float32),
+                               np.asarray(chained, np.float32),
+                               rtol=tol, atol=tol)
+    if dtype == "float32":
+        target = gamma ** r * j
+        for i in range(r):
+            target = target + (1 - gamma) * gamma ** (r - 1 - i) \
+                * jnp.outer(v[i], v[i])
+        np.testing.assert_allclose(np.asarray(block),
+                                   np.asarray(jnp.linalg.inv(target)),
+                                   rtol=1e-3, atol=1e-3)
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2**31 - 1), d=st.integers(2, 16),
+       r=st.integers(1, 5), gamma=st.floats(0.3, 0.99),
+       scale=st.floats(1e-2, 1e2))
+def test_block_paper_update_preserves_pd(seed, d, r, gamma, scale):
+    """Lemma 3.1's block generalization as a property: the paper-variant
+    rank-r update keeps the factor PD for any window, γ, and scale."""
+    j_inv = jnp.linalg.inv(_pd_from_seed(seed, d))
+    v = scale * jax.random.normal(jax.random.key(seed + 1), (r, d))
+    out = smw_block_update(j_inv, v, gamma, "paper")
+    eigs = np.linalg.eigvalsh(np.asarray((out + out.T) / 2, np.float64))
+    assert eigs.min() > 0
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2**31 - 1), d=st.integers(2, 16),
+       r=st.integers(2, 5), gamma=st.floats(0.3, 0.99),
+       n_valid=st.integers(0, 7))
+def test_block_partial_window_equals_shorter_chain(seed, d, r, gamma,
+                                                   n_valid):
+    """n_valid masks the window: the block update == chaining only the
+    first min(n_valid, r) rows; n_valid=0 is an exact no-op."""
+    j_inv = jnp.linalg.inv(_pd_from_seed(seed, d))
+    v = jax.random.normal(jax.random.key(seed + 2), (r, d))
+    got = smw_block_update(j_inv, v, gamma, "exact_smw",
+                           n_valid=jnp.asarray(n_valid))
+    want = j_inv
+    for i in range(min(n_valid, r)):
+        want = smw_rank1_update(want, v[i], gamma, "exact_smw")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-3, atol=1e-3)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), d=st.integers(4, 48),
+       r=st.integers(1, 4), gamma=st.floats(0.3, 0.99),
+       variant=st.sampled_from(["paper", "exact_smw"]))
+def test_fused_block_kernel_matches_einsum(seed, d, r, gamma, variant):
+    """The fused Pallas block kernel (interpret mode) == the jnp einsum
+    path across random shapes, ranks, γ, and both variants."""
+    from repro.kernels import ops
+    j_inv = jnp.linalg.inv(_pd_from_seed(seed, d))
+    v = jax.random.normal(jax.random.key(seed + 3), (r, d))
+    got = ops.smw_block_update(j_inv, v, gamma=gamma, variant=variant,
+                               interpret=True)
+    want = smw_block_update(j_inv, v, gamma, variant)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-3, atol=1e-3)
 
 
 @settings(**SETTINGS)

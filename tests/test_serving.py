@@ -13,8 +13,14 @@ from repro.models import model as model_lib
 from repro.models.config import LayerSpec, ModelConfig
 from repro.training import serving
 
-FAMILIES = ["minicpm-2b", "gemma2-9b", "mixtral-8x22b", "rwkv6-3b",
-            "jamba-v0.1-52b", "whisper-base", "pixtral-12b"]
+# Tier-1 runs the cheapest family end-to-end; the full per-family sweep
+# (3 compiles each, ~60s total on the 2-core host) runs in the nightly CI
+# job (pytest.ini slow tier) — decode/cache-shape structure is shared, so
+# one fast-tier family keeps the path covered.
+_SLOW_FAMILIES = ["gemma2-9b", "mixtral-8x22b", "rwkv6-3b",
+                  "jamba-v0.1-52b", "whisper-base", "pixtral-12b"]
+FAMILIES = ["minicpm-2b"] + [
+    pytest.param(a, marks=pytest.mark.slow) for a in _SLOW_FAMILIES]
 
 
 def _setup(arch, seq=24):
@@ -86,8 +92,12 @@ def test_sliding_window_cache_is_bounded():
     assert k.shape[-3] == 8, f"ring cache should be window-bounded: {k.shape}"
 
 
+@pytest.mark.slow
 def test_sliding_window_decode_matches_full():
-    """SWA prefill+decode == SWA full forward (ring buffer correctness)."""
+    """SWA prefill+decode == SWA full forward (ring buffer correctness).
+    Slow tier: the 3-compile chain (~20s on the 2-core host) is the
+    heaviest serving test; the ring-buffer shape check above and the
+    per-family decode tests keep the fast-tier coverage."""
     cfg = ModelConfig(
         name="swa-test", arch_type="dense", n_layers=2, d_model=64,
         n_heads=2, n_kv_heads=2, d_ff=128, vocab_size=128,

@@ -79,6 +79,52 @@ def test_get_g_vec_strips_broadcast_dims():
     assert g.shape == (5, 16)
 
 
+def test_window_push_and_ordered_ring():
+    """Ring semantics (DESIGN.md §11): writes land at count % r and
+    window_ordered returns rows oldest-first before AND after wrapping."""
+    r, d = 3, 4
+    win = jnp.zeros((r, d))
+    vecs = [jnp.full((d,), float(i + 1)) for i in range(5)]
+    for i, v in enumerate(vecs):
+        win = statlib.window_push(win, jnp.asarray(i), v)
+        ordered = statlib.window_ordered(win, jnp.asarray(i + 1))
+        # the first min(i+1, r) rows are the valid ones (block_weights
+        # masks the rest), oldest-first = the last min(i+1, r) writes
+        want = [float(k + 1) for k in range(max(0, i + 1 - r), i + 1)]
+        got = [float(row[0]) for row in np.asarray(ordered)][:len(want)]
+        assert got == want, (i, got, want)
+
+
+def test_window_push_broadcasts_lead_dims():
+    """Banked windows: per-slot counts broadcast over stack dims."""
+    slots, stack, r, d = 2, 3, 2, 4
+    win = jnp.zeros((slots, stack, r, d))
+    vec = jnp.ones((slots, stack, d))
+    cnt = jnp.asarray([0, 1])[:, None]              # slot 1 mid-ring
+    out = statlib.window_push(win, cnt, vec)
+    np.testing.assert_array_equal(np.asarray(out[0, :, 0]), 1.0)
+    np.testing.assert_array_equal(np.asarray(out[0, :, 1]), 0.0)
+    np.testing.assert_array_equal(np.asarray(out[1, :, 1]), 1.0)
+    np.testing.assert_array_equal(np.asarray(out[1, :, 0]), 0.0)
+
+
+def test_bucket_cost_rank_scaling():
+    """Rank-r inversion FLOPs grow ~linearly in r at fixed d; window bytes
+    are O(r·d) and zero at rank 1 (no window state)."""
+    b = statlib.FactorBucket(bucket_id="64x128", stack=(), extra=(),
+                             d_in=64, d_out=128, paths=(("x",),), index=0)
+    c1 = statlib.bucket_cost(b, rank=1)
+    c4 = statlib.bucket_cost(b, rank=4)
+    assert c1["window_bytes"] == 0
+    assert c4["window_bytes"] == 4 * (64 + 128) * 4
+    assert c4["smw_flops_per_inv"] < 4.1 * c1["smw_flops_per_inv"]
+    assert c4["smw_flops_per_inv"] > 2 * c1["smw_flops_per_inv"]
+    comm = statlib.bucket_comm_cost(b, world_size=4, rank=4)
+    # rank-r ships nothing extra per step; the window total is r * per-step
+    assert comm["rank_window_bytes_per_inv"] == \
+        4 * comm["rank1_stats_bytes_per_step"]
+
+
 def test_zero_probes():
     tree = {"a": {"w": jnp.ones((2, 2)), "probe": jnp.ones((2,))},
             "lst": [{"probe": jnp.ones(3)}]}
