@@ -1,5 +1,5 @@
 # Single verification gate (ROADMAP.md tier-1 + launcher smokes).
-.PHONY: verify verify-dist test bench-step-time
+.PHONY: verify verify-dist test lint bench-step-time
 
 verify:
 	bash scripts/verify.sh
@@ -11,6 +11,12 @@ verify-dist:
 # tier-1 only (the fast suite; pytest.ini excludes slow-marked tests)
 test:
 	PYTHONPATH=src python -m pytest -x -q
+
+# mkor-lint: static jaxpr/HLO contract linter (repro.analysis) over the
+# real train steps — O(d) comm, dtype discipline, VMEM plans, donation.
+# Exits 1 on any ERROR diagnostic (the CI lint-hlo job gates on this).
+lint:
+	PYTHONPATH=src python -m repro.analysis.lint --config bert_large --dist
 
 bench-step-time:
 	PYTHONPATH=src python -m benchmarks.step_time

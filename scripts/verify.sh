@@ -4,10 +4,15 @@
 #
 # 1. tier-1 pytest: the fast suite from ROADMAP.md (slow-marked tests are
 #    excluded by pytest.ini; tests/conftest.py pins 8 fake CPU devices so
-#    the shard_map/distributed paths are exercised);
-# 2. a one-config launch/dryrun.py smoke (AOT lower + compile against the
+#    the shard_map/distributed paths are exercised).  Runs under
+#    pytest-xdist (-n auto) when installed — CI installs it from
+#    requirements-dev.txt; without it the serial run must still fit the
+#    TIER1_BUDGET_S wall-time budget;
+# 2. mkor-lint: the static jaxpr/HLO contract linter (repro.analysis) on
+#    bert-large incl. the --dist step — ERROR diagnostics fail the gate;
+# 3. a one-config launch/dryrun.py smoke (AOT lower + compile against the
 #    production mesh, no arrays allocated);
-# 3. a 2-step launch/train.py smoke on a reduced config through the
+# 4. a 2-step launch/train.py smoke on a reduced config through the
 #    scan-chunk runner (real arrays, checkpointing path untouched).
 #
 #   scripts/verify.sh dist   (== make verify-dist) runs only the
@@ -32,10 +37,17 @@ if [[ "${1:-}" == "dist" ]]; then
 fi
 
 echo "== tier-1 pytest =="
+# Parallelize across workers when pytest-xdist is available (dev-only
+# dep; see pytest.ini for why -n auto is not hard-coded there).
+XDIST_ARGS=""
+if python -c "import xdist" >/dev/null 2>&1; then
+    XDIST_ARGS="-n auto"
+    echo "(pytest-xdist detected: -n auto)"
+fi
 # TIER1_BUDGET_S (set by the CI fast job) turns the tier-1 wall-time budget
 # into a hard failure: exceeding it exits 124 instead of silently creeping.
 if [[ -n "${TIER1_BUDGET_S:-}" ]]; then
-    timeout "${TIER1_BUDGET_S}" python -m pytest -x -q || {
+    timeout "${TIER1_BUDGET_S}" python -m pytest -x -q $XDIST_ARGS || {
         ec=$?
         if [[ $ec -eq 124 ]]; then
             echo "tier-1 exceeded the ${TIER1_BUDGET_S}s wall-time budget"
@@ -43,8 +55,11 @@ if [[ -n "${TIER1_BUDGET_S:-}" ]]; then
         exit $ec
     }
 else
-    python -m pytest -x -q
+    python -m pytest -x -q $XDIST_ARGS
 fi
+
+echo "== mkor-lint (static jaxpr/HLO contract gate) =="
+python -m repro.analysis.lint --config bert_large --dist
 
 echo "== dryrun smoke (bert-large / train_4k) =="
 python -m repro.launch.dryrun --arch bert-large --shape train_4k \

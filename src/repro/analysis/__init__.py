@@ -1,0 +1,22 @@
+"""mkor-lint: static analysis over the traced/lowered train steps.
+
+MKOR's headline claims are structural — O(d) per-step communication,
+bf16-wire/fp32-accum dtype discipline, Pallas kernels inside the VMEM
+budget, donated scan carries — and all of them are visible in the jaxpr
+or the compiled HLO before a single step runs.  This package traces the
+real entry points (single-device, ``--dist`` shard_map, scan-chunked)
+and runs a pluggable set of checkers producing structured diagnostics.
+
+Modules
+-------
+``hlo``          the shared HLO-walking core (also backs launch/dryrun)
+``diagnostics``  Diagnostic / Report containers and rendering
+``jaxpr_walk``   recursive jaxpr walkers (collectives, dtypes, eps guards)
+``trace``        build LintTargets from the config registry or ad-hoc fns
+``checkers``     the four contract checkers + registry
+``lint``         CLI: ``python -m repro.analysis.lint --config NAME [--dist]``
+"""
+from repro.analysis.diagnostics import Diagnostic, Report, Severity  # noqa: F401
+
+# checkers/trace import jax + the model stack; keep the package import
+# light so the hlo core stays cheap to pull in (launch/hlo_analysis shim).

@@ -1,0 +1,641 @@
+"""Post-compile HLO analysis: the ONE HLO-walking core shared by the
+dry-run cost model (launch/dryrun.py via the launch/hlo_analysis.py shim)
+and the static invariant linter (repro.analysis.lint).
+
+Trip-count-aware FLOP / byte / collective accounting + roofline terms,
+plus the structural walkers the linter needs: per-site collective
+attribution with while/conditional context (:meth:`HloCost.collective_sites`)
+and donation/aliasing extraction (:func:`input_output_aliases`,
+:func:`count_donated_params`).
+
+Why not ``compiled.cost_analysis()``?  XLA's summary counts every while-loop
+body (``lax.scan`` over layers / over time) exactly ONCE and reports
+per-partition numbers, so a 56-layer scanned transformer is undercounted
+56x.  This module parses the optimized (post-SPMD) HLO text into its
+computations and costs them recursively:
+
+* ``while`` ops multiply their body cost by the trip count XLA annotates in
+  ``backend_config={"known_trip_count":{"n":...}}`` (fallback: the loop
+  bound constant in the condition computation);
+* ``fusion``/``call`` descend into the called computation for FLOPs but
+  count only fusion operands + result for bytes (a fused region reads its
+  inputs from HBM once — much closer to real traffic than XLA's per-op
+  "bytes accessed");
+* ``dot`` FLOPs come from the annotated contracting dims;
+* collective ops (all-gather / all-reduce / reduce-scatter / all-to-all /
+  collective-permute) accumulate operand bytes, trip-scaled.
+
+All numbers are PER-CHIP (the module is the partitioned per-device
+program).  Roofline terms (seconds, TPU v5e):
+
+    compute    = dot_flops  / 197e12 bf16 FLOP/s
+    memory     = bytes      / 819e9  B/s HBM
+    collective = coll_bytes / 50e9   B/s ICI  (per-link, per-chip)
+"""
+from __future__ import annotations
+
+import json
+import re
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+# TPU v5e hardware constants (per chip)
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+# ops that move no data / do no math
+_FREE_OPS = {"bitcast", "get-tuple-element", "tuple", "parameter",
+             "after-all", "partition-id", "replica-id", "copy-start",
+             "copy-done"}
+# elementwise-ish float ops counted at 1 flop / output element
+_ELTWISE = {"add", "subtract", "multiply", "divide", "maximum", "minimum",
+            "tanh", "exponential", "log", "rsqrt", "sqrt", "power", "negate",
+            "abs", "cosine", "sine", "logistic", "select", "compare",
+            "floor", "ceil", "round-nearest-afz", "sign", "atan2",
+            "remainder", "and", "or", "xor", "not", "clamp", "erf",
+            "cbrt", "expm1", "log1p", "tan"}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_NPART_RE = re.compile(r"num_partitions=(\d+)")
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->\s*.*\{\s*$")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*((?:\(.*?\)|\w+\[[\d,]*\](?:\{[\d,]*\})?|\s)+?)\s*([\w\-]+)\((.*)$")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"')
+_CALLS_RE = re.compile(r"(?:calls|to_apply|body)=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_LHS_C_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+
+def shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        b = _DTYPE_BYTES.get(m.group(1))
+        if b is None:
+            continue
+        n = 1
+        for d in m.group(2).split(","):
+            if d:
+                n *= int(d)
+        total += n * b
+    return total
+
+
+def shape_elems(shape_str: str) -> int:
+    """Elements of the first array shape in the string."""
+    m = _SHAPE_RE.search(shape_str)
+    if not m:
+        return 0
+    n = 1
+    for d in m.group(2).split(","):
+        if d:
+            n *= int(d)
+    return n
+
+
+def shape_dims(shape_str: str) -> List[int]:
+    m = _SHAPE_RE.search(shape_str)
+    if not m or not m.group(2):
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclass
+class Instr:
+    name: str
+    shape: str
+    op: str
+    operands: List[str]
+    rest: str                         # attrs after the operand list
+    argtext: str = ""                 # raw text inside the operand parens
+
+
+@dataclass
+class Cost:
+    dot_flops: float = 0.0
+    other_flops: float = 0.0
+    bytes: float = 0.0
+    coll_bytes: Dict[str, float] = field(
+        default_factory=lambda: {k: 0.0 for k in COLLECTIVES})
+    coll_counts: Dict[str, float] = field(
+        default_factory=lambda: {k: 0.0 for k in COLLECTIVES})
+
+    def __iadd__(self, o: "Cost") -> "Cost":
+        self.dot_flops += o.dot_flops
+        self.other_flops += o.other_flops
+        self.bytes += o.bytes
+        for k in COLLECTIVES:
+            self.coll_bytes[k] += o.coll_bytes[k]
+            self.coll_counts[k] += o.coll_counts[k]
+        return self
+
+    def scaled(self, s: float) -> "Cost":
+        return Cost(self.dot_flops * s, self.other_flops * s, self.bytes * s,
+                    {k: v * s for k, v in self.coll_bytes.items()},
+                    {k: v * s for k, v in self.coll_counts.items()})
+
+
+def _split_operands(args: str) -> Tuple[List[str], str, str]:
+    """Split 'a, %b, ...), attr=x' into (operand refs, attr tail, inner)."""
+    depth = 1
+    for i, ch in enumerate(args):
+        if ch in "([{":
+            depth += 1
+        elif ch in ")]}":
+            depth -= 1
+            if depth == 0:
+                inner, rest = args[:i], args[i + 1:]
+                return _OPERAND_RE.findall(inner), rest, inner
+    return _OPERAND_RE.findall(args), "", args
+
+
+def parse_computations(hlo_text: str) -> Dict[str, List[Instr]]:
+    comps: Dict[str, List[Instr]] = {}
+    cur: Optional[str] = None
+    for line in hlo_text.splitlines():
+        if cur is None:
+            m = _COMP_HDR.match(line)
+            if m:
+                cur = m.group(2)
+                comps[cur] = []
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        m = _INSTR_RE.match(line)
+        if not m:
+            # parameters: `%p = f32[..]{..} parameter(0)` matches; skip rest
+            continue
+        name, shape, op, args = m.groups()
+        operands, rest, inner = _split_operands(args)
+        comps[cur].append(Instr(name, shape.strip(), op, operands, rest,
+                                inner))
+    return comps
+
+
+class HloCost:
+    """Recursive, memoized cost model over the parsed computations."""
+
+    def __init__(self, hlo_text: str):
+        self.comps = parse_computations(hlo_text)
+        self.shapes: Dict[str, Dict[str, str]] = {
+            c: {i.name: i.shape for i in instrs}
+            for c, instrs in self.comps.items()
+        }
+        self._memo: Dict[str, Cost] = {}
+        self._entry = self._find_entry(hlo_text)
+        m = _NPART_RE.search(hlo_text[:2000])
+        self.num_partitions = int(m.group(1)) if m else 1
+
+    @staticmethod
+    def _find_entry(hlo_text: str) -> Optional[str]:
+        for line in hlo_text.splitlines():
+            if line.startswith("ENTRY"):
+                m = _COMP_HDR.match(line)
+                if m:
+                    return m.group(2)
+        return None
+
+    # ------------------------------------------------------------------ #
+    def _dot_flops(self, comp: str, ins: Instr) -> float:
+        out_elems = shape_elems(ins.shape)
+        mm = _LHS_C_RE.search(ins.rest)
+        k = 1
+        if mm and ins.operands:
+            lhs_shape = self.shapes[comp].get(ins.operands[0], "")
+            dims = shape_dims(lhs_shape)
+            for idx in mm.group(1).split(","):
+                if idx and int(idx) < len(dims):
+                    k *= dims[int(idx)]
+        return 2.0 * out_elems * k
+
+    def _trip_count(self, ins: Instr) -> float:
+        m = _TRIP_RE.search(ins.rest)
+        if m:
+            return float(m.group(1))
+        # fallback: largest integer constant in the condition computation
+        mc = _COND_RE.search(ins.rest)
+        best = 1.0
+        if mc and mc.group(1) in self.comps:
+            for ci in self.comps[mc.group(1)]:
+                if ci.op.startswith("constant"):
+                    mm = re.match(r"\s*(\d+)\s*$", ci.argtext)
+                    if mm:
+                        best = max(best, float(mm.group(1)))
+        return best
+
+    def _producer(self, comp: str, name: str) -> Optional[Instr]:
+        for ins in self.comps.get(comp, ()):
+            if ins.name == name:
+                return ins
+        return None
+
+    def _origin_is_bf16(self, comp: str, name: str, depth: int = 5) -> bool:
+        """True if ``name`` is an f32 view of bf16-native data.
+
+        The CPU backend has no bf16 dot/collective kernels, so XLA converts
+        bf16 tensors to f32 early and the collectives move f32 — on the TPU
+        target the same program keeps bf16 end-to-end.  We walk the
+        producer chain through copies/reshapes/fusion roots; a convert from
+        bf16, or a dot whose operands are converts from bf16, marks the
+        tensor as bf16-native."""
+        if depth <= 0:
+            return False
+        ins = self._producer(comp, name)
+        if ins is None:
+            return False
+        op = ins.op.split(".")[0]
+        if op == "convert":
+            src = ins.operands[0] if ins.operands else None
+            if src is not None:
+                s = self.shapes[comp].get(src, "")
+                return s.startswith("bf16")
+            return False
+        if op in ("copy", "bitcast", "transpose", "reshape"):
+            return bool(ins.operands) and self._origin_is_bf16(
+                comp, ins.operands[0], depth - 1)
+        if op == "dot":
+            return any(self._origin_is_bf16(comp, o, depth - 1)
+                       or self.shapes[comp].get(o, "").startswith("bf16")
+                       for o in ins.operands)
+        if op == "fusion":
+            sub = _CALLS_RE.search(ins.rest)
+            if sub and sub.group(1) in self.comps:
+                sub_instrs = self.comps[sub.group(1)]
+                if sub_instrs:
+                    root = sub_instrs[-1]
+                    return self._origin_is_bf16(sub.group(1), root.name,
+                                                depth - 1)
+        return False
+
+    def _effective_bytes(self, comp: str, operand: str) -> float:
+        """Operand bytes at the TPU-native width: f32 tensors that are
+        CPU-upcast views of bf16 data count at bf16 width."""
+        s = self.shapes[comp].get(operand, "")
+        b = shape_bytes(s)
+        if s.startswith("f32") and self._origin_is_bf16(comp, operand):
+            return b / 2.0
+        return float(b)
+
+    def _group_size(self, rest: str) -> int:
+        m = _GROUPS_RE.search(rest)          # replica_groups=[G,N]<=[...]
+        if m:
+            return max(int(m.group(2)), 1)
+        m = _GROUPS_BRACE_RE.search(rest)    # replica_groups={{0,1,..},..}
+        if m:
+            return max(len(m.group(1).split(",")), 1)
+        return self.num_partitions
+
+    def _link_bytes(self, kind: str, operand_bytes: float,
+                    rest: str) -> float:
+        """Ring-algorithm bytes crossing this chip's links.
+
+        all-reduce  : 2 (N-1)/N x size   (reduce-scatter + all-gather)
+        all-gather  : (N-1) x shard      (operand IS the local shard)
+        reduce-scatter / all-to-all : (N-1)/N x size
+        collective-permute          : size
+        """
+        n = self._group_size(rest)
+        if n <= 1:
+            return 0.0
+        if kind == "all-reduce":
+            return 2.0 * (n - 1) / n * operand_bytes
+        if kind == "all-gather":
+            return float(n - 1) * operand_bytes
+        if kind in ("reduce-scatter", "all-to-all"):
+            return (n - 1) / n * operand_bytes
+        return operand_bytes                 # collective-permute
+
+    def _fusion_io_bytes(self, comp: str, ins: Instr,
+                         sub_name: str) -> float:
+        """HBM traffic of one fusion: touched operand bytes + result.
+
+        A fused parameter consumed ONLY through dynamic-slice / gather is
+        charged the slice size, not the full buffer (the scan-over-layers
+        pattern reads 1/R of the stacked weights per trip).  A root
+        dynamic-update-slice writes only the update region of its aliased
+        buffer."""
+        sub = self.comps[sub_name]
+        sub_shapes = self.shapes[sub_name]
+        # parameter name -> index
+        param_idx: Dict[str, int] = {}
+        for si in sub:
+            if si.op == "parameter":
+                m = re.match(r"\s*(\d+)", si.argtext)
+                if m:
+                    param_idx[si.name] = int(m.group(1))
+        # per-parameter touched bytes
+        touched: Dict[int, float] = {}
+        full: Dict[int, float] = {}
+        outer_shapes = self.shapes[comp]
+        for pname, idx in param_idx.items():
+            if idx < len(ins.operands):
+                full[idx] = shape_bytes(outer_shapes.get(
+                    ins.operands[idx], sub_shapes.get(pname, "")))
+            else:
+                full[idx] = shape_bytes(sub_shapes.get(pname, ""))
+            uses = [si for si in sub if pname in si.operands]
+            if uses and all(si.op.split(".")[0] in ("dynamic-slice", "gather")
+                            or (si.op.split(".")[0] == "dynamic-update-slice"
+                                and si.operands and si.operands[0] == pname)
+                            for si in uses):
+                acc = 0.0
+                for si in uses:
+                    base = si.op.split(".")[0]
+                    if base == "dynamic-update-slice":
+                        upd = sub_shapes.get(si.operands[1], "") \
+                            if len(si.operands) > 1 else si.shape
+                        acc += shape_bytes(upd)
+                    else:
+                        acc += shape_bytes(si.shape)
+                touched[idx] = min(acc, full[idx])
+            else:
+                touched[idx] = full[idx]
+        # result: root DUS writes only the update region
+        root = sub[-1] if sub else None
+        out_bytes = shape_bytes(ins.shape)
+        if root is not None \
+                and root.op.split(".")[0] == "dynamic-update-slice" \
+                and len(root.operands) > 1:
+            out_bytes = shape_bytes(sub_shapes.get(root.operands[1],
+                                                   ins.shape))
+        return sum(touched.values()) + out_bytes
+
+    def comp_cost(self, comp: str) -> Cost:
+        if comp in self._memo:
+            return self._memo[comp]
+        self._memo[comp] = Cost()          # cycle guard
+        total = Cost()
+        shapes = self.shapes.get(comp, {})
+        for ins in self.comps.get(comp, ()):
+            op = ins.op.split(".")[0]
+            async_start = op.endswith("-start")
+            if async_start:
+                op = op[:-6]
+            elif op.endswith("-done") or op.endswith("-update"):
+                continue
+            if op in _FREE_OPS or op == "constant":
+                continue
+            if op in COLLECTIVES:
+                opnd_bytes = sum(self._effective_bytes(comp, o)
+                                 for o in ins.operands)
+                total.coll_bytes[op] += self._link_bytes(op, opnd_bytes,
+                                                         ins.rest)
+                total.coll_counts[op] += 1
+                total.bytes += opnd_bytes + shape_bytes(ins.shape)
+                continue
+            if op == "while":
+                body = _CALLS_RE.search(ins.rest)
+                trip = self._trip_count(ins)
+                if body and body.group(1) in self.comps:
+                    total += self.comp_cost(body.group(1)).scaled(trip)
+                continue
+            if op in ("fusion", "call", "map", "reduce", "reduce-window",
+                      "scatter", "select-and-scatter", "sort"):
+                sub = _CALLS_RE.search(ins.rest)
+                sub_name = sub.group(1) if sub else None
+                if sub_name in self.comps:
+                    inner = self.comp_cost(sub_name)
+                    if op in ("reduce", "scatter", "sort", "map",
+                              "reduce-window", "select-and-scatter"):
+                        # applied per output element-ish; approximate by
+                        # operand elements
+                        n = max(sum(shape_elems(shapes.get(o, ""))
+                                    for o in ins.operands), 1)
+                        total.dot_flops += inner.dot_flops * n
+                        total.other_flops += max(inner.other_flops, 1.0) * n
+                    else:
+                        total.dot_flops += inner.dot_flops
+                        total.other_flops += inner.other_flops
+                        # collectives inside fusions are impossible; flops
+                        # only — bytes handled at the fusion boundary below
+                if op == "fusion" and sub_name in self.comps:
+                    total.bytes += self._fusion_io_bytes(comp, ins, sub_name)
+                else:
+                    total.bytes += (sum(shape_bytes(shapes.get(o, ""))
+                                        for o in ins.operands)
+                                    + shape_bytes(ins.shape))
+                continue
+            if op == "dynamic-slice":
+                # reads only the slice (the loop-carried stacked buffer is
+                # NOT streamed in full every trip)
+                total.bytes += 2 * shape_bytes(ins.shape)
+                continue
+            if op == "dynamic-update-slice":
+                upd = shapes.get(ins.operands[1], "") \
+                    if len(ins.operands) > 1 else ins.shape
+                total.bytes += 2 * shape_bytes(upd)
+                continue
+            if op == "conditional":
+                branches = re.findall(r"%([\w.\-]+)", ins.rest)
+                sub = [self.comp_cost(b) for b in branches
+                       if b in self.comps]
+                if sub:
+                    best = max(sub, key=lambda c: c.dot_flops
+                               + c.other_flops)
+                    total += best
+                total.bytes += shape_bytes(ins.shape)
+                continue
+            if op == "dot":
+                total.dot_flops += self._dot_flops(comp, ins)
+            elif op == "convolution":
+                # rough: 2 * out_elems * (kernel elems / out-channels)
+                k_elems = shape_elems(shapes.get(
+                    ins.operands[1], "")) if len(ins.operands) > 1 else 1
+                out_dims = shape_dims(ins.shape)
+                oc = out_dims[-1] if out_dims else 1
+                total.dot_flops += 2.0 * shape_elems(ins.shape) \
+                    * max(k_elems // max(oc, 1), 1)
+            elif op in _ELTWISE:
+                total.other_flops += shape_elems(ins.shape)
+            total.bytes += (sum(shape_bytes(shapes.get(o, ""))
+                                for o in ins.operands)
+                            + shape_bytes(ins.shape))
+        self._memo[comp] = total
+        return total
+
+    def entry_cost(self) -> Cost:
+        if self._entry is None:
+            raise ValueError("no ENTRY computation found")
+        return self.comp_cost(self._entry)
+
+    # ------------------------------------------------------------------ #
+    # Linter walkers (repro.analysis.checkers)
+    # ------------------------------------------------------------------ #
+    def collective_sites(self) -> List["CollectiveSite"]:
+        """Every collective instruction reachable from ENTRY, annotated with
+        its structural context: the product of enclosing while-loop trip
+        counts (``trip``) and whether it sits inside a conditional branch
+        (``gated`` — the owner-gather collectives of the staggered inversion
+        schedule live under ``lax.cond`` and only fire on phase steps;
+        anything OUTSIDE a conditional is a per-step collective and must
+        obey the O(d) wire contract)."""
+        if self._entry is None:
+            return []
+        sites: List[CollectiveSite] = []
+        self._walk_sites(self._entry, 1.0, False, sites, set())
+        return sites
+
+    def _walk_sites(self, comp: str, trip: float, gated: bool,
+                    sites: List["CollectiveSite"], seen) -> None:
+        if (comp, gated) in seen:       # cycle guard (shared computations
+            return                      # re-walked per gating context)
+        seen = seen | {(comp, gated)}
+        for ins in self.comps.get(comp, ()):
+            op = ins.op.split(".")[0]
+            if op.endswith("-start"):
+                op = op[:-6]
+            elif op.endswith("-done") or op.endswith("-update"):
+                continue
+            if op in COLLECTIVES:
+                opnd_bytes = sum(
+                    float(shape_bytes(self.shapes[comp].get(o, "")))
+                    for o in ins.operands)
+                dims = shape_dims(self.shapes[comp].get(
+                    ins.operands[0], ins.shape)) if ins.operands else []
+                sites.append(CollectiveSite(
+                    kind=op, comp=comp, name=ins.name, shape=ins.shape,
+                    operand_dims=tuple(dims),
+                    operand_bytes=opnd_bytes,
+                    link_bytes=self._link_bytes(op, opnd_bytes, ins.rest),
+                    trip=trip, gated=gated,
+                    bf16_origin=any(self._origin_is_bf16(comp, o)
+                                    for o in ins.operands)))
+                continue
+            if op == "while":
+                body = _CALLS_RE.search(ins.rest)
+                if body and body.group(1) in self.comps:
+                    self._walk_sites(body.group(1),
+                                     trip * self._trip_count(ins), gated,
+                                     sites, seen)
+                continue
+            if op == "conditional":
+                for b in re.findall(r"%([\w.\-]+)", ins.rest):
+                    if b in self.comps:
+                        self._walk_sites(b, trip, True, sites, seen)
+                continue
+            sub = _CALLS_RE.search(ins.rest)
+            if sub and sub.group(1) in self.comps:
+                self._walk_sites(sub.group(1), trip, gated, sites, seen)
+
+
+@dataclass(frozen=True)
+class CollectiveSite:
+    """One collective instruction in context (see ``collective_sites``)."""
+    kind: str                  # all-reduce / all-gather / ...
+    comp: str                  # computation holding the instruction
+    name: str                  # instruction name
+    shape: str                 # result shape text
+    operand_dims: Tuple[int, ...]   # first operand's dims
+    operand_bytes: float
+    link_bytes: float
+    trip: float                # product of enclosing while trip counts
+    gated: bool                # inside a conditional branch (phase-gated)
+    bf16_origin: bool          # payload is an f32 view of bf16-native data
+
+
+# --------------------------------------------------------------------- #
+# Donation / aliasing extraction (repro.analysis donation lint)
+# --------------------------------------------------------------------- #
+_ALIAS_ENTRY_RE = re.compile(
+    r"\{([\d,\s]*)\}\s*:\s*\((\d+)\s*,\s*\{([\d,\s]*)\}\s*,?\s*"
+    r"([\w\-]*)\s*\)")
+
+
+def input_output_aliases(hlo_text: str) -> List[Dict[str, Any]]:
+    """Parse the ``input_output_alias={ {out}: (param, {idx}, kind), ... }``
+    header of a compiled HLO module.  Donated jit arguments show up here as
+    must-alias entries; an empty list means nothing was donated."""
+    start = hlo_text.find("input_output_alias={")
+    if start < 0:
+        return []
+    i = start + len("input_output_alias=")
+    depth = 0
+    for j in range(i, min(len(hlo_text), i + 1_000_000)):
+        if hlo_text[j] == "{":
+            depth += 1
+        elif hlo_text[j] == "}":
+            depth -= 1
+            if depth == 0:
+                body = hlo_text[i + 1:j]
+                break
+    else:
+        return []
+    out = []
+    for m in _ALIAS_ENTRY_RE.finditer(body):
+        out_idx = tuple(int(x) for x in m.group(1).split(",") if x.strip())
+        param_idx = tuple(int(x) for x in m.group(3).split(",") if x.strip())
+        out.append({"output_index": out_idx, "parameter": int(m.group(2)),
+                    "parameter_index": param_idx,
+                    "kind": m.group(4) or "may-alias"})
+    return out
+
+
+def count_donated_params(stablehlo_text: str) -> int:
+    """Number of donated entry parameters in a LOWERED (StableHLO) module.
+
+    jax marks each donated argument's parameter with a
+    ``tf.aliasing_output`` attribute at lowering time, so donation is
+    checkable without compiling."""
+    return stablehlo_text.count("tf.aliasing_output")
+
+
+def analyze(hlo_text: str) -> Dict:
+    """Full per-chip analysis of one compiled module."""
+    cost = HloCost(hlo_text).entry_cost()
+    return {
+        "dot_flops": cost.dot_flops,
+        "other_flops": cost.other_flops,
+        "flops": cost.dot_flops + cost.other_flops,
+        "bytes": cost.bytes,
+        "collective_bytes": dict(cost.coll_bytes),
+        "collective_total_bytes": float(sum(cost.coll_bytes.values())),
+        "collective_counts": dict(cost.coll_counts),
+    }
+
+
+def roofline(flops: float, bytes_accessed: float, coll_bytes: float,
+             n_chips: int = 1) -> Dict[str, float]:
+    """All inputs are PER-CHIP quantities (the analyzed module is the
+    partitioned per-device program)."""
+    compute = flops / PEAK_FLOPS
+    memory = bytes_accessed / HBM_BW
+    collective = coll_bytes / ICI_BW
+    terms = {"compute_s": compute, "memory_s": memory,
+             "collective_s": collective}
+    dom = max(terms, key=terms.get)
+    return {**terms, "dominant": dom.replace("_s", ""),
+            "bound_s": terms[dom]}
+
+
+def model_flops_per_step(n_params_active: int, n_tokens: int,
+                         mode: str) -> float:
+    """6·N·D for training; 2·N·D for inference forward."""
+    per_tok = 6 if mode == "train" else 2
+    return float(per_tok) * n_params_active * n_tokens
+
+
+# backwards-compat simple counters (used by tests) ----------------------- #
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    a = analyze(hlo_text)
+    return {k: int(v) for k, v in a["collective_bytes"].items()}
+
+
+def count_collectives(hlo_text: str) -> Dict[str, int]:
+    a = analyze(hlo_text)
+    return {k: int(v) for k, v in a["collective_counts"].items()}

@@ -1,0 +1,95 @@
+"""mkor-lint CLI: ``python -m repro.analysis.lint --config NAME [--dist]``.
+
+Traces the real train-step entry points for a registry config and runs
+the static contract checkers (checkers.py); exits 1 iff any ERROR-level
+diagnostic.  Everything is abstract (eval_shape + make_jaxpr + lowering)
+— no parameters are allocated and no step runs, so linting bert-large
+takes seconds.  ``--compile`` additionally compiles the dist step and
+recounts collectives in the optimized (post-SPMD) HLO — slower, but it
+catches anything the partitioner re-introduces.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+# --dist traces the shard_map step over fake host devices; the device
+# count must be forced before jax initializes (same dance as
+# launch/train.py)
+if "--dist" in sys.argv \
+        and "--xla_force_host_platform_device_count" \
+        not in os.environ.get("XLA_FLAGS", ""):
+    _n = 8
+    for _i, _a in enumerate(sys.argv):
+        try:
+            if _a == "--dist-devices":
+                _n = int(sys.argv[_i + 1])
+            elif _a.startswith("--dist-devices="):
+                _n = int(_a.split("=", 1)[1])
+        except (ValueError, IndexError):
+            pass
+    os.environ["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={_n} "
+        + os.environ.get("XLA_FLAGS", ""))
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(
+        description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("--config", required=True,
+                    help="registry arch id (bert_large / bert-large)")
+    ap.add_argument("--dist", action="store_true",
+                    help="also lint the explicit-collective shard_map "
+                         "step (comm-linearity runs only here)")
+    ap.add_argument("--dist-devices", type=int, default=8)
+    ap.add_argument("--reduced", action="store_true",
+                    help="lint the smoke-scale variant of the arch")
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=16,
+                    help="small by default: the factor dims the lints "
+                         "check are batch/seq independent")
+    ap.add_argument("--rank", type=int, default=1)
+    ap.add_argument("--inv-freq", type=int, default=10)
+    ap.add_argument("--chunk", type=int, default=2)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--compile", action="store_true",
+                    help="compile the dist step and recount collectives "
+                         "in the optimized HLO (slow on CPU)")
+    ap.add_argument("--checkers", nargs="*", default=None,
+                    help="subset of checkers to run (default: all)")
+    ap.add_argument("--json", default="",
+                    help="also write the report as JSON to this path")
+    args = ap.parse_args()
+
+    # deferred: these pull in jax, which must see XLA_FLAGS first
+    from repro.analysis import trace
+    from repro.analysis.checkers import run_checkers
+    from repro.core.mkor import MKORConfig
+
+    mkor_cfg = MKORConfig(inv_freq=args.inv_freq, rank=args.rank)
+    common = dict(mkor_cfg=mkor_cfg, global_batch=args.global_batch,
+                  seq_len=args.seq_len, reduced=args.reduced)
+
+    targets = []
+    print(f"mkor-lint: tracing {args.config} (single + chunk"
+          + (" + dist" if args.dist else "") + ") ...", flush=True)
+    targets.append(trace.single_target(args.config, **common))
+    targets.append(trace.chunk_target(args.config, chunk=args.chunk,
+                                      steps=args.steps, **common))
+    if args.dist:
+        targets.append(trace.dist_target(
+            args.config, world=args.dist_devices,
+            compile_hlo=args.compile, **common))
+
+    report = run_checkers(targets, names=args.checkers)
+    print(report.render())
+    if args.json:
+        report.to_json(args.json)
+        print(f"wrote {args.json}")
+    return report.exit_code()
+
+
+if __name__ == "__main__":
+    sys.exit(main())

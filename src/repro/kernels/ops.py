@@ -4,7 +4,11 @@ broadcast handling for expert/stack dims.  These are the entry points the
 MKOR optimizer uses when ``use_pallas=True``."""
 from __future__ import annotations
 
+import warnings
+from collections import Counter
+from dataclasses import dataclass
 from functools import partial
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
@@ -14,10 +18,34 @@ from repro.kernels import precond as pc
 from repro.kernels import rank1_smw as rk
 from repro.kernels import ref
 
-# fused_precondition falls back to the two-matmul path above this footprint
-# (the fused kernel keeps two (d_in, d_out) fp32 scratches + both factors
-# VMEM-resident; TPU VMEM is ~16 MB/core)
-_FUSED_PRECOND_VMEM_BUDGET = 12 * 2 ** 20
+# fused_precondition falls back to the two-matmul path above this
+# footprint; the constant lives next to the kernel it budgets
+# (kernels/precond.py docstring derives it)
+_FUSED_PRECOND_VMEM_BUDGET = pc.FUSED_PRECOND_VMEM_BUDGET
+
+
+class PallasFallbackWarning(UserWarning):
+    """A fused Pallas entry point fell back to its unfused path."""
+
+
+# (kernel, reason) -> trace-time fallback count; queryable in tests and
+# cross-checked by the static kernel lint (repro.analysis, pallas checker)
+_FALLBACK_COUNTS: Counter = Counter()
+
+
+def fallback_counts() -> dict:
+    return dict(_FALLBACK_COUNTS)
+
+
+def reset_fallback_counts() -> None:
+    _FALLBACK_COUNTS.clear()
+
+
+def _note_fallback(kernel: str, reason: str, detail: str) -> None:
+    _FALLBACK_COUNTS[(kernel, reason)] += 1
+    warnings.warn(
+        f"{kernel}: falling back to the unfused path ({reason}): {detail}",
+        PallasFallbackWarning, stacklevel=3)
 
 
 def _pad_to(x: jnp.ndarray, block: int, dims) -> jnp.ndarray:
@@ -48,6 +76,111 @@ def _pick_block(d: int, preferred: int = 256) -> int:
     else:
         cands = (128, 64, 32, 16, 8)
     return min(cands, key=lambda b: (_padded_size(d, b), -b))
+
+
+# ----------------------------------------------------------------------- #
+# Static dispatch plans (repro.analysis, pallas checker)
+#
+# Each fused entry point's padding/block/VMEM decision is a pure function
+# of the factor shapes + config, so the linter can check the 12MB budget,
+# tile alignment, and Gauss-Jordan rank bounds BEFORE anything dispatches.
+# The runtime paths below consume the same plans, so the lint and the
+# kernels agree by construction.
+# ----------------------------------------------------------------------- #
+@dataclass(frozen=True)
+class KernelPlan:
+    kernel: str                     # fused_precond | fused_smw | ...
+    dims: Tuple[int, ...]           # logical factor dims
+    padded: Tuple[int, ...]         # after block padding
+    block: Tuple[int, ...]          # chosen block sizes
+    grid: Tuple[int, ...]
+    rank: int                       # padded window rank (1 for rank-1)
+    vmem_bytes: int                 # scratch + resident + streaming tiles
+    vmem_budget: int
+    fits: bool
+    falls_back: bool                # True: runtime degrades gracefully
+                                    # when !fits; False: it would dispatch
+                                    # an over-budget kernel
+
+    @property
+    def sublane_aligned(self) -> bool:
+        return all(b % 8 == 0 for b in self.block)
+
+    @property
+    def lane_aligned(self) -> bool:
+        return all(b % 128 == 0 for b in self.block)
+
+
+def fused_precond_plan(d_in: int, d_out: int, *, block: int = 0,
+                       factor_dtype="bfloat16") -> KernelPlan:
+    """What :func:`fused_precondition` will do for a (d_in, d_out) slice:
+    two (d_in_p, d_out_p) fp32 scratches + both factors VMEM-resident
+    (kernels/precond.py); over budget it falls back to two matmuls."""
+    bi = block or _pick_block(d_in)
+    bj = block or _pick_block(d_out)
+    dip, dop = _padded_size(d_in, bi), _padded_size(d_out, bj)
+    item = jnp.dtype(factor_dtype).itemsize
+    vmem = (2 * dip * dop * 4                     # T + delta scratches
+            + dip * dip * item + dop * dop * item  # resident factors
+            + dip * bj * item + bi * bj * 4)       # streaming G/out tiles
+    return KernelPlan(
+        kernel="fused_precond", dims=(d_in, d_out), padded=(dip, dop),
+        block=(bi, bj), grid=(3, dip // bi, dop // bj), rank=1,
+        vmem_bytes=int(vmem), vmem_budget=_FUSED_PRECOND_VMEM_BUDGET,
+        fits=vmem <= _FUSED_PRECOND_VMEM_BUDGET, falls_back=True)
+
+
+def fused_smw_plan(d: int, *, block: int = 0,
+                   factor_dtype="bfloat16") -> KernelPlan:
+    """Rank-1 fused SMW (kernels/rank1_smw.fused_smw): persistent (d, 1)
+    fp32 u scratch + streaming J/out/v tiles.  No fallback path."""
+    blk = block or _pick_block(d)
+    dp = _padded_size(d, blk)
+    item = jnp.dtype(factor_dtype).itemsize
+    vmem = dp * 4 + 2 * blk * blk * item + 2 * blk * 4
+    return KernelPlan(
+        kernel="fused_smw", dims=(d,), padded=(dp,), block=(blk,),
+        grid=(2, dp // blk, dp // blk), rank=1, vmem_bytes=int(vmem),
+        vmem_budget=_FUSED_PRECOND_VMEM_BUDGET,
+        fits=vmem <= _FUSED_PRECOND_VMEM_BUDGET, falls_back=False)
+
+
+def fused_block_smw_plan(d: int, rank: int, *, block: int = 0,
+                         factor_dtype="bfloat16") -> KernelPlan:
+    """Block rank-r fused SMW (kernels/rank1_smw.fused_block_smw):
+    persistent (d, rpad) fp32 U scratch + two (rpad, rpad) fp32 Gram/mid
+    scratches + streaming tiles, rank sublane-padded to a multiple of 8.
+    No fallback path — an over-budget plan means the dispatch itself
+    would blow VMEM (the lint's pallas.vmem-over-budget ERROR)."""
+    blk = block or _pick_block(d)
+    dp = _padded_size(d, blk)
+    rpad = -(-max(rank, 1) // 8) * 8
+    item = jnp.dtype(factor_dtype).itemsize
+    vmem = (dp * rpad * 4 + 2 * rpad * rpad * 4
+            + 2 * blk * blk * item + 2 * rpad * blk * 4)
+    return KernelPlan(
+        kernel="fused_block_smw", dims=(d,), padded=(dp,), block=(blk,),
+        grid=(2, dp // blk, dp // blk), rank=rpad, vmem_bytes=int(vmem),
+        vmem_budget=_FUSED_PRECOND_VMEM_BUDGET,
+        fits=vmem <= _FUSED_PRECOND_VMEM_BUDGET, falls_back=False)
+
+
+def bucket_kernel_plans(d_in: int, d_out: int, *, rank: int = 1,
+                        factor_dtype="bfloat16",
+                        block: int = 0) -> Tuple[KernelPlan, ...]:
+    """Every kernel dispatch one factor bucket implies per inversion /
+    step, in dispatch order: one SMW update per factor dim + the fused
+    precondition over the (d_in, d_out) slice."""
+    if rank > 1:
+        smw = tuple(fused_block_smw_plan(d, rank, block=block,
+                                         factor_dtype=factor_dtype)
+                    for d in (d_in, d_out))
+    else:
+        smw = tuple(fused_smw_plan(d, block=block,
+                                   factor_dtype=factor_dtype)
+                    for d in (d_in, d_out))
+    return smw + (fused_precond_plan(d_in, d_out, block=block,
+                                     factor_dtype=factor_dtype),)
 
 
 def smw_rank1_update(j_inv: jnp.ndarray, v: jnp.ndarray, *, gamma: float,
@@ -183,11 +316,13 @@ def two_sided_precondition(l_inv: jnp.ndarray, r_inv: jnp.ndarray,
     return pallas_matmul(t, l_inv, block=block, interpret=interpret)
 
 
-def _fused_precond_fits(d_in_p: int, d_out_p: int, r_inv, l_inv) -> bool:
-    scratch = 2 * d_in_p * d_out_p * 4
-    factors = (d_in_p * d_in_p * r_inv.dtype.itemsize
-               + d_out_p * d_out_p * l_inv.dtype.itemsize)
-    return scratch + factors <= _FUSED_PRECOND_VMEM_BUDGET
+def _fused_precond_fits(d_in: int, d_out: int, r_inv, l_inv,
+                        block: int = 0) -> bool:
+    item = max(r_inv.dtype.itemsize, l_inv.dtype.itemsize)
+    return fused_precond_plan(d_in, d_out, block=block,
+                              factor_dtype=r_inv.dtype
+                              if r_inv.dtype.itemsize == item
+                              else l_inv.dtype).fits
 
 
 def fused_precondition(l_inv: jnp.ndarray, r_inv: jnp.ndarray,
@@ -201,11 +336,20 @@ def fused_precondition(l_inv: jnp.ndarray, r_inv: jnp.ndarray,
     under shared factors) and VMEM-budget-exceeding shapes fall back to the
     two-matmul path plus a jnp rescale; either way the rescale spans every
     dim of the slice (the line-10 contract of core.mkor.rescale_update).
+    The fallback is not silent: it emits a :class:`PallasFallbackWarning`
+    at trace time and bumps :func:`fallback_counts` — the same decision the
+    static kernel lint (repro.analysis) reports per bucket.
     """
     if g_w.ndim > 2 or not _fused_precond_fits(
-            _padded_size(g_w.shape[-2], block or _pick_block(g_w.shape[-2])),
-            _padded_size(g_w.shape[-1], block or _pick_block(g_w.shape[-1])),
-            r_inv, l_inv):
+            g_w.shape[-2], g_w.shape[-1], r_inv, l_inv, block):
+        reason = "extra_dims" if g_w.ndim > 2 else "vmem_budget"
+        plan = fused_precond_plan(g_w.shape[-2], g_w.shape[-1], block=block,
+                                  factor_dtype=r_inv.dtype)
+        _note_fallback(
+            "fused_precond", reason,
+            f"g_w shape {tuple(g_w.shape)}, plan VMEM "
+            f"{plan.vmem_bytes / 2**20:.1f}MB vs budget "
+            f"{plan.vmem_budget / 2**20:.0f}MB")
         delta = two_sided_precondition(l_inv, r_inv, g_w, block=block,
                                        interpret=interpret)
         if rescale:

@@ -45,6 +45,13 @@ from jax.experimental.pallas import tpu as pltpu
 DEFAULT_BLOCK = 256
 RESCALE_EPS = 1e-30          # same guard as core.mkor.rescale_update
 
+# fused_precond keeps two (d_in, d_out) fp32 scratches plus both factor
+# matrices VMEM-resident; TPU VMEM is ~16 MB/core, and 12 MB leaves room
+# for the streaming G/out tiles.  kernels/ops.py falls back to the
+# two-matmul path above this footprint, and repro.analysis's Pallas lint
+# checks the same bound statically (ops.fused_precond_plan).
+FUSED_PRECOND_VMEM_BUDGET = 12 * 2 ** 20
+
 
 def _fused_precond_kernel(r_ref, g_ref, l_ref, out_ref, t_ref, d_ref,
                           gn_ref, dn_ref, *, rescale: bool,

@@ -32,7 +32,8 @@ from repro.configs import registry
 from repro.core import firstorder
 from repro.core import stats as statlib
 from repro.core.mkor import MKORConfig, manifest_for, mkor, mkor_h
-from repro.launch import hlo_analysis, mesh as mesh_lib
+from repro.analysis import hlo as hlo_analysis
+from repro.launch import mesh as mesh_lib
 from repro.models import model as model_lib
 from repro.models.config import INPUT_SHAPES, InputShape, ModelConfig
 from repro.sharding import rules

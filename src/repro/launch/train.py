@@ -181,10 +181,9 @@ def main() -> None:
     history = []
     t0 = time.time()
     i = start
-    while i < args.steps:
-        # one jitted lax.scan per chunk (DESIGN.md §9); metrics come off
-        # device once per chunk, log/checkpoint at the chunk boundary
-        n = min(max(args.chunk, 1), args.steps - i)
+    # at most two distinct chunk lengths (full + one trailing partial), so
+    # the runner compiles at most two traces (train_lib.chunk_schedule)
+    for n in train_lib.chunk_schedule(args.steps - start, args.chunk):
         stacked = train_lib.stack_batches([make_batch(i + k)
                                            for k in range(n)])
         params, opt_state, metrics = runner(params, opt_state, stacked)

@@ -222,6 +222,17 @@ def make_dist_train_step(cfg: ModelConfig,
 # them under ONE jitted lax.scan with donated (params, opt_state): one
 # dispatch per chunk, metrics fetched off-device once per chunk.
 # ----------------------------------------------------------------------- #
+def chunk_schedule(n_steps: int, chunk: int) -> List[int]:
+    """Chunk lengths for an ``n_steps`` run at scan-chunk size ``chunk``.
+
+    At most TWO distinct lengths appear (full chunks + one trailing
+    partial), so the chunk runner compiles at most two traces per run —
+    the retrace bound the donation/retrace lint asserts statically."""
+    chunk = max(chunk, 1)
+    full, rem = divmod(max(n_steps, 0), chunk)
+    return [chunk] * full + ([rem] if rem else [])
+
+
 def stack_batches(batches: Sequence[Dict]) -> Dict:
     """Stack a list of same-shaped batch dicts along a new leading scan dim
     (host-side numpy: no device transfer until the runner call)."""

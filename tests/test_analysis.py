@@ -1,0 +1,278 @@
+"""mkor-lint (repro.analysis) tests.
+
+Two halves, mirroring the checker contract:
+
+* seeded-violation fixtures — four deliberately-broken programs, one per
+  checker, each asserting the checker's stable diagnostic code fires AND
+  that no OTHER checker errors on the same fixture;
+* clean passes — the real bert-large single / chunk / dist steps lint
+  with zero errors, with non-vacuity assertions (the walker really sees
+  the collectives; the known VMEM fallback warnings really appear).
+
+Plus unit coverage for the plan API, the fallback counter, the chunk
+schedule retrace bound, and the Report container.
+"""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.experimental import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.analysis import jaxpr_walk, trace
+from repro.analysis.checkers import run_checkers
+from repro.analysis.diagnostics import Diagnostic, Report, Severity
+from repro.analysis.trace import LintTarget
+from repro.core import firstorder
+from repro.core.mkor import MKORConfig, manifest_for
+from repro.kernels import ops
+from repro.training import loop as train_lib
+
+
+def _error_checkers(report):
+    return {d.checker for d in report.errors}
+
+
+# --------------------------------------------------------------------- #
+# Report / registry plumbing
+# --------------------------------------------------------------------- #
+def test_report_basics(tmp_path):
+    r = Report()
+    assert r.exit_code() == 0
+    r.add(Diagnostic("c1", "x.warn", Severity.WARNING, "w", target="t"))
+    assert r.exit_code() == 0 and len(r.warnings) == 1
+    r.add(Diagnostic("c2", "x.err", Severity.ERROR, "e", target="t",
+                     context={"k": 1}))
+    assert r.exit_code() == 1 and len(r.errors) == 1
+    assert [d.code for d in r.by_code("x.err")] == ["x.err"]
+    rendered = r.render()
+    # errors sort above warnings and the summary line counts both
+    assert rendered.index("x.err") < rendered.index("x.warn")
+    assert "1 error(s), 1 warning(s)" in rendered
+    out = tmp_path / "report.json"
+    payload = json.loads(r.to_json(str(out)))
+    assert payload["exit_code"] == 1 and payload["n_warnings"] == 1
+    assert json.loads(out.read_text())["n_errors"] == 1
+
+
+def test_run_checkers_rejects_unknown_name():
+    with pytest.raises(KeyError, match="no-such-checker"):
+        run_checkers([], names=["no-such-checker"])
+
+
+# --------------------------------------------------------------------- #
+# Seeded violation 1: per-step O(d^2) factor payload (comm-linearity)
+# --------------------------------------------------------------------- #
+def test_seeded_factor_payload_trips_comm_lint():
+    """A KFAC-style step that psums a full (256, 256) factor matrix every
+    step (no phase gate) must raise comm.factor-payload-per-step."""
+    mesh = Mesh(np.array(jax.devices()[:8]), ("d",))
+
+    def bad_step(x):
+        return shard_map.shard_map(
+            lambda v: jax.lax.psum(v, "d"),
+            mesh=mesh, in_specs=P(), out_specs=P())(x)
+
+    target = trace.custom_target(
+        "fixture/kfac-style-psum", bad_step,
+        jax.ShapeDtypeStruct((256, 256), jnp.float32),
+        meta={"factor_dims": {256}, "n_dense_layers": 4,
+              "grad_f32_bytes": 10 * 2 ** 20, "world": 8})
+    report = run_checkers([target])
+    errs = report.by_code("comm.factor-payload-per-step")
+    assert errs and all(d.severity == Severity.ERROR for d in errs)
+    assert report.exit_code() == 1
+    assert _error_checkers(report) == {"comm-linearity"}
+
+
+def test_seeded_collective_count_drift_trips_comm_lint():
+    """More ungated collectives than the explicit-collective design
+    allows (n_dense + 8 fixed) raises comm.collective-count-drift."""
+    mesh = Mesh(np.array(jax.devices()[:8]), ("d",))
+
+    def chatty_step(xs):
+        def inner(xs):
+            # per-leaf psums — the drift the bucketed design removed
+            return [jax.lax.psum(x, "d") for x in xs]
+        return shard_map.shard_map(
+            inner, mesh=mesh, in_specs=P(), out_specs=P())(xs)
+
+    xs = [jax.ShapeDtypeStruct((16,), jnp.float32)] * 12
+    target = trace.custom_target(
+        "fixture/per-leaf-psums", chatty_step, xs,
+        meta={"n_dense_layers": 2, "world": 8})
+    report = run_checkers([target])
+    assert report.by_code("comm.collective-count-drift")
+    assert report.exit_code() == 1
+    assert _error_checkers(report) == {"comm-linearity"}
+
+
+# --------------------------------------------------------------------- #
+# Seeded violation 2: float64 promotion (dtype-discipline)
+# --------------------------------------------------------------------- #
+def test_seeded_f64_promotion_trips_dtype_lint():
+    with jax.experimental.enable_x64():
+        jaxpr = jax.make_jaxpr(
+            lambda x: jnp.sum(x.astype(jnp.float64) * 2.0))(
+            jax.ShapeDtypeStruct((8, 8), jnp.float32))
+    target = LintTarget(name="fixture/f64", kind="custom", jaxpr=jaxpr)
+    report = run_checkers([target])
+    errs = report.by_code("dtype.f64-promotion")
+    assert errs and report.exit_code() == 1
+    assert _error_checkers(report) == {"dtype-discipline"}
+
+
+# --------------------------------------------------------------------- #
+# Seeded violation 3: over-budget kernel with no fallback (pallas)
+# --------------------------------------------------------------------- #
+def test_seeded_vmem_over_budget_trips_pallas_lint():
+    """A d=32000 factor at window rank 128 plans a fused_block_smw
+    dispatch past the 12MB VMEM budget; that kernel has no fallback, so
+    the lint must hard-error before anything would dispatch."""
+    params = {"layer": {
+        "w": jax.ShapeDtypeStruct((32000, 512), jnp.bfloat16),
+        "probe": jax.ShapeDtypeStruct((512,), jnp.float32)}}
+    cfg = MKORConfig(rank=128, exclude=())
+    target = LintTarget(
+        name="fixture/vmem-blowout", kind="custom",
+        meta={"manifest": manifest_for(params, cfg), "mkor_cfg": cfg})
+    report = run_checkers([target])
+    errs = report.by_code("pallas.vmem-over-budget")
+    assert errs and report.exit_code() == 1
+    assert any(d.context.get("kernel") == "fused_block_smw" for d in errs)
+    assert _error_checkers(report) == {"pallas-kernels"}
+
+
+# --------------------------------------------------------------------- #
+# Seeded violation 4: chunk runner without donation (donation)
+# --------------------------------------------------------------------- #
+def _chunk_fixture_target(tiny_model_cfg, donate):
+    opt = firstorder.sgd(1e-2)
+    step = train_lib.make_train_step(tiny_model_cfg, opt)
+    runner = train_lib.make_chunk_runner(step, donate=donate)
+    params, opt_state = trace.abstract_state(tiny_model_cfg, opt)
+    batch = train_lib.train_batch_shapes(tiny_model_cfg, 4, 8)
+    stacked = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((2,) + s.shape, s.dtype), batch)
+    return LintTarget(
+        name=f"fixture/chunk-donate={donate}", kind="custom",
+        jaxpr=jax.make_jaxpr(runner)(params, opt_state, stacked),
+        lowered_text=runner.lower(params, opt_state, stacked).as_text(),
+        meta={"n_carry_leaves": len(jax.tree.leaves((params, opt_state))),
+              "chunk": 2, "steps": 100})
+
+
+def test_seeded_missing_donation_trips_donation_lint(tiny_model_cfg):
+    report = run_checkers([_chunk_fixture_target(tiny_model_cfg, False)])
+    errs = report.by_code("donation.carry-not-donated")
+    assert errs and report.exit_code() == 1
+    assert _error_checkers(report) == {"donation"}
+    # the donate=True twin of the same runner is clean
+    good = run_checkers([_chunk_fixture_target(tiny_model_cfg, True)])
+    assert not good.errors, good.render()
+    assert not good.by_code("donation.carry-not-donated")
+
+
+# --------------------------------------------------------------------- #
+# Clean passes over the real entry points
+# --------------------------------------------------------------------- #
+def test_lint_clean_on_bert_large_single_and_chunk():
+    targets = [trace.single_target("bert_large"),
+               trace.chunk_target("bert_large")]
+    report = run_checkers(targets)
+    assert report.exit_code() == 0, report.render()
+    # non-vacuous: bert-large's 1024-wide buckets genuinely exceed the
+    # fused-precondition VMEM budget and ride the two-matmul fallback
+    assert report.by_code("pallas.fused-precond-fallback")
+    assert not report.by_code("donation.carry-not-donated")
+    assert not report.by_code("dtype.f64-promotion")
+
+
+def test_lint_clean_on_bert_large_dist():
+    target = trace.dist_target("bert_large", world=8)
+    report = run_checkers([target])
+    assert report.exit_code() == 0, report.render()
+
+    # non-vacuity: the walker must actually see the dist step's structure
+    res = jaxpr_walk.walk(target.jaxpr)
+    ungated = [c for c in res.collectives if not c.gated]
+    gated = [c for c in res.collectives if c.gated]
+    assert ungated, "no per-step collectives found — walker is blind"
+    assert gated, "no phase-gated collectives found (owner gathers)"
+    stat_psums = [c for c in ungated if c.prim == "psum" and c.bf16_origin]
+    assert stat_psums, "bf16-origin stat psums not detected"
+    assert not res.f64_sites
+    assert res.eps_guards
+    assert all(g.dtype == "float32" for g in res.eps_guards)
+
+
+def test_lint_checker_subset(tiny_model_cfg):
+    # --checkers narrowing: only the requested checker runs
+    target = _chunk_fixture_target(tiny_model_cfg, False)
+    report = run_checkers([target], names=["pallas-kernels"])
+    assert not report.diagnostics  # no manifest in meta -> nothing to say
+    report = run_checkers([target], names=["donation"])
+    assert report.by_code("donation.carry-not-donated")
+
+
+# --------------------------------------------------------------------- #
+# Kernel plan API + fallback counter (satellite a)
+# --------------------------------------------------------------------- #
+def test_kernel_plans_match_known_shapes():
+    p = ops.fused_precond_plan(1024, 4096)
+    assert not p.fits and p.falls_back            # bert-large MLP bucket
+    assert p.sublane_aligned
+    small = ops.fused_precond_plan(96, 48)
+    assert small.fits
+    smw = ops.fused_smw_plan(1024)
+    assert smw.fits and not smw.falls_back
+    blk = ops.fused_block_smw_plan(32000, 128)
+    assert not blk.fits and not blk.falls_back and blk.rank == 128
+    assert ops.fused_block_smw_plan(256, 12).rank == 16  # padded to 8s
+
+    rank1 = ops.bucket_kernel_plans(1024, 1024)
+    assert [q.kernel for q in rank1] == [
+        "fused_smw", "fused_smw", "fused_precond"]
+    rank8 = ops.bucket_kernel_plans(1024, 1024, rank=8)
+    assert [q.kernel for q in rank8] == [
+        "fused_block_smw", "fused_block_smw", "fused_precond"]
+
+
+def test_fused_precond_fallback_counter_vmem():
+    ops.reset_fallback_counts()
+    big = jax.ShapeDtypeStruct((4096, 4096), jnp.float32)
+    with pytest.warns(ops.PallasFallbackWarning, match="vmem_budget"):
+        out = jax.eval_shape(ops.fused_precondition, big, big, big)
+    assert out.shape == (4096, 4096)
+    assert ops.fallback_counts() == {("fused_precond", "vmem_budget"): 1}
+    ops.reset_fallback_counts()
+    assert ops.fallback_counts() == {}
+
+
+def test_fused_precond_fallback_counter_extra_dims():
+    ops.reset_fallback_counts()
+    l_inv = jax.ShapeDtypeStruct((48, 48), jnp.float32)
+    r_inv = jax.ShapeDtypeStruct((96, 96), jnp.float32)
+    g_w = jax.ShapeDtypeStruct((2, 96, 48), jnp.float32)  # expert lead dim
+    with pytest.warns(ops.PallasFallbackWarning, match="extra_dims"):
+        out = jax.eval_shape(ops.fused_precondition, l_inv, r_inv, g_w)
+    assert out.shape == (2, 96, 48)
+    assert ops.fallback_counts() == {("fused_precond", "extra_dims"): 1}
+    ops.reset_fallback_counts()
+
+
+# --------------------------------------------------------------------- #
+# chunk_schedule retrace bound (satellite: launch/train.py loop)
+# --------------------------------------------------------------------- #
+def test_chunk_schedule():
+    assert train_lib.chunk_schedule(100, 8) == [8] * 12 + [4]
+    assert train_lib.chunk_schedule(7, 10) == [7]
+    assert train_lib.chunk_schedule(0, 4) == []
+    assert train_lib.chunk_schedule(5, 0) == [1] * 5  # chunk clamped to 1
+    for steps in (1, 2, 7, 50, 99, 100, 1000):
+        for chunk in (1, 2, 3, 8, 64):
+            sched = train_lib.chunk_schedule(steps, chunk)
+            assert sum(sched) == steps
+            assert len(set(sched)) <= 2, (steps, chunk, sched)

@@ -171,17 +171,32 @@ def _run_opt(opt, steps, d_in=96):
     return losses
 
 
+def _log_loss_slope(losses) -> float:
+    """Least-squares slope of log(loss) vs step — the convergence *rate*
+    over the whole run, robust to single-step noise at the endpoint."""
+    y = np.log(np.maximum(np.asarray(losses, np.float64), 1e-30))
+    return float(np.polyfit(np.arange(len(y)), y, 1)[0])
+
+
 @pytest.mark.slow
 def test_mkor_beats_sgd_on_autoencoder():
-    """Fig. 4 class workload: MKOR converges in fewer steps than SGD."""
+    """Fig. 4 class workload: MKOR converges faster than SGD.
+
+    Compared on the fitted log-loss slope, not the final-step value: the
+    last step is a single noisy sample (fresh batch draw), and comparing
+    two such samples made this test flake when both optimizers had nearly
+    converged.  The slope integrates the whole trajectory."""
     steps = 50
     sgd_losses = _run_opt(firstorder.sgd(1e-2, momentum=0.9), steps)
     mkor_losses = _run_opt(
         mkor(firstorder.sgd(1e-2, momentum=0.9),
              MKORConfig(inv_freq=1, gamma=0.9, exclude=())), steps)
     assert np.isfinite(mkor_losses).all()
-    assert mkor_losses[-1] < sgd_losses[-1], \
-        f"MKOR {mkor_losses[-1]:.4f} vs SGD {sgd_losses[-1]:.4f}"
+    sgd_slope = _log_loss_slope(sgd_losses)
+    mkor_slope = _log_loss_slope(mkor_losses)
+    assert mkor_slope < sgd_slope, \
+        (f"MKOR log-loss slope {mkor_slope:.4f}/step vs "
+         f"SGD {sgd_slope:.4f}/step")
 
 
 def test_mkor_stays_finite_on_illconditioned_quadratic():
