@@ -10,7 +10,14 @@ import numpy as np
 
 
 def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
-    """Median wall-seconds per call of a jitted fn (block_until_ready)."""
+    """Median wall-seconds per call of a jitted fn (block_until_ready).
+
+    Pallas fallback counters are process-global and accumulate at trace
+    time; reset them before the warmup traces so each benchmarked fn's
+    ``ops.fallback_counts()`` reflects THIS run only, not whatever earlier
+    rows in the same process happened to trace."""
+    from repro.kernels import ops
+    ops.reset_fallback_counts()
     for _ in range(warmup):
         out = fn(*args)
         jax.block_until_ready(out)

@@ -1,0 +1,112 @@
+"""Overlap-hidden inversion benchmark (DESIGN.md §13).
+
+Decomposes the async schedule's win into the quantities that matter on a
+real accelerator, from the same per-step traces as ``benchmarks.step_time``
+``sync_vs_async`` (stagger=False so every inv_freq-th step is a phase step
+for every bucket):
+
+* per-schedule *phase-step* vs *off-phase* mean step time — the phase
+  overhead is what the sync schedule pays inline;
+* ``launch_ms`` — the cost of the async tick dispatch (promote + chained
+  block-inversion launch): the work overlap has to hide;
+* ``hidden_frac`` — 1 − async_phase_overhead / sync_phase_overhead: the
+  fraction of the sync schedule's phase-step overhead that leaves the
+  step's critical path under the two-phase protocol (async_step row:
+  tick retired before the timed region — the full-overlap bound).
+
+This 2-core CPU emulation cannot demonstrate the overlap itself (no async
+collectives, one compute stream); the fused row is the zero-overlap upper
+bound and the step row the full-overlap lower bound — on TPU the async
+collective/compute scheduler lands between them, near the lower one.
+
+  PYTHONPATH=src python -m benchmarks.overlap
+  PYTHONPATH=src python -m benchmarks.overlap --steps 24 --out BENCH.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import numpy as np
+
+from benchmarks.common import emit
+from benchmarks.step_time import ARCH, INV_FREQ, dist, sync_vs_async_times
+
+
+def phase_split(ts, warmup: int, inv_freq: int):
+    """Split a post-warmup per-step trace into (phase, off-phase) step
+    times; global step index i = warmup + k, phase steps at i % f == 0."""
+    phase, off = [], []
+    for k, t in enumerate(ts):
+        (phase if (warmup + k) % inv_freq == 0 else off).append(t)
+    return phase, off
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default=ARCH)
+    ap.add_argument("--steps", type=int, default=36)
+    ap.add_argument("--warmup", type=int, default=6)
+    ap.add_argument("--batch", type=int, default=1)
+    ap.add_argument("--seq", type=int, default=8)
+    ap.add_argument("--d-model", type=int, default=128)
+    ap.add_argument("--inv-freq", type=int, default=INV_FREQ)
+    ap.add_argument("--repeats", type=int, default=4)
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--out", default="BENCH_overlap.json")
+    args, _ = ap.parse_known_args()
+    if args.quick:
+        args.steps, args.warmup, args.repeats = 18, 3, 2
+
+    sync_ts, fused_ts, astep_ts, launch_ts = sync_vs_async_times(args)
+
+    rows, schedules = [], {}
+    for name, ts in (("sync", sync_ts), ("async_fused", fused_ts),
+                     ("async_step", astep_ts)):
+        phase, off = phase_split(ts, args.warmup, args.inv_freq)
+        phase_ms = float(np.mean(phase) * 1e3)
+        off_ms = float(np.mean(off) * 1e3)
+        schedules[name] = {
+            "phase_step_ms": phase_ms,
+            "off_step_ms": off_ms,
+            "phase_overhead_ms": phase_ms - off_ms,
+            **dist(ts),
+        }
+        rows.append({"schedule": name, "phase_ms": phase_ms,
+                     "off_ms": off_ms,
+                     "overhead_ms": phase_ms - off_ms})
+
+    launch_ms = float(np.mean(launch_ts) * 1e3)
+    sync_oh = schedules["sync"]["phase_overhead_ms"]
+    hidden = {
+        # what must be hidden per phase step, and how much of the sync
+        # schedule's inline overhead each async mode removes from the
+        # step's critical path
+        "launch_ms": launch_ms,
+        "hidden_frac_step": (1.0 - schedules["async_step"]
+                             ["phase_overhead_ms"] / sync_oh)
+        if sync_oh > 0 else None,
+        "hidden_frac_fused": (1.0 - schedules["async_fused"]
+                              ["phase_overhead_ms"] / sync_oh)
+        if sync_oh > 0 else None,
+    }
+
+    result = {
+        "arch": f"{args.arch} (reduced, d_model={args.d_model})",
+        "inv_freq": args.inv_freq, "steps": args.steps,
+        "repeats": args.repeats, "stagger": False,
+        "schedules": schedules,
+        "overlap": hidden,
+    }
+    emit(rows, "phase vs off-phase step time (stagger off)")
+    hf = hidden["hidden_frac_step"]
+    print(f"# launch {launch_ms:.2f}ms/phase-step; sync phase overhead "
+          f"{sync_oh:.2f}ms; hidden at full overlap: "
+          + (f"{100 * hf:.0f}%" if hf is not None else "n/a"))
+    with open(args.out, "w") as f:
+        json.dump(result, f, indent=1)
+    print(f"# wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -11,8 +11,8 @@ import traceback
 
 from benchmarks import (breakdown, comm_volume, complexity, convergence,
                         factor_bank, inversion_frequency, lr_sensitivity,
-                        memory, quantization, rank1_error, rank_r, roofline,
-                        step_time)
+                        memory, overlap, quantization, rank1_error, rank_r,
+                        roofline, step_time)
 
 ALL = {
     "complexity": complexity.main,              # Table 1
@@ -20,6 +20,7 @@ ALL = {
     "breakdown": breakdown.main,                # Fig 3
     "factor_bank": factor_bank.main,            # bank vs per-layer SMW
     "step_time": step_time.main,                # loop/scan + spike/stagger
+    "overlap": overlap.main,                    # async hidden-inversion win
     "rank_r": rank_r.main,                      # block rank-r vs chained
     "comm_volume": comm_volume.main,            # rank-1 vs full-factor wire
     "inversion_frequency": inversion_frequency.main,  # Fig 4

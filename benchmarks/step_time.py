@@ -13,9 +13,32 @@ Two comparisons on the same reduced config, written to BENCH_step_time.json:
   Reported: p50/p95, the p95/p50 ratio (the spike signature), and
   spike_ratio = max/p50.  Both run the per-step loop so individual step
   times are observable.
+* ``sync_vs_async`` — the synchronous inversion schedule vs the
+  double-buffered async schedule (``MKORConfig.staleness=1``,
+  DESIGN.md §13), both with ``stagger=False`` so the phase-step cost is
+  visible (under stagger at inv_freq == n_buckets every step is a phase
+  step and the schedules are indistinguishable).  Three rows:
+
+  - ``sync``        — the inline schedule: inversions on the phase step's
+    critical path (the spike baseline);
+  - ``async_fused`` — staleness=1 as ONE dispatch per step (precompute
+    tick inlined by ``update``): the zero-overlap upper bound — the tick
+    work still runs, but off the preconditioning's data path, so the
+    backend is free to overlap it to whatever degree it supports;
+  - ``async_step``  — the two-phase protocol with the tick dispatched
+    separately and completed before the timed region: the per-step
+    critical path that REMAINS once the launch is fully hidden, plus the
+    measured ``launch`` cost that overlap has to hide.  On a real TPU the
+    async collectives/compute overlap hides the launch inside the
+    forward/backward; this 2-core CPU emulation cannot demonstrate the
+    overlap itself, so the fused and step-only rows bracket it.
+
+  The regression gate (scripts/perf_gate.py) keys on
+  ``async_step.p95_over_p50`` — the flat-step claim of the async design.
 
   PYTHONPATH=src python -m benchmarks.step_time
   PYTHONPATH=src python -m benchmarks.step_time --steps 24 --out BENCH.json
+  PYTHONPATH=src python -m benchmarks.step_time --quick   # perf-gate mode
 """
 from __future__ import annotations
 
@@ -105,6 +128,77 @@ def spike_vs_stagger_times(args):
     return both[:args.steps], both[args.steps:]
 
 
+def sync_vs_async_times(args):
+    """Per-step wall times for the sync vs double-buffered async schedules
+    (module docstring, ``sync_vs_async``).  Returns (sync_ts, fused_ts,
+    step_ts, launch_ts); all passes run back-to-back per repeat and are
+    elementwise min-filtered like the other sections."""
+    from repro.core.firstorder import apply_updates
+
+    progs = {}
+    for name, staleness in (("sync", 0), ("async_fused", 1)):
+        mcfg = MKORConfig(inv_freq=args.inv_freq, stagger=False,
+                          staleness=staleness)
+        cfg, opt, params0, ds, step_fn = _setup(args, mcfg)
+        progs[name] = (jax.jit(step_fn), opt, params0, ds)
+
+    # two-phase protocol: the tick is its own dispatch; the step runs with
+    # precomputed=True so no inversion work sits on its critical path
+    mcfg = MKORConfig(inv_freq=args.inv_freq, stagger=False, staleness=1)
+    cfg, opt2, params0, ds2, _ = _setup(args, mcfg)
+    loss_fn = train_lib.make_loss_fn(cfg)
+
+    @jax.jit
+    def pre(opt_state, params):
+        return opt2.precompute(opt_state, params=params)
+
+    @jax.jit
+    def step_only(params, opt_state, batch):
+        (loss, aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, batch)
+        updates, opt_state = opt2.update(
+            grads, opt_state, params=params, stats=aux["stats"], loss=loss,
+            precomputed=True)
+        return apply_updates(params, updates), opt_state, {"loss": loss}
+
+    def fused_pass(name):
+        jit_step, opt, params0, ds = progs[name]
+        params, state = params0, opt.init(params0)
+        ts = []
+        for i in range(args.warmup + args.steps):
+            batch = pipeline.make_batch(ds, i)
+            t0 = time.perf_counter()
+            params, state, m = jit_step(params, state, batch)
+            _ = {k: float(v) for k, v in m.items()}
+            ts.append(time.perf_counter() - t0)
+        return ts[args.warmup:]
+
+    def two_phase_pass():
+        params, state = params0, opt2.init(params0)
+        ts, launch = [], []
+        for i in range(args.warmup + args.steps):
+            batch = pipeline.make_batch(ds2, i)
+            t0 = time.perf_counter()
+            state = pre(state, params)
+            jax.block_until_ready(state)      # launch fully retired
+            t1 = time.perf_counter()
+            params, state, m = step_only(params, state, batch)
+            _ = {k: float(v) for k, v in m.items()}
+            launch.append(t1 - t0)
+            ts.append(time.perf_counter() - t1)
+        return ts[args.warmup:], launch[args.warmup:]
+
+    def run_once():
+        sync_ts = fused_pass("sync")
+        fused_ts = fused_pass("async_fused")
+        step_ts, launch_ts = two_phase_pass()
+        return sync_ts + fused_ts + step_ts + launch_ts
+
+    n = args.steps
+    flat = _min_over_repeats(run_once, args.repeats)
+    return (flat[:n], flat[n:2 * n], flat[2 * n:3 * n], flat[3 * n:])
+
+
 def loop_vs_scan_times(args, mcfg: MKORConfig):
     """Per-step times for the per-step loop and the scan-chunk runner.
 
@@ -171,8 +265,16 @@ def main() -> None:
     ap.add_argument("--repeats", type=int, default=4,
                     help="identical reruns per timing; elementwise min "
                          "filters host contention noise")
+    ap.add_argument("--quick", action="store_true",
+                    help="perf-gate mode (scripts/verify.sh): fewer "
+                         "steps/repeats, same sections — noisier but "
+                         "fast enough to run on every verify")
     ap.add_argument("--out", default="BENCH_step_time.json")
     args, _ = ap.parse_known_args()
+    if args.quick:
+        # warmup stays a chunk multiple so loop_vs_scan's chunk windows
+        # line up with its warm-chunk trim
+        args.steps, args.warmup, args.repeats, args.chunk = 18, 6, 2, 6
 
     staggered = MKORConfig(inv_freq=args.inv_freq, stagger=True)
     n_buckets = len(manifest_for(
@@ -184,6 +286,9 @@ def main() -> None:
     scan_d["chunk"] = args.chunk
     spike_ts, stag_ts = spike_vs_stagger_times(args)
     spike_d, stag_d = dist(spike_ts), dist(stag_ts)
+    sync_ts, fused_ts, astep_ts, launch_ts = sync_vs_async_times(args)
+    sync_d, fused_d, astep_d = dist(sync_ts), dist(fused_ts), dist(astep_ts)
+    launch_d = dist(launch_ts)
 
     result = {
         "arch": f"{args.arch} (reduced, d_model={args.d_model})",
@@ -203,6 +308,15 @@ def main() -> None:
             "p95_over_p50_improvement":
                 spike_d["p95_over_p50"] / stag_d["p95_over_p50"],
         },
+        "sync_vs_async": {
+            # staleness=1, stagger=False; see the module docstring for
+            # what each row measures on this CPU emulation
+            "sync": sync_d,
+            "async_fused": fused_d,
+            "async_step": astep_d,
+            "launch": launch_d,
+            "async_p95_over_p50": astep_d["p95_over_p50"],
+        },
     }
     emit([{"runner": "python_loop", **loop_d},
           {"runner": "scan_chunk", **{k: v for k, v in scan_d.items()}}],
@@ -210,10 +324,18 @@ def main() -> None:
     emit([{"schedule": "spike", **spike_d},
           {"schedule": "staggered", **stag_d}],
          "per-step wall time: spike vs staggered inversion schedule")
+    emit([{"schedule": "sync", **sync_d},
+          {"schedule": "async_fused", **fused_d},
+          {"schedule": "async_step", **astep_d},
+          {"schedule": "launch(hidden)", **launch_d}],
+         "per-step wall time: sync vs double-buffered async (stagger off)")
     print(f"# scan speedup (mean): "
           f"{result['loop_vs_scan']['scan_speedup_mean']:.2f}x; "
           f"p95/p50 spike->staggered: {spike_d['p95_over_p50']:.2f} -> "
-          f"{stag_d['p95_over_p50']:.2f}")
+          f"{stag_d['p95_over_p50']:.2f}; "
+          f"sync->async p95/p50: {sync_d['p95_over_p50']:.2f} -> "
+          f"{astep_d['p95_over_p50']:.2f} "
+          f"(fused {fused_d['p95_over_p50']:.2f})")
     with open(args.out, "w") as f:
         json.dump(result, f, indent=1)
     print(f"# wrote {args.out}")

@@ -1,0 +1,95 @@
+#!/usr/bin/env python
+"""Perf-regression gate: compare a fresh ``benchmarks.step_time`` JSON
+against the checked-in budget (``benchmarks/perf_budget.json``).
+
+Usage (what scripts/verify.sh runs):
+
+    python -m benchmarks.step_time --quick --out /tmp/bench.json
+    python scripts/perf_gate.py /tmp/bench.json \
+        --budget benchmarks/perf_budget.json [--hard]
+
+The budget is a list of bounds on *ratio* metrics only (p95/p50 tail
+ratios, scan-vs-loop speedup) — absolute step times vary with the host
+and would make the gate flaky, but the tail ratios are what the async /
+stagger / scan designs actually claim, and they survive machine changes.
+The headline bound is ``sync_vs_async.async_step.p95_over_p50`` — the
+flat-step claim of the overlap-hidden inversion schedule (DESIGN.md §13).
+
+Each budget entry is ``{"metric": "dotted.path", "max": x}`` or
+``{"min": x}`` plus a free-form ``"why"``.  A metric missing from the
+benchmark JSON is itself a violation, so the budget cannot silently rot
+when benchmark keys are renamed.
+
+Default mode *warns* (exit 0) on violation — local/CI-fast runs share
+cores with the rest of the suite and a noisy quick bench must not block
+a push.  ``--hard`` (set by verify.sh when ``PERF_GATE=hard``, which the
+nightly CI job exports) turns violations into exit 1.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def lookup(d, path: str):
+    cur = d
+    for key in path.split("."):
+        if not isinstance(cur, dict) or key not in cur:
+            return None
+        cur = cur[key]
+    return cur
+
+
+def check(bench: dict, budget: list[dict]) -> list[str]:
+    """Return a list of violation messages (empty == within budget)."""
+    violations = []
+    for bound in budget:
+        metric = bound["metric"]
+        val = lookup(bench, metric)
+        if not isinstance(val, (int, float)):
+            violations.append(f"{metric}: missing from benchmark JSON")
+            continue
+        lo, hi = bound.get("min"), bound.get("max")
+        if hi is not None and val > hi:
+            violations.append(f"{metric}: {val:.4f} > max {hi:.4f}"
+                              f"  ({bound.get('why', '')})")
+        elif lo is not None and val < lo:
+            violations.append(f"{metric}: {val:.4f} < min {lo:.4f}"
+                              f"  ({bound.get('why', '')})")
+        else:
+            side = f"<= {hi:.4f}" if hi is not None else f">= {lo:.4f}"
+            print(f"  ok   {metric}: {val:.4f} {side}")
+    return violations
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("bench_json", help="fresh step_time --quick output")
+    ap.add_argument("--budget", default="benchmarks/perf_budget.json")
+    ap.add_argument("--hard", action="store_true",
+                    help="exit 1 on violation instead of warning")
+    args = ap.parse_args()
+
+    with open(args.bench_json) as f:
+        bench = json.load(f)
+    with open(args.budget) as f:
+        budget = json.load(f)["bounds"]
+
+    print(f"perf gate: {args.bench_json} vs {args.budget}")
+    violations = check(bench, budget)
+    if not violations:
+        print("perf gate: within budget")
+        return 0
+    for v in violations:
+        print(f"  VIOLATION  {v}")
+    if args.hard:
+        print("perf gate: FAILED (hard mode)")
+        return 1
+    print("perf gate: violations above are warnings "
+          "(set PERF_GATE=hard to fail)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -13,7 +13,12 @@
 # 3. a one-config launch/dryrun.py smoke (AOT lower + compile against the
 #    production mesh, no arrays allocated);
 # 4. a 2-step launch/train.py smoke on a reduced config through the
-#    scan-chunk runner (real arrays, checkpointing path untouched).
+#    scan-chunk runner (real arrays, checkpointing path untouched);
+# 5. perf-regression gate: a fresh benchmarks/step_time.py --quick run
+#    compared against benchmarks/perf_budget.json (ratio metrics only —
+#    async flat-step p95/p50, stagger tail, scan speedup).  Violations
+#    WARN by default (quick benches on shared runners are noisy);
+#    PERF_GATE=hard (nightly CI) turns them into failures.
 #
 #   scripts/verify.sh dist   (== make verify-dist) runs only the
 # distributed slice: the shard_map test file on 8 fake CPU devices plus a
@@ -68,5 +73,15 @@ python -m repro.launch.dryrun --arch bert-large --shape train_4k \
 echo "== 2-step train smoke (bert-large reduced) =="
 python -m repro.launch.train --arch bert-large --reduced --steps 2 \
     --global-batch 2 --seq-len 16 --chunk 2 --log-every 1
+
+echo "== perf-regression gate (quick bench vs checked-in budget) =="
+PERF_JSON="$(mktemp -d)/bench_quick.json"
+python -m benchmarks.step_time --quick --out "$PERF_JSON"
+GATE_ARGS=""
+if [[ "${PERF_GATE:-}" == "hard" ]]; then
+    GATE_ARGS="--hard"
+fi
+python scripts/perf_gate.py "$PERF_JSON" \
+    --budget benchmarks/perf_budget.json $GATE_ARGS
 
 echo "== verify OK =="

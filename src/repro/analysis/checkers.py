@@ -1,4 +1,4 @@
-"""The four mkor-lint contract checkers (DESIGN.md §12).
+"""The five mkor-lint contract checkers (DESIGN.md §12).
 
 Each checker is a pure function ``(target) -> [Diagnostic]`` registered
 in :data:`CHECKERS`; :func:`run_checkers` applies every applicable
@@ -347,6 +347,103 @@ def check_donation(target) -> List[Diagnostic]:
 
 
 # --------------------------------------------------------------------- #
+# 5. staleness-bound: async double-buffer contracts (DESIGN.md §13)
+# --------------------------------------------------------------------- #
+# extra ungated bytes the async step may add over the sync baseline
+# before the differential check errors (covers trivial bookkeeping
+# scalars; factor banks are megabytes, so this cannot mask a real leak)
+_ASYNC_EXTRA_BYTES_SLACK = 1024
+
+
+def check_staleness_bound(target) -> List[Diagnostic]:
+    """The overlap-hidden inversion contracts (DESIGN.md §13), statically:
+
+    1. the pending→active swap (and the chained next-pending launch) is
+       ``lax.cond``-gated per bucket — an unconditional swap would run the
+       block inversions every step and the stagger/overlap schedule has
+       nothing to hide;
+    2. the async step moves zero extra per-step (ungated) collective
+       bytes vs the synchronous step it replaces — differentially against
+       ``meta["sync_ungated_bytes"]`` (trace.attach_sync_baseline) when a
+       sync twin was traced, else against the analytic
+       ``stats.bucket_comm_cost``-style O(d) budget;
+    3. no ungated collective ships a factor-shaped payload (the pending
+       bank must ride the SAME phase-gated owner-gather as the sync
+       schedule, just one window early).
+
+    Inactive (no diagnostics) on synchronous targets (staleness == 0)."""
+    out: List[Diagnostic] = []
+    staleness = target.meta.get("staleness")
+    if staleness is None:
+        cfg = target.meta.get("mkor_cfg")
+        staleness = getattr(cfg, "staleness", 0) if cfg is not None else 0
+    if not staleness or target.jaxpr is None:
+        return out
+    res = jaxpr_walk.walk(target.jaxpr)
+    factor_dims = set(target.meta.get("factor_dims", ()))
+
+    # 1. swap gating: at least one cond per bucket (each bucket's phase
+    # tick is its own lax.cond; sub-conds inside count extra, never fewer)
+    n_buckets = target.meta.get("n_buckets")
+    if n_buckets is None:
+        manifest = target.meta.get("manifest")
+        n_buckets = len(manifest) if manifest is not None else None
+    n_cond = res.prim_counts.get("cond", 0)
+    if n_buckets and n_cond < n_buckets:
+        out.append(_d(
+            "staleness-bound", "staleness.swap-not-gated", Severity.ERROR,
+            f"async step has {n_cond} lax.cond(s) for {n_buckets} "
+            f"bucket(s) — the pending→active swap/launch is not phase-"
+            f"gated, so the block inversions run (and their collectives "
+            f"fire) on every step instead of once per inv_freq window",
+            target, n_cond=n_cond, n_buckets=n_buckets))
+
+    # 3. (cheap, do before 2) no ungated factor-shaped payloads
+    ungated = [c for c in res.collectives if not c.gated]
+    for c in ungated:
+        for shape in c.shapes:
+            if _is_factor_square(shape, factor_dims):
+                out.append(_d(
+                    "staleness-bound", "staleness.ungated-factor-bytes",
+                    Severity.ERROR,
+                    f"async step: ungated {c.prim} at {c.path} moves a "
+                    f"factor-shaped payload {list(shape)} every step — "
+                    f"the pending bank must ride the phase-gated owner-"
+                    f"gather, not per-step collectives", target,
+                    prim=c.prim, shape=list(shape), path=c.path))
+
+    # 2. zero extra per-step bytes vs sync
+    total = sum(c.payload_bytes for c in ungated)
+    sync_bytes = target.meta.get("sync_ungated_bytes")
+    if sync_bytes is not None:
+        if total > sync_bytes + _ASYNC_EXTRA_BYTES_SLACK:
+            out.append(_d(
+                "staleness-bound", "staleness.extra-step-bytes",
+                Severity.ERROR,
+                f"async step moves {total} ungated collective bytes vs "
+                f"{sync_bytes} in the synchronous step it replaces "
+                f"(+{total - sync_bytes}) — overlap must reorder work, "
+                f"not add per-step wire traffic", target,
+                async_bytes=total, sync_bytes=sync_bytes))
+    else:
+        grad_bytes = target.meta.get("grad_f32_bytes")
+        stats_bytes = target.meta.get("stats_f32_bytes", 0)
+        world = max(target.meta.get("world", 1), 1)
+        if grad_bytes is not None and world > 1:
+            budget = grad_bytes * (1 + 1 / world) + stats_bytes + 2 ** 20
+            if total > _BYTES_SLACK * budget:
+                out.append(_d(
+                    "staleness-bound", "staleness.extra-step-bytes",
+                    Severity.ERROR,
+                    f"async step moves {total / 2**20:.1f}MB ungated "
+                    f"collective bytes, over {_BYTES_SLACK}x the analytic "
+                    f"O(d) per-step budget {budget / 2**20:.1f}MB (no "
+                    f"sync baseline attached)", target,
+                    async_bytes=total, budget_bytes=int(budget)))
+    return out
+
+
+# --------------------------------------------------------------------- #
 # Registry
 # --------------------------------------------------------------------- #
 CHECKERS: Dict[str, Callable] = {
@@ -354,6 +451,7 @@ CHECKERS: Dict[str, Callable] = {
     "dtype-discipline": check_dtype_discipline,
     "pallas-kernels": check_pallas_kernels,
     "donation": check_donation,
+    "staleness-bound": check_staleness_bound,
 }
 
 # which target kinds each checker runs on ("custom" targets opt in to
@@ -363,6 +461,7 @@ _APPLIES: Dict[str, tuple] = {
     "dtype-discipline": ("single", "dist", "custom"),
     "pallas-kernels": ("single", "dist", "custom"),
     "donation": ("chunk", "custom"),
+    "staleness-bound": ("single", "dist", "custom"),
 }
 
 

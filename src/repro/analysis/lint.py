@@ -52,6 +52,10 @@ def main() -> int:
                          "check are batch/seq independent")
     ap.add_argument("--rank", type=int, default=1)
     ap.add_argument("--inv-freq", type=int, default=10)
+    ap.add_argument("--staleness", type=int, default=1,
+                    help="also lint the async double-buffered step at "
+                         "this staleness bound (0 skips the async "
+                         "targets; the sync targets always run)")
     ap.add_argument("--chunk", type=int, default=2)
     ap.add_argument("--steps", type=int, default=100)
     ap.add_argument("--compile", action="store_true",
@@ -64,6 +68,8 @@ def main() -> int:
     args = ap.parse_args()
 
     # deferred: these pull in jax, which must see XLA_FLAGS first
+    import dataclasses
+
     from repro.analysis import trace
     from repro.analysis.checkers import run_checkers
     from repro.core.mkor import MKORConfig
@@ -71,17 +77,35 @@ def main() -> int:
     mkor_cfg = MKORConfig(inv_freq=args.inv_freq, rank=args.rank)
     common = dict(mkor_cfg=mkor_cfg, global_batch=args.global_batch,
                   seq_len=args.seq_len, reduced=args.reduced)
+    async_cfg = dataclasses.replace(mkor_cfg, staleness=args.staleness)
+    async_common = dict(common, mkor_cfg=async_cfg)
 
     targets = []
     print(f"mkor-lint: tracing {args.config} (single + chunk"
-          + (" + dist" if args.dist else "") + ") ...", flush=True)
+          + (" + dist" if args.dist else "")
+          + (f", sync + async staleness={args.staleness}"
+             if args.staleness else "") + ") ...", flush=True)
     targets.append(trace.single_target(args.config, **common))
     targets.append(trace.chunk_target(args.config, chunk=args.chunk,
                                       steps=args.steps, **common))
+    if args.staleness:
+        # async twins: staleness-bound runs on these, and the async chunk
+        # runner must still donate its (now double-buffered) carry
+        targets.append(trace.single_target(args.config, **async_common))
+        targets.append(trace.chunk_target(args.config, chunk=args.chunk,
+                                          steps=args.steps, **async_common))
     if args.dist:
-        targets.append(trace.dist_target(
+        sync_dist = trace.dist_target(
             args.config, world=args.dist_devices,
-            compile_hlo=args.compile, **common))
+            compile_hlo=args.compile, **common)
+        targets.append(sync_dist)
+        if args.staleness:
+            async_dist = trace.dist_target(
+                args.config, world=args.dist_devices,
+                compile_hlo=args.compile, **async_common)
+            # differential baseline: async must add zero ungated bytes
+            targets.append(trace.attach_sync_baseline(async_dist,
+                                                      sync_dist))
 
     report = run_checkers(targets, names=args.checkers)
     print(report.render())

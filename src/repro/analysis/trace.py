@@ -83,6 +83,8 @@ def _target_meta(cfg, params, mkor_cfg: MKORConfig,
         "manifest": manifest,
         "world": world,
         "n_dense_layers": len(dense),
+        "n_buckets": len(manifest),
+        "staleness": mkor_cfg.staleness,
         "factor_dims": factor_dims,
         "grad_f32_bytes": grad_bytes,
         "stats_f32_bytes": stats_bytes,
@@ -111,8 +113,9 @@ def single_target(arch: str, *, mkor_cfg: Optional[MKORConfig] = None,
     step = jax.jit(train_lib.make_train_step(cfg, opt))
     jaxpr = jax.make_jaxpr(step)(params, opt_state, batch)
     lowered = step.lower(params, opt_state, batch).as_text() if lower else ""
+    suffix = "-async" if mkor_cfg.staleness else ""
     return LintTarget(
-        name=f"{cfg.name}/single", kind="single", jaxpr=jaxpr,
+        name=f"{cfg.name}/single{suffix}", kind="single", jaxpr=jaxpr,
         lowered_text=lowered,
         meta=_target_meta(cfg, params, mkor_cfg, world=1))
 
@@ -143,8 +146,9 @@ def dist_target(arch: str, *, world: int = 8,
     if compile_hlo:
         compiled = step.lower(params, opt_state,
                               batch).compile().as_text()
+    suffix = "-async" if mkor_cfg.staleness else ""
     return LintTarget(
-        name=f"{cfg.name}/dist", kind="dist", jaxpr=jaxpr,
+        name=f"{cfg.name}/dist{suffix}", kind="dist", jaxpr=jaxpr,
         compiled_text=compiled,
         meta=_target_meta(cfg, params, mkor_cfg, world=world))
 
@@ -176,8 +180,9 @@ def chunk_target(arch: str, *, chunk: int = 2, steps: int = 100,
         "donate": donate,
         "n_carry_leaves": len(jax.tree.leaves((params, opt_state))),
     })
-    return LintTarget(name=f"{cfg.name}/chunk", kind="chunk", jaxpr=jaxpr,
-                      lowered_text=lowered, meta=meta)
+    suffix = "-async" if mkor_cfg.staleness else ""
+    return LintTarget(name=f"{cfg.name}/chunk{suffix}", kind="chunk",
+                      jaxpr=jaxpr, lowered_text=lowered, meta=meta)
 
 
 def custom_target(name: str, fn: Callable, *args, kind: str = "custom",
@@ -195,3 +200,23 @@ def custom_target(name: str, fn: Callable, *args, kind: str = "custom",
     return LintTarget(name=name, kind=kind, jaxpr=jaxpr,
                       lowered_text=lowered, compiled_text=compiled,
                       meta=dict(meta or {}))
+
+
+def attach_sync_baseline(async_target: LintTarget,
+                         sync_target: LintTarget) -> LintTarget:
+    """Record the sync step's ungated per-step collective footprint in the
+    async target's meta (``sync_ungated_bytes`` / ``sync_ungated_count``).
+
+    The `staleness-bound` checker uses this as its differential baseline:
+    the async schedule must move NO more ungated (i.e. every-step) bytes
+    than the synchronous step it replaces — the whole point of the overlap
+    is reordering work, not shipping extra state.  Mutates and returns
+    ``async_target``."""
+    from repro.analysis import jaxpr_walk
+
+    res = jaxpr_walk.walk(sync_target.jaxpr)
+    ungated = [c for c in res.collectives if not c.gated]
+    async_target.meta["sync_ungated_bytes"] = sum(
+        c.payload_bytes for c in ungated)
+    async_target.meta["sync_ungated_count"] = len(ungated)
+    return async_target

@@ -21,8 +21,23 @@ Schedule = Callable[[jnp.ndarray], jnp.ndarray]
 
 
 class GradientTransformation(NamedTuple):
+    """An optimizer as an (init, update[, precompute]) triple.
+
+    ``precompute`` is the optional pre-step hook of the two-phase protocol
+    (DESIGN.md §13): called as ``state = precompute(state, params=params)``
+    at the TOP of a train step, BEFORE the gradients exist, it may only
+    consume state carried in from previous steps.  Async optimizers (MKOR
+    with ``staleness >= 1``) use it to launch next-phase factor inversions
+    with no data dependency on the current step's forward/backward, so XLA
+    can overlap them with the gradient collectives.  Callers that run
+    precompute must pass ``precomputed=True`` to ``update`` (exactly once
+    per step); callers that don't — every pre-existing call site — get the
+    identical result because ``update`` runs the hook inline when
+    ``precomputed`` is false.  First-order backends leave it ``None``.
+    """
     init: Callable[[Params], State]
     update: Callable[..., Tuple[Params, State]]
+    precompute: Optional[Callable[..., State]] = None
 
 
 def _tree_zeros(params, dtype=jnp.float32):

@@ -63,6 +63,20 @@ window (factor staleness <= inv_freq, same bound as the paper's global
 schedule); ``stagger=False`` restores the paper-exact spike.  The per-layer
 oracle runs the identical schedule (each layer inherits its bucket's
 phase), so layouts stay numerically interchangeable.
+
+Overlap-hidden inversions (DESIGN.md §13)
+-----------------------------------------
+With ``staleness=1`` the inverse state is double-buffered: preconditioning
+reads an *active* bank while the next bank (*pending*) is computed from the
+ring stat window the step carried in.  On each bucket's phase tick —
+exposed as ``GradientTransformation.precompute`` and run at the top of the
+train step, before gradients exist — the pending bank is promoted to
+active and the next pending launch is chained onto it.  The launch has no
+data dependency on the current step, so XLA can overlap the inversion work
+with the forward/backward and the gradient collectives; active factors lag
+the synchronous schedule by exactly one ``inv_freq`` window (the bounded
+staleness).  ``staleness=0`` (default) is the synchronous path above,
+bit-identical state tree included.
 """
 from __future__ import annotations
 
@@ -107,6 +121,21 @@ class MKORConfig:
     # SMW work across the window instead of spiking every inv_freq-th step.
     # stagger=False is the paper-exact global schedule (all phases 0).
     stagger: bool = True
+    # Overlap-hidden inversions (DESIGN.md §13): staleness=1 double-buffers
+    # the inverse state — preconditioning reads an *active* bank while the
+    # next bank (the *pending* bank) is computed from the stat window the
+    # step carried in (stats through t-1), so the inversion work has no
+    # data dependency on the current step's forward/backward and can be
+    # overlapped with the gradient collectives (the optimizer exposes the
+    # tick as GradientTransformation.precompute; training/loop.py runs it
+    # at the top of the step).  On each bucket's phase tick the pending
+    # bank is promoted to active and the next pending is launched — the
+    # active factors lag the synchronous schedule by exactly one inv_freq
+    # window (the bounded staleness).  staleness=0 is the synchronous
+    # path, bit-identical (state tree included) to the pre-async
+    # optimizer.  staleness=1 allocates ring stat windows at every rank
+    # (rank=1 gets a 1-row window holding the latest stat vectors).
+    staleness: int = 0
     # Owner-sharded inversions (DESIGN.md §10): static dist spec
     # ((axis_name, axis_size), ...) of the data axes when the optimizer runs
     # inside shard_map (training/loop.py make_dist_train_step).  Each worker
@@ -334,6 +363,14 @@ def mkor(backend: GradientTransformation,
         raise ValueError(f"unknown layout {cfg.layout!r}")
     if cfg.rank < 1:
         raise ValueError(f"rank must be >= 1, got {cfg.rank}")
+    if cfg.staleness not in (0, 1):
+        raise ValueError(
+            f"staleness must be 0 (synchronous) or 1 (double-buffered "
+            f"async, DESIGN.md §13), got {cfg.staleness}")
+    # rank=1 async still rides the block-Woodbury path (1-row window);
+    # staleness=0 keeps the legacy rank-1 state tree bit-identical
+    needs_window = cfg.rank > 1 or cfg.staleness > 0
+    win_rank = max(cfg.rank, 1)
 
     if cfg.use_pallas:
         from repro.kernels import ops as kops
@@ -397,12 +434,15 @@ def mkor(backend: GradientTransformation,
     # init
     # ------------------------------------------------------------------ #
     def init_factor_state(params):
-        # rank > 1: fp32 ring windows of the last `rank` stat vectors per
-        # factor plus a per-slot write count (DESIGN.md §11).  At rank=1
-        # no window state is allocated — the state tree is bit-identical
-        # to the original rank-1 optimizer (checkpoint compatible).
+        # rank > 1 (or staleness >= 1): fp32 ring windows of the last
+        # `win_rank` stat vectors per factor plus a per-slot write count
+        # (DESIGN.md §11/§13).  At rank=1 staleness=0 no window state is
+        # allocated — the state tree is bit-identical to the original
+        # rank-1 optimizer (checkpoint compatible).  staleness >= 1 adds
+        # the pending inverse banks (the double buffer) initialized equal
+        # to the active banks (identity).
         def window(lead, d):
-            return jnp.zeros(lead + (cfg.rank, d), jnp.float32)
+            return jnp.zeros(lead + (win_rank, d), jnp.float32)
 
         if cfg.layout == "per_layer":
             factors, windows = {}, {}
@@ -411,14 +451,20 @@ def mkor(backend: GradientTransformation,
                 if _eligible(path, dense, cfg):
                     key = statlib.path_str(path)
                     factors[key] = _init_factors(dense, cfg)
-                    if cfg.rank > 1:
+                    if needs_window:
                         stack, _, d_in, d_out = statlib.layer_dims(dense)
                         windows[key] = {"a": window(stack, d_in),
                                         "g": window(stack, d_out),
                                         "n": jnp.zeros((), jnp.int32)}
             out = {"factors": factors}
-            if cfg.rank > 1:
+            if needs_window:
                 out["stat_windows"] = windows
+            if cfg.staleness:
+                # distinct buffers, not views of the active factors: the
+                # chunk runner donates the whole opt_state, and XLA
+                # rejects the same buffer donated twice
+                out["pending_factors"] = jax.tree.map(
+                    jnp.array, factors)
             return out
         fd = jnp.dtype(cfg.factor_dtype)
         banks, windows = {}, {}
@@ -431,14 +477,17 @@ def mkor(backend: GradientTransformation,
 
             banks[b.bucket_id] = {"l_inv": eye(b.d_out),
                                   "r_inv": eye(b.d_in)}
-            if cfg.rank > 1:
+            if needs_window:
                 windows[b.bucket_id] = {
                     "a": window(shape, b.d_in),
                     "g": window(shape, b.d_out),
                     "n": jnp.zeros((b.n_slots,), jnp.int32)}
         out = {"factor_banks": banks}
-        if cfg.rank > 1:
+        if needs_window:
             out["stat_windows"] = windows
+        if cfg.staleness:
+            # distinct buffers (see the per-layer branch above)
+            out["pending_banks"] = jax.tree.map(jnp.array, banks)
         return out
 
     def init(params):
@@ -710,7 +759,249 @@ def mkor(backend: GradientTransformation,
         return out, fstate
 
     # ------------------------------------------------------------------ #
-    def update(grads, state, params=None, stats=None, loss=None, **_):
+    # Overlap-hidden inversions (staleness >= 1, DESIGN.md §13).
+    #
+    # The synchronous schedule above reads this step's stats, inverts, and
+    # preconditions with the result — the SMW/block work sits on the
+    # critical path of every phase step.  The async schedule double-buffers
+    # the inverse state instead:
+    #
+    #   tick (phase step t, top of step, BEFORE grads exist):
+    #     active  <- pending                       (promote: pure swap)
+    #     pending <- block_update(stabilize(active'),
+    #                             window rows through step t-1)  (launch)
+    #   every step: push this step's stat vectors into the ring window,
+    #     precondition with the ACTIVE bank only.
+    #
+    # The launch consumes only carried state, so it has no data dependency
+    # on the current forward/backward — XLA is free to overlap it with the
+    # gradient collectives (training/loop.py runs the tick through
+    # GradientTransformation.precompute before grads are computed).  The
+    # active factors lag the synchronous schedule by exactly one inv_freq
+    # window: the bounded staleness.  Under cfg.dist the launch reuses the
+    # owner-sharded map INSIDE the phase cond, so the async path moves
+    # zero extra per-step collective bytes vs the sync schedule
+    # (analysis/checkers.py `staleness-bound` proves this statically).
+    # MKOR-H gates the tick on the CARRIED switch state, so after the
+    # hybrid switch flips both banks freeze (no promote, no launch).
+    # ------------------------------------------------------------------ #
+    def tick_banked(state, tree):
+        manifest = manifest_for(tree, cfg)
+        phases = statlib.bucket_phases(manifest, cfg.inv_freq, cfg.stagger)
+        count = state["count"]
+        so_on = state["hybrid"]["on"] if cfg.hybrid \
+            else jnp.ones((), jnp.bool_)
+        new_active, new_pending, new_windows = {}, {}, {}
+        for bucket in manifest:
+            bid = bucket.bucket_id
+            act = state["factor_banks"][bid]
+            pend = state["pending_banks"][bid]
+            win = state["stat_windows"][bid]
+            ns = len(bucket.stack)
+            do_inv = so_on & (count % cfg.inv_freq == phases[bid])
+
+            # Promote-then-launch.  The new pending chains the block update
+            # onto the just-promoted factors (the same inverse the sync
+            # schedule would have updated in place).  A slot whose window
+            # was never written carries count 0 -> block update is an exact
+            # no-op and its identity factor is a stabilize fixed point, so
+            # stat-less slots stay bit-identical to the sync path.
+            def tick_branch(a_l, a_r, p_l, p_r, aw=win["a"], gw=win["g"],
+                            cnt=win["n"], ns=ns):
+                del a_l, a_r                          # promoted away
+                cnt_full = jnp.broadcast_to(
+                    cnt.reshape(cnt.shape + (1,) * ns), p_l.shape[:ns + 1])
+                g_ord = statlib.window_ordered(gw, cnt_full)
+                a_ord = statlib.window_ordered(aw, cnt_full)
+                if cfg.dist is None \
+                        or collectives.world_size(cfg.dist) <= 1:
+                    stab = _vmap_over_stack(stab_slice, ns + 1)
+                    n_l = banked_block(stab(p_l), g_ord, cnt_full, ns + 1)
+                    n_r = banked_block(stab(p_r), a_ord, cnt_full, ns + 1)
+                else:
+                    # Identical owner-sharded launch as the sync branch —
+                    # same collectives, same payloads, just gated by the
+                    # tick instead of the inline phase step.
+                    def sharded(j, v, c):
+                        n = 1
+                        for d in j.shape[:ns + 1]:
+                            n *= d
+                        new = collectives.owner_sharded_map(
+                            lambda jc, vc, cc: banked_block(
+                                _vmap_over_stack(stab_slice, 1)(jc),
+                                vc, cc, 1),
+                            (j.reshape((n,) + j.shape[ns + 1:]),
+                             v.reshape((n,) + v.shape[ns + 1:]),
+                             c.reshape((n,))),
+                            cfg.dist, n)
+                        return new.reshape(j.shape)
+
+                    n_l = sharded(p_l, g_ord, cnt_full)
+                    n_r = sharded(p_r, a_ord, cnt_full)
+                return p_l, p_r, n_l, n_r
+
+            a_l, a_r, p_l, p_r = jax.lax.cond(
+                do_inv, tick_branch,
+                lambda a_l, a_r, p_l, p_r: (a_l, a_r, p_l, p_r),
+                act["l_inv"], act["r_inv"], pend["l_inv"], pend["r_inv"])
+            new_active[bid] = {"l_inv": a_l, "r_inv": a_r}
+            new_pending[bid] = {"l_inv": p_l, "r_inv": p_r}
+            # Window rows persist (n_valid masking makes stale rows inert);
+            # only the write count resets when the window was consumed.
+            new_windows[bid] = {"a": win["a"], "g": win["g"],
+                                "n": jnp.where(do_inv, 0, win["n"])}
+        return {**state, "factor_banks": new_active,
+                "pending_banks": new_pending, "stat_windows": new_windows}
+
+    def tick_per_layer(state, tree):
+        phases = statlib.layer_phases(manifest_for(tree, cfg),
+                                      cfg.inv_freq, cfg.stagger)
+        count = state["count"]
+        so_on = state["hybrid"]["on"] if cfg.hybrid \
+            else jnp.ones((), jnp.bool_)
+        new_active, new_pending, new_windows = {}, {}, {}
+        for key, fac in state["factors"].items():
+            pend = state["pending_factors"][key]
+            win = state["stat_windows"][key]
+            ns = fac["l_inv"].ndim - 2
+            stack = fac["l_inv"].shape[:ns]
+            do_inv = so_on & (count % cfg.inv_freq == phases.get(key, 0))
+
+            def tick_branch(a_l, a_r, p_l, p_r, aw=win["a"], gw=win["g"],
+                            cnt=win["n"], ns=ns, stack=stack):
+                del a_l, a_r
+                stab = _vmap_over_stack(stab_slice, ns)
+                upd = _vmap_over_stack(block_slice, ns)
+                cnt_s = jnp.broadcast_to(cnt, stack)
+                n_l = upd(stab(p_l), statlib.window_ordered(gw, cnt), cnt_s)
+                n_r = upd(stab(p_r), statlib.window_ordered(aw, cnt), cnt_s)
+                return p_l, p_r, n_l, n_r
+
+            a_l, a_r, p_l, p_r = jax.lax.cond(
+                do_inv, tick_branch,
+                lambda a_l, a_r, p_l, p_r: (a_l, a_r, p_l, p_r),
+                fac["l_inv"], fac["r_inv"], pend["l_inv"], pend["r_inv"])
+            new_active[key] = {"l_inv": a_l, "r_inv": a_r}
+            new_pending[key] = {"l_inv": p_l, "r_inv": p_r}
+            new_windows[key] = {"a": win["a"], "g": win["g"],
+                                "n": jnp.where(do_inv, 0, win["n"])}
+        return {**state, "factors": new_active,
+                "pending_factors": new_pending,
+                "stat_windows": new_windows}
+
+    def tick(state, tree):
+        return tick_per_layer(state, tree) if cfg.layout == "per_layer" \
+            else tick_banked(state, tree)
+
+    # Async per-step work: push this step's stat vectors into the ring
+    # windows and precondition with the ACTIVE bank.  No inversion here —
+    # that happened at the tick.
+    def update_per_layer_async(grads, state, params, stats, so_on):
+        layer_paths = {statlib.path_str(p): p
+                       for p in statlib.iter_dense_layers(grads)}
+        new_windows = {}
+        out = grads
+        for key, fac in state["factors"].items():
+            path = layer_paths[key]
+            g_w = statlib.tree_get(grads, path)["w"]
+            a_vec = statlib.get_a_vec(stats, path) if stats is not None \
+                else None
+            g_vec = statlib.get_g_vec(grads, path)
+            ns = fac["l_inv"].ndim - 2
+
+            win = state["stat_windows"][key]
+            a_win, g_win, n_cnt = win["a"], win["g"], win["n"]
+            if a_vec is not None and g_vec is not None:
+                a_win = statlib.window_push(a_win, n_cnt, a_vec)
+                g_win = statlib.window_push(g_win, n_cnt, g_vec)
+                n_cnt = n_cnt + 1
+            new_windows[key] = {"a": a_win, "g": g_win, "n": n_cnt}
+
+            delta = _vmap_over_stack(precond_slice, ns)(
+                fac["l_inv"], fac["r_inv"], g_w)
+            delta = jnp.where(so_on, delta, g_w)      # MKOR-H fallback
+            out = statlib.tree_set(
+                out, path, {**statlib.tree_get(out, path), "w": delta})
+        return out, {"factors": state["factors"],
+                     "pending_factors": state["pending_factors"],
+                     "stat_windows": new_windows}
+
+    def update_banked_async(grads, state, params, stats, so_on):
+        manifest = manifest_for(params if params is not None else grads,
+                                cfg)
+        new_windows = {}
+        out = grads
+        for bucket in manifest:
+            bank = state["factor_banks"][bucket.bucket_id]
+            ns = len(bucket.stack)
+            win = state["stat_windows"][bucket.bucket_id]
+            a_win, g_win, n_cnt = win["a"], win["g"], win["n"]
+
+            g_ws, g_vecs, a_vecs = [], [], []
+            for path in bucket.paths:
+                g_ws.append(statlib.tree_get(grads, path)["w"])
+                g_vecs.append(statlib.get_g_vec(grads, path))
+                a_vecs.append(statlib.get_a_vec(stats, path)
+                              if stats is not None else None)
+
+            sig_groups: Dict[Any, list] = {}
+            for slot, (av, gv) in enumerate(zip(a_vecs, g_vecs)):
+                if av is None or gv is None:
+                    continue                      # no stats: slot untouched
+                sig_groups.setdefault((av.shape, gv.shape),
+                                      []).append(slot)
+            for sig in sorted(sig_groups, key=str):
+                slots = sig_groups[sig]
+                whole = len(slots) == bucket.n_slots
+                idx = jnp.asarray(slots)
+                gv = jnp.stack([g_vecs[i] for i in slots])
+                av = jnp.stack([a_vecs[i] for i in slots])
+                aw = a_win if whole else a_win[idx]
+                gw = g_win if whole else g_win[idx]
+                cnt = n_cnt if whole else n_cnt[idx]
+                cnt_b = cnt.reshape(cnt.shape + (1,) * ns)
+                aw = statlib.window_push(aw, cnt_b, av)
+                gw = statlib.window_push(gw, cnt_b, gv)
+                cnt = cnt + 1
+                if whole:
+                    a_win, g_win, n_cnt = aw, gw, cnt
+                else:
+                    a_win = a_win.at[idx].set(aw)
+                    g_win = g_win.at[idx].set(gw)
+                    n_cnt = n_cnt.at[idx].set(cnt)
+            new_windows[bucket.bucket_id] = {"a": a_win, "g": g_win,
+                                             "n": n_cnt}
+
+            stacked_gw = jnp.stack(g_ws)
+            delta = banked_precond(bank["l_inv"], bank["r_inv"],
+                                   stacked_gw, ns + 1)
+            delta = jnp.where(so_on, delta, stacked_gw)  # MKOR-H fallback
+            for i, path in enumerate(bucket.paths):
+                out = statlib.tree_set(
+                    out, path,
+                    {**statlib.tree_get(out, path), "w": delta[i]})
+        return out, {"factor_banks": state["factor_banks"],
+                     "pending_banks": state["pending_banks"],
+                     "stat_windows": new_windows}
+
+    def precompute(state, params=None, **_):
+        """Phase tick of the two-phase async protocol (DESIGN.md §13).
+
+        Runs promote+launch over the carried state only — call at the TOP
+        of the train step, before grads exist, then pass
+        ``precomputed=True`` to ``update``.  ``update`` without
+        ``precomputed`` runs the identical tick inline, so the two call
+        protocols are bit-equal."""
+        if params is None:
+            raise ValueError("mkor precompute needs params "
+                             "(the bucket manifest is derived from them)")
+        return tick(state, params)
+
+    # ------------------------------------------------------------------ #
+    def update(grads, state, params=None, stats=None, loss=None,
+               precomputed=False, **_):
+        if cfg.staleness and not precomputed:
+            state = tick(state, params if params is not None else grads)
         count = state["count"]
         hybrid = state["hybrid"]
         if cfg.hybrid:
@@ -725,10 +1016,15 @@ def mkor(backend: GradientTransformation,
             # window and factor staleness stays <= inv_freq.
             return so_on & (count % cfg.inv_freq == phase)
 
-        step_fn = update_per_layer if cfg.layout == "per_layer" \
-            else update_banked
-        out, factor_state = step_fn(grads, state, params, stats,
-                                    do_inv_fn, so_on)
+        if cfg.staleness:
+            step_fn = update_per_layer_async if cfg.layout == "per_layer" \
+                else update_banked_async
+            out, factor_state = step_fn(grads, state, params, stats, so_on)
+        else:
+            step_fn = update_per_layer if cfg.layout == "per_layer" \
+                else update_banked
+            out, factor_state = step_fn(grads, state, params, stats,
+                                        do_inv_fn, so_on)
 
         # probes are stat taps: never step them, keep backend moments clean
         out = statlib.zero_probes(out)
@@ -742,7 +1038,8 @@ def mkor(backend: GradientTransformation,
             "backend": backend_state,
         }
 
-    return GradientTransformation(init, update)
+    return GradientTransformation(init, update,
+                                  precompute if cfg.staleness else None)
 
 
 def mkor_h(backend: GradientTransformation,

@@ -236,7 +236,7 @@ def layer_phases(manifest: BucketManifest, inv_freq: int,
 
 
 def bucket_cost(bucket: FactorBucket, factor_bytes: int = 2,
-                rank: int = 1) -> Dict[str, Any]:
+                rank: int = 1, staleness: int = 0) -> Dict[str, Any]:
     """Analytic per-bucket factor FLOPs/bytes (launch/dryrun, benchmarks).
 
     Slices = bank slots x stacked repeats; each slice owns an (d_out, d_out)
@@ -245,7 +245,11 @@ def bucket_cost(bucket: FactorBucket, factor_bytes: int = 2,
     r×r Gram + solve (O(r²d + r³)), and the rank-r axpy write (~(2r+1)d²) —
     still O(d²) in the factor dim, vs the chained path's r full rank-1
     dispatches.  Preconditioning is two matmuls per step broadcast over the
-    extra dims, independent of rank."""
+    extra dims, independent of rank.  ``staleness >= 1`` (DESIGN.md §13)
+    doubles the resident inverse state (the pending bank) and allocates the
+    ring windows at every rank — but adds zero FLOPs (same one block update
+    per factor per window, just launched a window early) and zero wire
+    bytes (see :func:`bucket_comm_cost`)."""
     n = bucket.n_slots
     for d in bucket.stack:
         n *= d
@@ -259,8 +263,10 @@ def bucket_cost(bucket: FactorBucket, factor_bytes: int = 2,
         for d in (di, do))
     precond_flops = n * b * 2 * di * do * (di + do)
     factor_mem = n * (di * di + do * do) * factor_bytes
-    # fp32 ring windows of the last r stat vectors per factor (rank > 1)
-    window_mem = n * r * (di + do) * 4 if r > 1 else 0
+    # fp32 ring windows of the last r stat vectors per factor (rank > 1,
+    # or any rank under the async double-buffered schedule)
+    window_mem = n * r * (di + do) * 4 if (r > 1 or staleness) else 0
+    pending_mem = factor_mem if staleness else 0
     return {
         "bucket_id": bucket.bucket_id,
         "n_layers": bucket.n_slots,
@@ -272,6 +278,7 @@ def bucket_cost(bucket: FactorBucket, factor_bytes: int = 2,
         "rank": r,
         "factor_bytes": factor_mem,
         "window_bytes": window_mem,
+        "pending_factor_bytes": pending_mem,
         "smw_flops_per_inv": smw_flops,
         "precond_flops_per_step": precond_flops,
         # block SMW streams each factor twice (read for the V matvecs +
@@ -338,6 +345,13 @@ def bucket_comm_cost(bucket: FactorBucket, world_size: int = 1,
       on this bucket's phase step each worker ships only its owned chunk
       of flattened (slot x stack) slices of the updated inverse bank —
       ~1/min(world_size, slices) of the factor bytes.
+
+    These budgets are staleness-invariant: the async double-buffered
+    schedule (DESIGN.md §13) launches the identical owner-sharded
+    inversion inside the identical phase cond, just one window early, so
+    it ships exactly the same bytes per step as the sync schedule — the
+    `staleness-bound` lint checker (analysis/checkers.py) proves this
+    statically against these numbers.
     """
     n = bucket_slices(bucket)
     di, do = bucket.d_in, bucket.d_out

@@ -51,8 +51,8 @@ from repro.training import loop as train_lib
 
 
 def build_optimizer(name: str, lr, *, inv_freq: int = 10, rank: int = 1,
-                    use_pallas: bool = False, platform: str = "",
-                    dist=None):
+                    staleness: int = 0, use_pallas: bool = False,
+                    platform: str = "", dist=None):
     # Pallas interpret mode is a testing device, not an execution strategy:
     # only a real TPU runs the compiled kernels (they use TPU memory
     # spaces), every other backend interprets.  Before this gate,
@@ -62,11 +62,11 @@ def build_optimizer(name: str, lr, *, inv_freq: int = 10, rank: int = 1,
     backend = firstorder.lamb(lr)
     if name == "mkor":
         return mkor(backend, MKORConfig(
-            inv_freq=inv_freq, rank=rank, use_pallas=use_pallas,
-            interpret=interpret, dist=dist))
+            inv_freq=inv_freq, rank=rank, staleness=staleness,
+            use_pallas=use_pallas, interpret=interpret, dist=dist))
     if name == "mkor_h":
         return mkor_h(backend, MKORConfig(inv_freq=inv_freq, rank=rank,
-                                          dist=dist))
+                                          staleness=staleness, dist=dist))
     if name == "eva":
         return eva(backend, EvaConfig())
     if name == "lamb":
@@ -107,6 +107,11 @@ def main() -> None:
                     help="block rank-r updates (paper §4): buffer the last "
                          "r stat vectors per factor and consume the window "
                          "with one block-Woodbury update per phase step")
+    ap.add_argument("--staleness", type=int, default=0,
+                    help="1 = double-buffered inverse banks (DESIGN.md "
+                         "§13): the phase-step inversions run one window "
+                         "ahead against the pending bank, off the step's "
+                         "critical path; 0 = synchronous schedule")
     ap.add_argument("--reduced", action="store_true",
                     help="train the smoke-scale variant of the arch")
     ap.add_argument("--use-pallas", action="store_true",
@@ -143,8 +148,8 @@ def main() -> None:
         mesh = mesh_lib.make_host_mesh(n_data=args.dist_devices)
         dist = collectives.dist_axes(mesh, mesh_lib.mesh_axes(mesh))
     opt = build_optimizer(args.optimizer, lr, inv_freq=args.inv_freq,
-                          rank=args.rank, use_pallas=args.use_pallas,
-                          dist=dist)
+                          rank=args.rank, staleness=args.staleness,
+                          use_pallas=args.use_pallas, dist=dist)
 
     params = model_lib.init_params(jax.random.PRNGKey(args.seed), cfg)
     n_params = model_lib.param_count(params)

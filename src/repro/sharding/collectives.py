@@ -143,26 +143,43 @@ def pmean_rank1_stats(stats, dist: DistSpec,
     return walk(stats)
 
 
-def all_reduce_mean_tree(tree, dist: DistSpec):
-    """Flat-bucket gradient mean: ravel every leaf into one fp32 buffer,
-    reduce-scatter it across the data axes, all-gather the reduced shards
-    back, and unflatten.  Explicitly the two phases of a ring all-reduce —
-    one collective pair per step regardless of tree width."""
+def flat_reduce_scatter_mean(tree, dist: DistSpec):
+    """First half of the flat-bucket gradient mean: ravel every leaf into
+    one fp32 buffer and reduce-scatter it, leaving worker i owning (and
+    having summed) shard i.  Returns ``(shard, spec)`` where ``spec`` is
+    the static unflatten recipe for :func:`flat_all_gather_tree`.
+
+    Splitting the ring all-reduce into its two explicit phases is what
+    gives the async inversion schedule (DESIGN.md §13) its overlap window:
+    the dist step can issue the reduce-scatter, interleave independent
+    work (the stat pmean, the already-launched factor inversions), and
+    only then all-gather — XLA's async collectives hide the inversion
+    latency inside the gradient exchange."""
     leaves, treedef = jax.tree.flatten(tree)
+    spec = (treedef, leaves)
     if not leaves:
-        return tree
+        return None, spec
     w = world_size(dist)
     flat = jnp.concatenate([l.astype(jnp.float32).ravel() for l in leaves])
     n = flat.size
     pad = (-n) % w
     if pad:
         flat = jnp.pad(flat, (0, pad))
-    # reduce-scatter: worker i ends up owning (and having summed) shard i
     shard = lax.psum_scatter(flat, _names(dist), scatter_dimension=0,
                              tiled=True) / w
-    # all-gather: rebuild the full reduced buffer, shards back in order
+    return shard, spec
+
+
+def flat_all_gather_tree(shard, spec, dist: DistSpec):
+    """Second half of the flat-bucket mean: all-gather the reduced shards
+    back in worker order, trim the pad, and unflatten to the original tree
+    (leaf shapes/dtypes from ``spec``)."""
+    treedef, leaves = spec
+    if not leaves:
+        return jax.tree.unflatten(treedef, leaves)
+    n = sum(l.size for l in leaves)
     full = lax.all_gather(shard, _names(dist), tiled=True)
-    if pad:
+    if full.size != n:
         full = full[:n]
     out, off = [], 0
     for l in leaves:
@@ -170,6 +187,18 @@ def all_reduce_mean_tree(tree, dist: DistSpec):
         out.append(full[off:off + k].reshape(l.shape).astype(l.dtype))
         off += k
     return jax.tree.unflatten(treedef, out)
+
+
+def all_reduce_mean_tree(tree, dist: DistSpec):
+    """Flat-bucket gradient mean: ravel every leaf into one fp32 buffer,
+    reduce-scatter it across the data axes, all-gather the reduced shards
+    back, and unflatten.  Explicitly the two phases of a ring all-reduce —
+    one collective pair per step regardless of tree width.  Composition of
+    :func:`flat_reduce_scatter_mean` + :func:`flat_all_gather_tree`; the
+    dist train step calls the halves directly to interleave independent
+    work between them."""
+    shard, spec = flat_reduce_scatter_mean(tree, dist)
+    return flat_all_gather_tree(shard, spec, dist)
 
 
 # --------------------------------------------------------------------- #

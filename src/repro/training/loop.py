@@ -97,10 +97,17 @@ def make_train_step(cfg: ModelConfig, optimizer: GradientTransformation,
     loss_fn = make_loss_fn(cfg, collect_stats=collect_stats)
 
     def train_step(params, opt_state, batch):
+        # Two-phase async protocol (DESIGN.md §13): the precompute tick
+        # consumes only carried state, so running it BEFORE the gradients
+        # exist hands XLA an inversion launch it can overlap with the
+        # forward/backward.  Sync optimizers (precompute=None) skip it.
+        if optimizer.precompute is not None:
+            opt_state = optimizer.precompute(opt_state, params=params)
         (loss, aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(
             params, batch)
         updates, opt_state = optimizer.update(
-            grads, opt_state, params=params, stats=aux["stats"], loss=loss)
+            grads, opt_state, params=params, stats=aux["stats"], loss=loss,
+            precomputed=optimizer.precompute is not None)
         params = firstorder.apply_updates(params, updates)
         metrics = {
             "loss": loss,
@@ -156,15 +163,28 @@ def make_dist_step_fn(grads_fn: Callable, optimizer: GradientTransformation,
     world = collectives.world_size(dist)
 
     def local_step(params, opt_state, batch):
+        # Async tick first (DESIGN.md §13): launched on carried state only,
+        # before any of this step's data exists, so the owner shards'
+        # next-phase inversions are free to overlap with the forward/
+        # backward AND the gradient collectives below.
+        if optimizer.precompute is not None:
+            opt_state = optimizer.precompute(opt_state, params=params)
         out = grads_fn(params, batch)
         loss, grads, stats = out[:3]
         extra = out[3] if len(out) > 3 else {}
         loss = collectives.pmean(loss, dist)
-        grads = collectives.all_reduce_mean_tree(grads, dist)
+        # Gradient mean as its two explicit ring-all-reduce phases with
+        # the independent O(d) stat pmean interleaved between them — the
+        # widest scheduling window for hiding the inversion launch inside
+        # the gradient exchange (numerically identical to the fused
+        # all_reduce_mean_tree; the stat pmean commutes with both halves).
+        shard, spec = collectives.flat_reduce_scatter_mean(grads, dist)
         stats = collectives.pmean_rank1_stats(
             stats, dist, payload_dtype=stats_payload_dtype)
+        grads = collectives.flat_all_gather_tree(shard, spec, dist)
         updates, opt_state = optimizer.update(
-            grads, opt_state, params=params, stats=stats, loss=loss)
+            grads, opt_state, params=params, stats=stats, loss=loss,
+            precomputed=optimizer.precompute is not None)
         params = firstorder.apply_updates(params, updates)
         metrics = {
             "loss": loss,

@@ -1,0 +1,236 @@
+"""Overlap-hidden inversions (DESIGN.md §13): double-buffered inverse
+banks with bounded staleness.
+
+Contracts under test:
+* staleness=0 keeps the sync state tree byte-identical — no pending
+  buffers, no stat windows at rank 1 (checkpoint compatibility);
+* the two-phase protocol (``precompute`` then ``update(precomputed=
+  True)``) is bit-equal to the one-call path (``update`` runs the tick
+  inline) for both layouts and rank 1 / rank>1;
+* the async bank path reproduces the async per-layer oracle;
+* staleness=1 still converges on the tier-1 autoencoder (log-loss
+  slope, not endpoint);
+* the MKOR-H sticky switch freezes *both* banks — active and pending;
+* staleness > 1 is rejected at construction.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import baseline_net, firstorder
+from repro.core.mkor import MKORConfig, factor_slices, mkor, mkor_h
+
+
+def _batch(step, d_in=96):
+    rng = np.random.default_rng(step)
+    basis = np.random.default_rng(0).standard_normal((8, d_in)) / 3
+    x = (rng.standard_normal((64, 8)) @ basis).astype(np.float32)
+    return {"x": jnp.asarray(x), "y": jnp.asarray(x)}
+
+
+def _assert_trees_equal(a, b, rtol=0, atol=0):
+    jax.tree.map(
+        lambda x, y: np.testing.assert_allclose(
+            np.asarray(x, np.float32), np.asarray(y, np.float32),
+            rtol=rtol, atol=atol), a, b)
+
+
+def _run(opt, params0, steps, *, two_phase=False):
+    """Drive `opt` on the autoencoder; two_phase uses the overlap
+    protocol (tick dispatched separately, update told precomputed=True),
+    else the one-call path where update() runs the tick inline."""
+    pre = jax.jit(lambda s, p: opt.precompute(s, params=p)) \
+        if two_phase else None
+
+    @jax.jit
+    def step(params, state, batch):
+        loss, grads, stats = baseline_net.grads_and_full_stats(params, batch)
+        upd, state = opt.update(grads, state, params=params, stats=stats,
+                                loss=loss, precomputed=two_phase)
+        return firstorder.apply_updates(params, upd), state, loss
+
+    params, state = params0, opt.init(params0)
+    losses = []
+    for i in range(steps):
+        if two_phase:
+            state = pre(state, params)
+        params, state, loss = step(params, state, _batch(i))
+        losses.append(float(loss))
+    return params, state, losses
+
+
+# ---------------------------------------------------------------------- #
+# staleness=0: the sync path is untouched
+# ---------------------------------------------------------------------- #
+def test_staleness0_state_tree_has_no_async_buffers(ae_params):
+    """Checkpoint compatibility: staleness=0 must not grow the state tree
+    — no pending bank/factor buffers, and at rank 1 no stat windows."""
+    for layout, pend_key in (("bank", "pending_banks"),
+                             ("per_layer", "pending_factors")):
+        opt = mkor(firstorder.sgd(1e-2), MKORConfig(layout=layout,
+                                                    exclude=()))
+        state = opt.init(ae_params)
+        assert pend_key not in state
+        assert "stat_windows" not in state
+        assert opt.precompute is None
+
+
+def test_staleness1_allocates_pending_and_windows(ae_params):
+    opt = mkor(firstorder.sgd(1e-2), MKORConfig(staleness=1, exclude=()))
+    state = opt.init(ae_params)
+    assert "pending_banks" in state and "stat_windows" in state
+    # pending starts as a copy of active
+    _assert_trees_equal(state["pending_banks"], state["factor_banks"])
+    assert opt.precompute is not None
+
+
+def test_staleness_above_one_rejected(ae_params):
+    with pytest.raises(ValueError, match="staleness"):
+        mkor(firstorder.sgd(1e-2), MKORConfig(staleness=2, exclude=()))
+
+
+# ---------------------------------------------------------------------- #
+# two-phase protocol == one-call path, bit for bit
+# ---------------------------------------------------------------------- #
+@pytest.mark.parametrize("layout", ["bank", "per_layer"])
+@pytest.mark.parametrize("rank", [1, 2])
+def test_precompute_protocol_bit_equal(ae_params, layout, rank):
+    """update() with precomputed=False runs the tick inline on the same
+    carried state the separately-dispatched precompute() reads, so the
+    two protocols must agree bitwise — params, losses, and the full
+    state tree including both banks and the stat windows."""
+    cfg = MKORConfig(layout=layout, rank=rank, staleness=1, inv_freq=2,
+                     stagger=True, exclude=())
+    steps = 5
+    opt = mkor(firstorder.sgd(1e-2, momentum=0.9), cfg)
+    p1, s1, l1 = _run(opt, ae_params, steps, two_phase=True)
+    p2, s2, l2 = _run(opt, ae_params, steps, two_phase=False)
+    assert l1 == l2
+    _assert_trees_equal(p1, p2)
+    _assert_trees_equal(s1, s2)
+
+
+def test_async_bank_matches_per_layer_oracle(ae_params):
+    """The double-buffered bank path reproduces the double-buffered
+    per-layer oracle: same updates, same active factors."""
+    steps = 6
+    common = dict(staleness=1, inv_freq=2, exclude=())
+    opt_b = mkor(firstorder.sgd(1e-2, momentum=0.9),
+                 MKORConfig(layout="bank", **common))
+    opt_l = mkor(firstorder.sgd(1e-2, momentum=0.9),
+                 MKORConfig(layout="per_layer", **common))
+    p_b, s_b, l_b = _run(opt_b, ae_params, steps, two_phase=True)
+    p_l, s_l, l_l = _run(opt_l, ae_params, steps, two_phase=True)
+    np.testing.assert_allclose(l_b, l_l, rtol=1e-5)
+    _assert_trees_equal(p_b, p_l, rtol=1e-5, atol=1e-6)
+    fs_b = factor_slices(s_b, p_b, MKORConfig(layout="bank", **common))
+    fs_l = factor_slices(s_l, p_l, MKORConfig(layout="per_layer",
+                                              **common))
+    assert set(fs_b) == set(fs_l)
+    for k in fs_b:
+        _assert_trees_equal(fs_b[k], fs_l[k], rtol=1e-5, atol=1e-6)
+
+
+def test_async_state_composes_with_donated_chunk_runner(tiny_model_cfg):
+    """The double-buffered opt_state threads through the donated lax.scan
+    chunk runner: pending buffers must be DISTINCT arrays from the active
+    bank (an aliased init makes XLA reject the carry — 'attempt to donate
+    the same buffer twice'), and the scanned steps must match the
+    per-step loop."""
+    from repro.models import model as model_lib
+    from repro.training import loop as train_lib
+
+    mcfg = MKORConfig(inv_freq=2, staleness=1)
+    batches = [{"tokens": jax.random.randint(jax.random.key(i), (2, 8), 0,
+                                             32),
+                "labels": jax.random.randint(jax.random.key(i + 9), (2, 8),
+                                             0, 32)} for i in range(4)]
+    results = {}
+    for mode in ("loop", "chunk"):
+        opt = mkor(firstorder.sgd(1e-2), mcfg)
+        params = model_lib.init_params(jax.random.key(0), tiny_model_cfg)
+        state = opt.init(params)
+        step = train_lib.make_train_step(tiny_model_cfg, opt)
+        if mode == "loop":
+            jstep = jax.jit(step)
+            for b in batches:
+                params, state, m = jstep(params, state, b)
+        else:
+            params, state, hist = train_lib.train_epoch(
+                step, params, state, batches, chunk=2)
+            m = hist[-1]
+        assert np.isfinite(float(m["loss"]))
+        results[mode] = (params, m["loss"])
+    # scan vs per-step jit are different compiled programs: allow normal
+    # fp32 reassociation noise, not bit equality
+    _assert_trees_equal(results["loop"][0], results["chunk"][0],
+                        rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------- #
+# staleness=1 convergence (bounded staleness is good enough)
+# ---------------------------------------------------------------------- #
+def test_staleness1_converges_on_autoencoder(ae_params):
+    """One-window-stale preconditioners must not cost convergence class:
+    the async log-loss slope stays within a factor of the sync slope
+    (both negative).  Slope over the trajectory, not the endpoint."""
+    steps = 30
+    common = dict(inv_freq=3, stagger=True, exclude=())
+    _, _, sync_losses = _run(
+        mkor(firstorder.sgd(1e-2, momentum=0.9), MKORConfig(**common)),
+        ae_params, steps)
+    _, _, async_losses = _run(
+        mkor(firstorder.sgd(1e-2, momentum=0.9),
+             MKORConfig(staleness=1, **common)),
+        ae_params, steps, two_phase=True)
+    assert np.isfinite(async_losses).all()
+
+    def slope(losses):
+        y = np.log(np.maximum(np.asarray(losses, np.float64), 1e-30))
+        return float(np.polyfit(np.arange(len(y)), y, 1)[0])
+
+    s_sync, s_async = slope(sync_losses), slope(async_losses)
+    assert s_sync < 0 and s_async < 0
+    assert s_async < 0.5 * s_sync, \
+        f"async slope {s_async:.4f}/step vs sync {s_sync:.4f}/step"
+
+
+# ---------------------------------------------------------------------- #
+# MKOR-H: the sticky switch freezes BOTH banks
+# ---------------------------------------------------------------------- #
+def test_hybrid_switch_freezes_active_and_pending(ae_params):
+    """After the sticky switch trips, the tick must stop promoting and
+    stop launching: both factor_banks and pending_banks are bit-frozen
+    across further phase steps (a tick that kept refreshing the pending
+    bank would silently resume preconditioning if the flag ever
+    glitched, and would waste the inversion FLOPs forever)."""
+    cfg = MKORConfig(hybrid=True, hybrid_min_steps=2, hybrid_threshold=0.5,
+                     staleness=1, stagger=True, inv_freq=2, exclude=())
+    opt = mkor_h(firstorder.sgd(1.0), cfg)
+    state = opt.init(ae_params)
+    _, grads, stats = baseline_net.grads_and_full_stats(
+        ae_params, _batch(0))
+    pre = jax.jit(lambda s: opt.precompute(s, params=ae_params))
+    upd_fn = jax.jit(lambda g, s, l: opt.update(
+        g, s, params=ae_params, stats=stats, loss=l, precomputed=True))
+    for _ in range(8):                         # constant loss: no progress
+        state = pre(state)
+        upd, state = upd_fn(grads, state, jnp.asarray(1.0))
+    assert not bool(state["hybrid"]["on"])
+    frozen_active = jax.tree.map(lambda x: x, state["factor_banks"])
+    frozen_pending = jax.tree.map(lambda x: x, state["pending_banks"])
+    # 2*inv_freq more steps: every bucket's phase passes twice
+    for _ in range(4):
+        state = pre(state)
+        upd, state = upd_fn(grads, state, jnp.asarray(0.01))
+    _assert_trees_equal(frozen_active, state["factor_banks"])
+    _assert_trees_equal(frozen_pending, state["pending_banks"])
+    # passthrough: update == backend(grads) == -lr * grads for plain SGD
+    got = upd["layers"][0]["w"]
+    np.testing.assert_allclose(np.asarray(got),
+                               -1.0 * np.asarray(grads["layers"][0]["w"]),
+                               rtol=1e-6)
+    assert not bool(state["hybrid"]["on"])      # sticky

@@ -317,6 +317,36 @@ def test_dist_rank_r_matches_single_device(ae_params):
     assert "stat_windows" in s
 
 
+def test_dist_async_step_matches_single_device(ae_params):
+    """staleness=1 under the 8-worker shard_map step: the precompute tick
+    (owner-sharded pending inversions inside the phase cond) overlaps the
+    split grad reduce-scatter/all-gather, and must still reproduce the
+    single-device async run — params, both banks, and window state."""
+    steps = 6
+    mesh = _mesh()
+    dist = collectives.dist_axes(mesh, mesh_lib.mesh_axes(mesh))
+    common = dict(inv_freq=2, stagger=True, staleness=1, exclude=())
+    params0 = ae_params
+    p_ref, s_ref, ref_losses = _run_single(
+        mkor(firstorder.sgd(1e-2, momentum=0.9), MKORConfig(**common)),
+        params0, steps)
+
+    opt_d = mkor(firstorder.sgd(1e-2, momentum=0.9),
+                 MKORConfig(dist=dist, **common))
+    assert opt_d.precompute is not None       # dist step uses the 2-phase path
+    step = train_lib.make_dist_step_fn(_grads_fn, opt_d, mesh, ("data",),
+                                       stats_payload_dtype=None)
+    p, s = _copy(params0), opt_d.init(params0)
+    losses = []
+    for i in range(steps):
+        p, s, m = step(p, s, _batch(i))
+        losses.append(float(m["loss"]))
+    np.testing.assert_allclose(losses, ref_losses, rtol=1e-5)
+    _assert_trees_close(p, p_ref)
+    _assert_trees_close(s, s_ref)
+    assert "pending_banks" in s and "stat_windows" in s
+
+
 def test_dist_hybrid_switch_identical_across_shards(ae_params):
     """MKOR-H under the dist step (satellite): the sticky switch decision
     is computed from the pmean'd loss, so the replicated hybrid state must
