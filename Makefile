@@ -1,5 +1,5 @@
 # Single verification gate (ROADMAP.md tier-1 + launcher smokes).
-.PHONY: verify verify-dist test lint bench-step-time
+.PHONY: verify verify-dist verify-chaos chaos test lint bench-step-time
 
 verify:
 	bash scripts/verify.sh
@@ -7,6 +7,18 @@ verify:
 # shard_map/distributed suite on 8 fake CPU devices + a --dist train smoke
 verify-dist:
 	bash scripts/verify.sh dist
+
+# fault-injection slice (nightly CI): health-sentinel tests, checkpoint
+# corruption/rollback tests, and a --chaos train smoke (DESIGN.md §14)
+verify-chaos:
+	bash scripts/verify.sh chaos
+
+# quick interactive chaos run: inject NaN grads + Inf factors mid-train
+# with the sentinel on; must end with a finite loss and quarantine trips
+chaos:
+	PYTHONPATH=src python -m repro.launch.train --arch bert-large \
+	    --reduced --steps 12 --global-batch 2 --seq-len 16 --inv-freq 3 \
+	    --log-every 4 --health --chaos "grad_nan@4,factor_inf@7"
 
 # tier-1 only (the fast suite; pytest.ini excludes slow-marked tests)
 test:

@@ -35,6 +35,13 @@ Two comparisons on the same reduced config, written to BENCH_step_time.json:
 
   The regression gate (scripts/perf_gate.py) keys on
   ``async_step.p95_over_p50`` — the flat-step claim of the async design.
+* ``health_on_vs_off`` — the numerical-health sentinel (DESIGN.md §14)
+  on vs off on the staggered schedule, identical otherwise.  The sentinel
+  derives every signal (non-finite counts, bank-norm trend, GJ pivots,
+  rescale-denominator hits) from data the step already holds, so its cost
+  is a handful of elementwise reductions per bucket.  Reported: both
+  distributions and ``overhead_mean`` = on.mean/off.mean; the gate bounds
+  it (target <=2% on quiet hardware, budget carries CI headroom).
 
   PYTHONPATH=src python -m benchmarks.step_time
   PYTHONPATH=src python -m benchmarks.step_time --steps 24 --out BENCH.json
@@ -123,6 +130,37 @@ def spike_vs_stagger_times(args):
 
     def run_once():
         return one_pass("spike") + one_pass("staggered")
+
+    both = _min_over_repeats(run_once, args.repeats)
+    return both[:args.steps], both[args.steps:]
+
+
+def health_on_vs_off_times(args):
+    """Per-step wall times with the health sentinel off vs on (module
+    docstring, ``health_on_vs_off``).  Staggered schedule so phase work is
+    spread evenly; both passes run back-to-back per repeat and are
+    elementwise min-filtered like the other sections."""
+    progs = {}
+    for name, health in (("health_off", False), ("health_on", True)):
+        mcfg = MKORConfig(inv_freq=args.inv_freq, stagger=True,
+                          health=health)
+        cfg, opt, params0, ds, step_fn = _setup(args, mcfg)
+        progs[name] = (jax.jit(step_fn), opt, params0, ds)
+
+    def one_pass(name):
+        jit_step, opt, params0, ds = progs[name]
+        params, state = params0, opt.init(params0)
+        ts = []
+        for i in range(args.warmup + args.steps):
+            batch = pipeline.make_batch(ds, i)
+            t0 = time.perf_counter()
+            params, state, m = jit_step(params, state, batch)
+            _ = {k: float(v) for k, v in m.items()}
+            ts.append(time.perf_counter() - t0)
+        return ts[args.warmup:]
+
+    def run_once():
+        return one_pass("health_off") + one_pass("health_on")
 
     both = _min_over_repeats(run_once, args.repeats)
     return both[:args.steps], both[args.steps:]
@@ -289,6 +327,8 @@ def main() -> None:
     sync_ts, fused_ts, astep_ts, launch_ts = sync_vs_async_times(args)
     sync_d, fused_d, astep_d = dist(sync_ts), dist(fused_ts), dist(astep_ts)
     launch_d = dist(launch_ts)
+    hoff_ts, hon_ts = health_on_vs_off_times(args)
+    hoff_d, hon_d = dist(hoff_ts), dist(hon_ts)
 
     result = {
         "arch": f"{args.arch} (reduced, d_model={args.d_model})",
@@ -317,6 +357,13 @@ def main() -> None:
             "launch": launch_d,
             "async_p95_over_p50": astep_d["p95_over_p50"],
         },
+        "health_on_vs_off": {
+            # staggered schedule, identical configs apart from
+            # MKORConfig.health; DESIGN.md §14 budgets the sentinel <=2%
+            "health_off": hoff_d,
+            "health_on": hon_d,
+            "overhead_mean": hon_d["mean_ms"] / hoff_d["mean_ms"],
+        },
     }
     emit([{"runner": "python_loop", **loop_d},
           {"runner": "scan_chunk", **{k: v for k, v in scan_d.items()}}],
@@ -329,13 +376,18 @@ def main() -> None:
           {"schedule": "async_step", **astep_d},
           {"schedule": "launch(hidden)", **launch_d}],
          "per-step wall time: sync vs double-buffered async (stagger off)")
+    emit([{"sentinel": "health_off", **hoff_d},
+          {"sentinel": "health_on", **hon_d}],
+         "per-step wall time: health sentinel off vs on (staggered)")
     print(f"# scan speedup (mean): "
           f"{result['loop_vs_scan']['scan_speedup_mean']:.2f}x; "
           f"p95/p50 spike->staggered: {spike_d['p95_over_p50']:.2f} -> "
           f"{stag_d['p95_over_p50']:.2f}; "
           f"sync->async p95/p50: {sync_d['p95_over_p50']:.2f} -> "
           f"{astep_d['p95_over_p50']:.2f} "
-          f"(fused {fused_d['p95_over_p50']:.2f})")
+          f"(fused {fused_d['p95_over_p50']:.2f}); "
+          f"health overhead (mean): "
+          f"{result['health_on_vs_off']['overhead_mean']:.3f}x")
     with open(args.out, "w") as f:
         json.dump(result, f, indent=1)
     print(f"# wrote {args.out}")

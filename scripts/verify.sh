@@ -23,6 +23,12 @@
 #   scripts/verify.sh dist   (== make verify-dist) runs only the
 # distributed slice: the shard_map test file on 8 fake CPU devices plus a
 # 2-step --dist train smoke through the explicit-collective step.
+#
+#   scripts/verify.sh chaos  (== make verify-chaos, nightly CI) runs the
+# fault-injection slice: the health-sentinel test file, the checkpoint
+# corruption/rollback tests, and a --chaos train smoke that injects NaN
+# grads + Inf factors mid-run and must still finish with a finite loss
+# (DESIGN.md §14).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -38,6 +44,22 @@ if [[ "${1:-}" == "dist" ]]; then
         --dist --dist-devices 8
 
     echo "== verify-dist OK =="
+    exit 0
+fi
+
+if [[ "${1:-}" == "chaos" ]]; then
+    echo "== health-sentinel tests (quarantine / recovery / byte-identity) =="
+    python -m pytest tests/test_health.py -q
+
+    echo "== checkpoint corruption + rollback tests =="
+    python -m pytest tests/test_data_checkpoint.py -q
+
+    echo "== chaos train smoke (NaN grads @4, Inf factors @7, health on) =="
+    python -m repro.launch.train --arch bert-large --reduced --steps 12 \
+        --global-batch 2 --seq-len 16 --inv-freq 3 --log-every 4 \
+        --health --chaos "grad_nan@4,factor_inf@7"
+
+    echo "== verify-chaos OK =="
     exit 0
 fi
 

@@ -1,4 +1,4 @@
-"""The five mkor-lint contract checkers (DESIGN.md §12).
+"""The six mkor-lint contract checkers (DESIGN.md §12).
 
 Each checker is a pure function ``(target) -> [Diagnostic]`` registered
 in :data:`CHECKERS`; :func:`run_checkers` applies every applicable
@@ -444,6 +444,80 @@ def check_staleness_bound(target) -> List[Diagnostic]:
 
 
 # --------------------------------------------------------------------- #
+# 6. health-gating: the sentinel adds zero ungated wire traffic
+# --------------------------------------------------------------------- #
+# extra ungated bytes the health-on step may add over its health-off twin
+# (trivial bookkeeping scalars only; any real signal collective is KB+)
+_HEALTH_EXTRA_BYTES_SLACK = 1024
+
+
+def check_health_gating(target) -> List[Diagnostic]:
+    """The numerical-health sentinel's wire contract (DESIGN.md §14),
+    statically:
+
+    1. the sentinel adds NO ungated (per-step) collectives over the
+       health-off twin — every signal is derived from already-replicated
+       post-collective data, so detection needs no cross-worker agreement
+       round (differentially against ``meta["plain_ungated_count"]`` /
+       ``plain_ungated_bytes``, trace.attach_health_baseline);
+    2. no ungated collective ships a factor-shaped payload — quarantine
+       resets are local identity writes, never bank broadcasts.
+
+    Inactive (no diagnostics) unless the target's MKOR config has
+    ``health=True`` (or ``meta["health"]`` on custom fixtures)."""
+    out: List[Diagnostic] = []
+    cfg = target.meta.get("mkor_cfg")
+    health = target.meta.get("health")
+    if health is None:
+        health = bool(getattr(cfg, "health", False))
+    if not health or target.jaxpr is None:
+        return out
+    res = jaxpr_walk.walk(target.jaxpr)
+    factor_dims = set(target.meta.get("factor_dims", ()))
+    ungated = [c for c in res.collectives if not c.gated]
+
+    # 2. no ungated factor-shaped payloads
+    for c in ungated:
+        for shape in c.shapes:
+            if _is_factor_square(shape, factor_dims):
+                out.append(_d(
+                    "health-gating", "health.ungated-factor-bytes",
+                    Severity.ERROR,
+                    f"health step: ungated {c.prim} at {c.path} moves a "
+                    f"factor-shaped payload {list(shape)} every step — "
+                    f"sentinel signals must be derived from replicated "
+                    f"data, and quarantine resets are local identity "
+                    f"writes, not bank collectives", target,
+                    prim=c.prim, shape=list(shape), path=c.path))
+
+    # 1. differential: zero extra ungated collectives / bytes vs the
+    # health-off twin
+    plain_count = target.meta.get("plain_ungated_count")
+    if plain_count is not None and len(ungated) > plain_count:
+        out.append(_d(
+            "health-gating", "health.extra-step-collectives",
+            Severity.ERROR,
+            f"health step runs {len(ungated)} ungated collectives vs "
+            f"{plain_count} with the sentinel off "
+            f"(+{len(ungated) - plain_count}) — the sentinel must not "
+            f"add cross-worker agreement rounds", target,
+            health_count=len(ungated), plain_count=plain_count))
+    plain_bytes = target.meta.get("plain_ungated_bytes")
+    if plain_bytes is not None:
+        total = sum(c.payload_bytes for c in ungated)
+        if total > plain_bytes + _HEALTH_EXTRA_BYTES_SLACK:
+            out.append(_d(
+                "health-gating", "health.extra-step-bytes",
+                Severity.ERROR,
+                f"health step moves {total} ungated collective bytes vs "
+                f"{plain_bytes} with the sentinel off "
+                f"(+{total - plain_bytes}) — detection is supposed to be "
+                f"wire-free", target,
+                health_bytes=total, plain_bytes=plain_bytes))
+    return out
+
+
+# --------------------------------------------------------------------- #
 # Registry
 # --------------------------------------------------------------------- #
 CHECKERS: Dict[str, Callable] = {
@@ -452,6 +526,7 @@ CHECKERS: Dict[str, Callable] = {
     "pallas-kernels": check_pallas_kernels,
     "donation": check_donation,
     "staleness-bound": check_staleness_bound,
+    "health-gating": check_health_gating,
 }
 
 # which target kinds each checker runs on ("custom" targets opt in to
@@ -462,6 +537,7 @@ _APPLIES: Dict[str, tuple] = {
     "pallas-kernels": ("single", "dist", "custom"),
     "donation": ("chunk", "custom"),
     "staleness-bound": ("single", "dist", "custom"),
+    "health-gating": ("single", "dist", "custom"),
 }
 
 

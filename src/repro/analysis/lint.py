@@ -56,6 +56,11 @@ def main() -> int:
                     help="also lint the async double-buffered step at "
                          "this staleness bound (0 skips the async "
                          "targets; the sync targets always run)")
+    ap.add_argument("--health", type=int, default=1,
+                    help="1 (default) also lints the numerical-health "
+                         "sentinel twins (health-gating proves the "
+                         "sentinel adds zero ungated wire traffic); "
+                         "0 skips them")
     ap.add_argument("--chunk", type=int, default=2)
     ap.add_argument("--steps", type=int, default=100)
     ap.add_argument("--compile", action="store_true",
@@ -80,11 +85,16 @@ def main() -> int:
     async_cfg = dataclasses.replace(mkor_cfg, staleness=args.staleness)
     async_common = dict(common, mkor_cfg=async_cfg)
 
+    health_cfg = dataclasses.replace(mkor_cfg, health=True)
+    health_common = dict(common, mkor_cfg=health_cfg)
+
     targets = []
     print(f"mkor-lint: tracing {args.config} (single + chunk"
           + (" + dist" if args.dist else "")
           + (f", sync + async staleness={args.staleness}"
-             if args.staleness else "") + ") ...", flush=True)
+             if args.staleness else "")
+          + (", + health twins" if args.health else "") + ") ...",
+          flush=True)
     targets.append(trace.single_target(args.config, **common))
     targets.append(trace.chunk_target(args.config, chunk=args.chunk,
                                       steps=args.steps, **common))
@@ -94,6 +104,11 @@ def main() -> int:
         targets.append(trace.single_target(args.config, **async_common))
         targets.append(trace.chunk_target(args.config, chunk=args.chunk,
                                           steps=args.steps, **async_common))
+    if args.health:
+        # health twin: health-gating runs on this (single-program: proves
+        # the sentinel stays collective-free; the dist twin below gets
+        # the differential baseline)
+        targets.append(trace.single_target(args.config, **health_common))
     if args.dist:
         sync_dist = trace.dist_target(
             args.config, world=args.dist_devices,
@@ -106,6 +121,14 @@ def main() -> int:
             # differential baseline: async must add zero ungated bytes
             targets.append(trace.attach_sync_baseline(async_dist,
                                                       sync_dist))
+        if args.health:
+            health_dist = trace.dist_target(
+                args.config, world=args.dist_devices,
+                compile_hlo=args.compile, **health_common)
+            # differential baseline: the sentinel must add zero ungated
+            # collectives/bytes over the health-off step
+            targets.append(trace.attach_health_baseline(health_dist,
+                                                        sync_dist))
 
     report = run_checkers(targets, names=args.checkers)
     print(report.render())

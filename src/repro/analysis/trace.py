@@ -113,7 +113,8 @@ def single_target(arch: str, *, mkor_cfg: Optional[MKORConfig] = None,
     step = jax.jit(train_lib.make_train_step(cfg, opt))
     jaxpr = jax.make_jaxpr(step)(params, opt_state, batch)
     lowered = step.lower(params, opt_state, batch).as_text() if lower else ""
-    suffix = "-async" if mkor_cfg.staleness else ""
+    suffix = ("-async" if mkor_cfg.staleness else "") \
+        + ("-health" if mkor_cfg.health else "")
     return LintTarget(
         name=f"{cfg.name}/single{suffix}", kind="single", jaxpr=jaxpr,
         lowered_text=lowered,
@@ -146,7 +147,8 @@ def dist_target(arch: str, *, world: int = 8,
     if compile_hlo:
         compiled = step.lower(params, opt_state,
                               batch).compile().as_text()
-    suffix = "-async" if mkor_cfg.staleness else ""
+    suffix = ("-async" if mkor_cfg.staleness else "") \
+        + ("-health" if mkor_cfg.health else "")
     return LintTarget(
         name=f"{cfg.name}/dist{suffix}", kind="dist", jaxpr=jaxpr,
         compiled_text=compiled,
@@ -200,6 +202,26 @@ def custom_target(name: str, fn: Callable, *args, kind: str = "custom",
     return LintTarget(name=name, kind=kind, jaxpr=jaxpr,
                       lowered_text=lowered, compiled_text=compiled,
                       meta=dict(meta or {}))
+
+
+def attach_health_baseline(health_target: LintTarget,
+                           plain_target: LintTarget) -> LintTarget:
+    """Record the health-off twin's ungated per-step collective footprint
+    in the health-on target's meta (``plain_ungated_bytes`` /
+    ``plain_ungated_count``).
+
+    The `health-gating` checker uses this as its differential baseline:
+    the sentinel derives every signal from already-replicated data, so
+    turning it on must add ZERO ungated collectives and zero ungated
+    wire bytes (DESIGN.md §14).  Mutates and returns ``health_target``."""
+    from repro.analysis import jaxpr_walk
+
+    res = jaxpr_walk.walk(plain_target.jaxpr)
+    ungated = [c for c in res.collectives if not c.gated]
+    health_target.meta["plain_ungated_bytes"] = sum(
+        c.payload_bytes for c in ungated)
+    health_target.meta["plain_ungated_count"] = len(ungated)
+    return health_target
 
 
 def attach_sync_baseline(async_target: LintTarget,

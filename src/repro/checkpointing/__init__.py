@@ -1,5 +1,8 @@
 from repro.checkpointing.checkpoint import (  # noqa: F401
+    CheckpointCorruptError,
     latest_step,
     restore,
+    restore_latest_valid,
     save,
+    validate,
 )

@@ -1,19 +1,39 @@
 """Pytree checkpointing: npz arrays + msgpack structure manifest.
 
-Layout: ``<dir>/step_<N>/{manifest.msgpack, arrays.npz}``.  The manifest
-stores the flattened key-paths, shapes and dtypes, so restore validates
-structure before touching the target pytree (no silent shape drift across
-config changes), plus free-form user metadata (step, loss, config digest).
+Layout: ``<dir>/step_<N>/{manifest.msgpack, arrays.npz, COMMITTED}``.  The
+manifest stores the flattened key-paths, shapes, dtypes, and a per-array
+CRC32 map, so restore validates structure AND payload integrity before
+touching the target pytree (no silent shape drift across config changes,
+no half-written arrays after a crash), plus free-form user metadata
+(step, loss, config digest).
+
+Crash safety (DESIGN.md §14): every file lands via tmp + ``os.replace``
+and the ``COMMITTED`` marker is written LAST — a directory without the
+marker is by definition incomplete.  Any corruption (missing marker,
+unreadable manifest, truncated npz, CRC mismatch, missing array) raises
+the typed :class:`CheckpointCorruptError`; a *structure* mismatch against
+the restore target stays a ``ValueError`` (that is a config error, not
+disk corruption).  :func:`restore_latest_valid` scans checkpoints newest
+first and rolls back past corrupt ones, so training auto-recovers from a
+crash mid-save or a damaged directory.
 """
 from __future__ import annotations
 
 import os
 import re
+import zipfile
+import zlib
 from typing import Any, Dict, Optional, Tuple
 
 import jax
 import msgpack
 import numpy as np
+
+_MARKER = "COMMITTED"
+
+
+class CheckpointCorruptError(RuntimeError):
+    """A checkpoint directory is incomplete or fails integrity checks."""
 
 
 def _flatten(tree) -> Dict[str, np.ndarray]:
@@ -24,39 +44,107 @@ def _flatten(tree) -> Dict[str, np.ndarray]:
     return flat
 
 
+def _stage(v: np.ndarray) -> np.ndarray:
+    # bfloat16 has no numpy savez support — stage as uint16 bit pattern
+    return v.view(np.uint16) if v.dtype.name == "bfloat16" else v
+
+
+def _write_atomic(path: str, payload: bytes) -> None:
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        f.write(payload)
+    os.replace(tmp, path)
+
+
 def save(directory: str, step: int, tree: Any,
          metadata: Optional[Dict] = None) -> str:
     out = os.path.join(directory, f"step_{step:08d}")
     os.makedirs(out, exist_ok=True)
+    # a re-save into an existing directory must first demote it to
+    # incomplete, or a crash mid-rewrite leaves a committed-but-mixed dir
+    marker = os.path.join(out, _MARKER)
+    if os.path.exists(marker):
+        os.remove(marker)
     flat = _flatten(tree)
+    staged = {f"a{i}": _stage(v) for i, v in enumerate(flat.values())}
     manifest = {
         "step": step,
         "keys": list(flat.keys()),
         "shapes": {k: list(v.shape) for k, v in flat.items()},
         "dtypes": {k: str(v.dtype) for k, v in flat.items()},
+        # CRC32 of each STAGED array's bytes (uint16 view for bf16):
+        # restore recomputes over the loaded bytes before any view/convert
+        "crc32": {k: zlib.crc32(np.ascontiguousarray(s).tobytes())
+                  for k, s in zip(flat.keys(), staged.values())},
         "metadata": metadata or {},
     }
-    # bfloat16 has no numpy savez support — stage as uint16 bit pattern
-    staged = {}
-    for i, (k, v) in enumerate(flat.items()):
-        if v.dtype.name == "bfloat16":
-            staged[f"a{i}"] = v.view(np.uint16)
-        else:
-            staged[f"a{i}"] = v
     tmp = out + ".tmp.npz"
     np.savez(tmp, **staged)
     os.replace(tmp, os.path.join(out, "arrays.npz"))
-    with open(os.path.join(out, "manifest.msgpack"), "wb") as f:
-        f.write(msgpack.packb(manifest))
+    _write_atomic(os.path.join(out, "manifest.msgpack"),
+                  msgpack.packb(manifest))
+    # marker last: its presence asserts every file above it is complete
+    _write_atomic(marker, b"ok\n")
     return out
 
 
+def _load_validated(src: str) -> Tuple[Dict, Dict[str, np.ndarray]]:
+    """Load manifest + arrays from ``src`` with integrity checks only
+    (no restore-target structure comparison)."""
+    if not os.path.isdir(src):
+        raise CheckpointCorruptError(f"{src}: no such checkpoint")
+    if not os.path.exists(os.path.join(src, _MARKER)):
+        raise CheckpointCorruptError(
+            f"{src}: missing {_MARKER} marker (incomplete save)")
+    try:
+        with open(os.path.join(src, "manifest.msgpack"), "rb") as f:
+            manifest = msgpack.unpackb(f.read())
+    except (OSError, ValueError, msgpack.exceptions.UnpackException) as e:
+        raise CheckpointCorruptError(f"{src}: unreadable manifest: {e}") \
+            from e
+    if not isinstance(manifest, dict) or "keys" not in manifest:
+        raise CheckpointCorruptError(f"{src}: malformed manifest")
+    try:
+        with np.load(os.path.join(src, "arrays.npz")) as npz:
+            arrays = {k: npz[k] for k in npz.files}
+    except (OSError, ValueError, EOFError, KeyError,
+            zipfile.BadZipFile) as e:
+        raise CheckpointCorruptError(f"{src}: unreadable arrays.npz: {e}") \
+            from e
+    crcs = manifest.get("crc32") or {}    # absent in pre-CRC checkpoints
+    for i, key in enumerate(manifest["keys"]):
+        name = f"a{i}"
+        if name not in arrays:
+            raise CheckpointCorruptError(f"{src}: array {name} ({key}) "
+                                         f"missing from arrays.npz")
+        arr = arrays[name]
+        if list(arr.shape) != manifest["shapes"][key]:
+            raise CheckpointCorruptError(
+                f"{src}: shape mismatch for {key}: stored {arr.shape} vs "
+                f"manifest {manifest['shapes'][key]}")
+        if key in crcs and zlib.crc32(
+                np.ascontiguousarray(arr).tobytes()) != crcs[key]:
+            raise CheckpointCorruptError(f"{src}: CRC32 mismatch for {key}")
+    return manifest, arrays
+
+
+def validate(directory: str, step: int) -> bool:
+    """True iff checkpoint ``step`` is complete and passes all CRCs."""
+    try:
+        _load_validated(os.path.join(directory, f"step_{step:08d}"))
+        return True
+    except CheckpointCorruptError:
+        return False
+
+
 def restore(directory: str, step: int, like: Any) -> Tuple[Any, Dict]:
-    """Restore into the structure of ``like`` (validates key paths)."""
+    """Restore into the structure of ``like`` (validates key paths).
+
+    Raises :class:`CheckpointCorruptError` on an incomplete or damaged
+    directory and ``ValueError`` when the (intact) checkpoint's structure
+    does not match ``like``."""
     src = os.path.join(directory, f"step_{step:08d}")
-    with open(os.path.join(src, "manifest.msgpack"), "rb") as f:
-        manifest = msgpack.unpackb(f.read())
-    arrays = np.load(os.path.join(src, "arrays.npz"))
+    manifest, arrays = _load_validated(src)
 
     paths_leaves = jax.tree_util.tree_leaves_with_path(like)
     want = [jax.tree_util.keystr(p) for p, _ in paths_leaves]
@@ -66,16 +154,37 @@ def restore(directory: str, step: int, like: Any) -> Tuple[Any, Dict]:
                          f"{sorted(missing)[:8]} ...")
 
     leaves = []
-    for i, (key, (_, leaf)) in enumerate(zip(manifest["keys"], paths_leaves)):
+    for i, key in enumerate(manifest["keys"]):
         arr = arrays[f"a{i}"]
-        dtype = manifest["dtypes"][key]
-        if dtype == "bfloat16":
+        if manifest["dtypes"][key] == "bfloat16":
             arr = arr.view(jax.numpy.bfloat16.dtype)
-        if list(arr.shape) != manifest["shapes"][key]:
-            raise ValueError(f"shape mismatch for {key}")
         leaves.append(jax.numpy.asarray(arr))
     treedef = jax.tree_util.tree_structure(like)
     return jax.tree_util.tree_unflatten(treedef, leaves), manifest["metadata"]
+
+
+def restore_latest_valid(directory: str, like: Any
+                         ) -> Optional[Tuple[Any, Dict, int]]:
+    """Restore the newest checkpoint that passes validation.
+
+    Scans ``step_*`` directories newest first, skipping any that raise
+    :class:`CheckpointCorruptError` (crash mid-save, bit rot, truncation)
+    — the auto-rollback path for ``launch/train.py``.  Returns
+    ``(tree, metadata, step)`` or ``None`` when no valid checkpoint
+    exists.  A structure mismatch still raises ``ValueError``: an intact
+    checkpoint for a different config should fail loudly, not roll back.
+    """
+    if not os.path.isdir(directory):
+        return None
+    steps = sorted((int(m.group(1)) for d in os.listdir(directory)
+                    if (m := re.fullmatch(r"step_(\d+)", d))), reverse=True)
+    for step in steps:
+        try:
+            tree, meta = restore(directory, step, like)
+            return tree, meta, step
+        except CheckpointCorruptError as e:
+            print(f"checkpoint step {step} corrupt, rolling back: {e}")
+    return None
 
 
 def latest_step(directory: str) -> Optional[int]:

@@ -136,6 +136,26 @@ class MKORConfig:
     # optimizer.  staleness=1 allocates ring stat windows at every rank
     # (rank=1 gets a 1-row window holding the latest stat vectors).
     staleness: int = 0
+    # Numerical-health sentinel (DESIGN.md §14): per-bucket detection +
+    # quarantine + recovery, entirely in-graph.  Every step each bucket
+    # derives health signals from already-replicated data (non-finite
+    # counts in grads / stat vectors / ring windows / inverse banks, the
+    # ‖F⁻¹‖∞ trend against the stabilizer threshold, the min Gauss-Jordan
+    # pivot of the block mid-matrix solve, and rescale-denominator
+    # collapse).  A tripped bucket resets its banks to identity — the
+    # MKOR-H first-order passthrough, ΔW = I·G·I rescaled by exactly 1 —
+    # zeroes its stat window, and skips SMW/inversion for
+    # ``health_cooldown`` of its own phase steps before re-entering with
+    # a fresh window.  Healthy buckets are untouched (all gates are
+    # scalar ``where`` no-ops), and no signal crosses workers: under
+    # ``dist`` every input to the sentinel is replicated post-collective
+    # state, so trip decisions are bit-identical on all workers with zero
+    # extra wire bytes (analysis `health-gating` lint proves it).  Bank
+    # layout only — the per-layer oracle stays the plain reference.
+    health: bool = False
+    health_cooldown: int = 2           # K: phase steps quarantined per trip
+    health_norm_factor: float = 4.0    # trip at factor·stabilizer_threshold
+    health_pivot_tol: float = 1e-12    # min GJ pivot below this trips
     # Owner-sharded inversions (DESIGN.md §10): static dist spec
     # ((axis_name, axis_size), ...) of the data axes when the optimizer runs
     # inside shard_map (training/loop.py make_dist_train_step).  Each worker
@@ -204,7 +224,7 @@ def block_weights(n_valid, rank: int, gamma: float):
 
 def smw_block_update(j_inv: jnp.ndarray, v: jnp.ndarray, gamma: float,
                      variant: str = "paper",
-                     n_valid=None) -> jnp.ndarray:
+                     n_valid=None, with_pivot: bool = False):
     """Block rank-r Woodbury inverse update (paper §4, DESIGN.md §11).
 
     v: (r, d) window rows, oldest first.  One O(r·d² + r³) shot instead of
@@ -220,7 +240,15 @@ def smw_block_update(j_inv: jnp.ndarray, v: jnp.ndarray, gamma: float,
                   carries over); at r = 1 it reduces to Eq. 5/6 exactly.
 
     ``n_valid`` masks a partially-filled window (see block_weights);
-    n_valid = 0 returns the factor bit-unchanged."""
+    n_valid = 0 returns the factor bit-unchanged.
+
+    ``with_pivot=True`` additionally returns the minimum Gauss-Jordan
+    pivot of the (r, r) mid-matrix solve as an fp32 scalar — the health
+    sentinel's conditioning signal (DESIGN.md §14).  For a PD mid matrix
+    the GJ pivots are the squared Cholesky diagonal; a non-PD mid gives
+    NaN, which the sentinel's ``pivot >= tol`` test treats as a trip.
+    The fused Pallas kernel exports the matching signal straight from
+    its in-register elimination (kernels/rank1_smw.py)."""
     r = v.shape[0]
     dtype = j_inv.dtype
     jf = j_inv.astype(jnp.float32)
@@ -237,6 +265,9 @@ def smw_block_update(j_inv: jnp.ndarray, v: jnp.ndarray, gamma: float,
         new = (jf - u.T @ jnp.linalg.solve(mid, u)) / gm
     else:
         raise ValueError(variant)
+    if with_pivot:
+        piv = jnp.min(jnp.square(jnp.diagonal(jnp.linalg.cholesky(mid))))
+        return new.astype(dtype), piv
     return new.astype(dtype)
 
 
@@ -291,6 +322,37 @@ def _vmap_over_stack(fn, n_stack: int):
     for _ in range(n_stack):
         fn = jax.vmap(fn)
     return fn
+
+
+# ----------------------------------------------------------------------- #
+# Numerical-health sentinel primitives (DESIGN.md §14).  All pure scalar
+# reductions of already-materialized data — no collectives, so under dist
+# every worker derives the identical signals from its replicated copies.
+# ----------------------------------------------------------------------- #
+def _any_nonfinite(arrays) -> jnp.ndarray:
+    """Scalar bool: any non-finite element anywhere in ``arrays``."""
+    bad = jnp.zeros((), jnp.bool_)
+    for a in arrays:
+        bad = bad | ~jnp.all(jnp.isfinite(a.astype(jnp.float32)))
+    return bad
+
+
+def _finite_or_zero(x: jnp.ndarray) -> jnp.ndarray:
+    """Replace non-finite elements with 0 (identity on clean data)."""
+    return jnp.where(jnp.isfinite(x), x, jnp.zeros((), x.dtype))
+
+
+def _slice_sumsq(x: jnp.ndarray) -> jnp.ndarray:
+    """Per-layer-slice Σx² (reduces the trailing matrix dims, fp32)."""
+    return jnp.sum(jnp.square(x.astype(jnp.float32)), axis=(-2, -1))
+
+
+def _identity_like(bank: jnp.ndarray) -> jnp.ndarray:
+    """Identity factors broadcast to a bank's shape — the quarantine
+    reset value.  An identity bank preconditions to ΔW = I·G·I = G and
+    rescales by ‖G‖/‖G‖ = 1: the exact MKOR-H first-order passthrough."""
+    d = bank.shape[-1]
+    return jnp.broadcast_to(jnp.eye(d, dtype=bank.dtype), bank.shape)
 
 
 # ----------------------------------------------------------------------- #
@@ -367,6 +429,14 @@ def mkor(backend: GradientTransformation,
         raise ValueError(
             f"staleness must be 0 (synchronous) or 1 (double-buffered "
             f"async, DESIGN.md §13), got {cfg.staleness}")
+    if cfg.health and cfg.layout != "bank":
+        raise ValueError(
+            "health=True requires layout='bank': the sentinel state "
+            "machine is per-bucket (DESIGN.md §14); the per-layer "
+            "oracle stays the plain numerical reference")
+    if cfg.health and cfg.health_cooldown < 1:
+        raise ValueError(
+            f"health_cooldown must be >= 1, got {cfg.health_cooldown}")
     # rank=1 async still rides the block-Woodbury path (1-row window);
     # staleness=0 keeps the legacy rank-1 state tree bit-identical
     needs_window = cfg.rank > 1 or cfg.staleness > 0
@@ -391,6 +461,13 @@ def mkor(backend: GradientTransformation,
             return kops.smw_block_update_banked(
                 j, v, n, gamma=cfg.gamma, variant=cfg.variant,
                 interpret=cfg.interpret)
+
+        def banked_block_piv(j, v, n, n_lead):
+            # (new bank, min GJ pivot) — the pivot comes straight from
+            # the fused kernel's in-register elimination
+            return kops.smw_block_update_banked(
+                j, v, n, gamma=cfg.gamma, variant=cfg.variant,
+                interpret=cfg.interpret, with_pivot=True)
 
         def precond_slice(linv, rinv, gw):
             # fused precondition + Frobenius rescale, one dispatch per
@@ -418,6 +495,13 @@ def mkor(backend: GradientTransformation,
         def banked_block(j, v, n, n_lead):
             return _vmap_over_stack(block_slice, n_lead)(j, v, n)
 
+        def banked_block_piv(j, v, n, n_lead):
+            out, piv = _vmap_over_stack(
+                lambda jj, vv, nn: smw_block_update(
+                    jj, vv, cfg.gamma, cfg.variant, n_valid=nn,
+                    with_pivot=True), n_lead)(j, v, n)
+            return out, jnp.min(piv)
+
         def precond_slice(linv, rinv, gw):
             delta = precondition(linv, rinv, gw)
             if cfg.rescale:
@@ -429,6 +513,13 @@ def mkor(backend: GradientTransformation,
 
     stab_slice = partial(stabilize, threshold=cfg.stabilizer_threshold,
                          zeta=cfg.zeta)
+
+    def norm_hot(bank):
+        # ‖F⁻¹‖∞ trend signal (DESIGN.md §14): the stabilizer caps the
+        # norm AT the threshold every inversion, so a bank sitting well
+        # above factor·threshold can only mean corrupted carried state.
+        return jnp.max(jnp.abs(bank.astype(jnp.float32))) \
+            > cfg.health_norm_factor * cfg.stabilizer_threshold
 
     # ------------------------------------------------------------------ #
     # init
@@ -488,6 +579,13 @@ def mkor(backend: GradientTransformation,
         if cfg.staleness:
             # distinct buffers (see the per-layer branch above)
             out["pending_banks"] = jax.tree.map(jnp.array, banks)
+        if cfg.health:
+            # 8 bytes/bucket (stats.bucket_cost health_state_bytes):
+            # phase-steps of quarantine left + lifetime trip counter
+            out["health"] = {
+                b.bucket_id: {"cooldown": jnp.zeros((), jnp.int32),
+                              "trips": jnp.zeros((), jnp.int32)}
+                for b in manifest_for(params, cfg)}
         return out
 
     def init(params):
@@ -593,6 +691,7 @@ def mkor(backend: GradientTransformation,
         phases = statlib.bucket_phases(manifest, cfg.inv_freq, cfg.stagger)
         new_banks = {}
         new_windows = {}
+        new_health = {}
         out = grads
         for bucket in manifest:
             bank = state["factor_banks"][bucket.bucket_id]
@@ -609,6 +708,25 @@ def mkor(backend: GradientTransformation,
                 g_vecs.append(statlib.get_g_vec(grads, path))
                 a_vecs.append(statlib.get_a_vec(stats, path)
                               if stats is not None else None)
+
+            # --- health sentinel, detect phase (DESIGN.md §14): derive
+            # this bucket's pre-inversion signals from replicated data
+            # only (post-collective grads/stats + carried state), so
+            # under dist every worker trips identically with zero wire
+            # bytes.  A quarantined bucket (cooling down or already
+            # dirty) skips the SMW/inversion work entirely. ------------- #
+            piv_min = jnp.float32(jnp.inf)
+            if cfg.health:
+                hst = state["health"][bucket.bucket_id]
+                cool, trips = hst["cooldown"], hst["trips"]
+                phase_hit = do_inv            # pre-gating: cooldown clock
+                srcs = [l_bank, r_bank] + g_ws \
+                    + [v for v in g_vecs + a_vecs if v is not None]
+                if cfg.rank > 1:
+                    srcs += [a_win, g_win]
+                pre_bad = (_any_nonfinite(srcs)
+                           | norm_hot(l_bank) | norm_hot(r_bank))
+                do_inv = do_inv & (cool == 0) & ~pre_bad
 
             # --- lines 5-8, banked.  Slots are sub-grouped by the runtime
             # stat signature (rank-r stats may differ per layer); in the
@@ -627,6 +745,12 @@ def mkor(backend: GradientTransformation,
                 r_sub = r_bank if whole else r_bank[idx]
                 gv = jnp.stack([g_vecs[i] for i in slots])
                 av = jnp.stack([a_vecs[i] for i in slots])
+                if cfg.health:
+                    # poisoned stat vectors must not enter the carried
+                    # windows/factors: the trip already fired via
+                    # pre_bad, the zeroed rows keep the state clean
+                    gv = _finite_or_zero(gv)
+                    av = _finite_or_zero(av)
 
                 if cfg.rank > 1:
                     # Rank-r window schedule, banked (DESIGN.md §11):
@@ -655,6 +779,14 @@ def mkor(backend: GradientTransformation,
                         a_ord = statlib.window_ordered(aw, cnt_full)
                         if cfg.dist is None \
                                 or collectives.world_size(cfg.dist) <= 1:
+                            if cfg.health:
+                                # min GJ pivot of the mid solves — the
+                                # sentinel's conditioning signal
+                                l_new, pl = banked_block_piv(
+                                    stab(l), g_ord, cnt_full, ns + 1)
+                                r_new, pr = banked_block_piv(
+                                    stab(r), a_ord, cnt_full, ns + 1)
+                                return l_new, r_new, jnp.minimum(pl, pr)
                             l_new = banked_block(stab(l), g_ord, cnt_full,
                                                  ns + 1)
                             r_new = banked_block(stab(r), a_ord, cnt_full,
@@ -682,11 +814,24 @@ def mkor(backend: GradientTransformation,
 
                             l_new = sharded(l, g_ord, cnt_full)
                             r_new = sharded(r, a_ord, cnt_full)
+                        if cfg.health:
+                            # dist: no pivot export — a singular solve
+                            # surfaces as non-finite/hot banks after the
+                            # all-gather, caught by the post checks the
+                            # same step on every worker (DESIGN.md §14)
+                            return l_new, r_new, jnp.float32(jnp.inf)
                         return l_new, r_new
 
-                    l_new, r_new = jax.lax.cond(
-                        do_inv, inv_branch, lambda l, r: (l, r),
-                        l_sub, r_sub)
+                    if cfg.health:
+                        l_new, r_new, piv = jax.lax.cond(
+                            do_inv, inv_branch,
+                            lambda l, r: (l, r, jnp.float32(jnp.inf)),
+                            l_sub, r_sub)
+                        piv_min = jnp.minimum(piv_min, piv)
+                    else:
+                        l_new, r_new = jax.lax.cond(
+                            do_inv, inv_branch, lambda l, r: (l, r),
+                            l_sub, r_sub)
                     cnt = jnp.where(do_inv, 0, cnt)
                     if whole:
                         l_bank, r_bank = l_new, r_new
@@ -737,18 +882,58 @@ def mkor(backend: GradientTransformation,
                 else:
                     l_bank = l_bank.at[idx].set(l_new)
                     r_bank = r_bank.at[idx].set(r_new)
+            # --- health sentinel, trip phase: post-inversion signals on
+            # the freshly written banks (non-finite, ‖F⁻¹‖∞ hot, GJ pivot
+            # below tolerance).  A trip resets the bucket's banks to
+            # identity — exact first-order passthrough — before they are
+            # consumed or stored. ---------------------------------------- #
+            gw = jnp.stack(g_ws)
+            if cfg.health:
+                post_bad = (_any_nonfinite([l_bank, r_bank])
+                            | norm_hot(l_bank) | norm_hot(r_bank)
+                            | ~(piv_min >= cfg.health_pivot_tol))
+                trip = pre_bad | post_bad
+                l_bank = jnp.where(trip, _identity_like(l_bank), l_bank)
+                r_bank = jnp.where(trip, _identity_like(r_bank), r_bank)
+                gw_c = _finite_or_zero(gw)
+            else:
+                gw_c = gw
+
+            # --- lines 9-10, banked: one batched two-sided precondition +
+            # rescale over (bank, *stack); extra dims broadcast inside
+            # (the pallas path is the banked fused kernel entry). -------- #
+            delta = banked_precond(l_bank, r_bank, gw_c, ns + 1)
+            if cfg.health:
+                # rescale-denominator collapse: a slice whose update was
+                # annihilated (ΔW = 0) while its gradient was not means
+                # the ε = 1e-30 guard fired on a rank-collapsed factor
+                eps_hit = jnp.any((_slice_sumsq(delta) == 0.0)
+                                  & (_slice_sumsq(gw_c) > 0.0))
+                trip = trip | eps_hit | _any_nonfinite([delta])
+                l_bank = jnp.where(trip, _identity_like(l_bank), l_bank)
+                r_bank = jnp.where(trip, _identity_like(r_bank), r_bank)
+                delta = _finite_or_zero(delta)
+                if cfg.rank > 1:
+                    # fresh stat window on re-entry: zero the rows too,
+                    # NOT just the count — 0-weighted NaN rows would
+                    # still poison the next block update (0·NaN = NaN)
+                    a_win = jnp.where(trip, jnp.zeros((), a_win.dtype),
+                                      a_win)
+                    g_win = jnp.where(trip, jnp.zeros((), g_win.dtype),
+                                      g_win)
+                    n_cnt = jnp.where(trip, 0, n_cnt)
+                new_health[bucket.bucket_id] = {
+                    "cooldown": jnp.where(
+                        trip, jnp.int32(cfg.health_cooldown),
+                        jnp.where(phase_hit,
+                                  jnp.maximum(cool - 1, 0), cool)),
+                    "trips": trips + trip.astype(jnp.int32)}
             new_banks[bucket.bucket_id] = {"l_inv": l_bank,
                                            "r_inv": r_bank}
             if cfg.rank > 1:
                 new_windows[bucket.bucket_id] = {"a": a_win, "g": g_win,
                                                  "n": n_cnt}
-
-            # --- lines 9-10, banked: one batched two-sided precondition +
-            # rescale over (bank, *stack); extra dims broadcast inside
-            # (the pallas path is the banked fused kernel entry). -------- #
-            gw = jnp.stack(g_ws)
-            delta = banked_precond(l_bank, r_bank, gw, ns + 1)
-            delta = jnp.where(so_on, delta, gw)       # MKOR-H fallback
+            delta = jnp.where(so_on, delta, gw_c)     # MKOR-H fallback
             for i, path in enumerate(bucket.paths):
                 out = statlib.tree_set(
                     out, path,
@@ -756,6 +941,8 @@ def mkor(backend: GradientTransformation,
         fstate = {"factor_banks": new_banks}
         if cfg.rank > 1:
             fstate["stat_windows"] = new_windows
+        if cfg.health:
+            fstate["health"] = new_health
         return out, fstate
 
     # ------------------------------------------------------------------ #
@@ -799,6 +986,13 @@ def mkor(backend: GradientTransformation,
             win = state["stat_windows"][bid]
             ns = len(bucket.stack)
             do_inv = so_on & (count % cfg.inv_freq == phases[bid])
+            if cfg.health:
+                # quarantined bucket: no promote, no launch — both banks
+                # hold the identity reset until the cool-down (decremented
+                # by update_banked_async on phase steps) expires, then the
+                # next tick relaunches from the fresh window
+                do_inv = do_inv \
+                    & (state["health"][bid]["cooldown"] == 0)
 
             # Promote-then-launch.  The new pending chains the block update
             # onto the just-promoted factors (the same inverse the sync
@@ -929,10 +1123,15 @@ def mkor(backend: GradientTransformation,
     def update_banked_async(grads, state, params, stats, so_on):
         manifest = manifest_for(params if params is not None else grads,
                                 cfg)
+        phases = statlib.bucket_phases(manifest, cfg.inv_freq, cfg.stagger)
         new_windows = {}
+        new_banks, new_pending, new_health = {}, {}, {}
         out = grads
         for bucket in manifest:
             bank = state["factor_banks"][bucket.bucket_id]
+            pend = state["pending_banks"][bucket.bucket_id]
+            l_act, r_act = bank["l_inv"], bank["r_inv"]
+            l_pen, r_pen = pend["l_inv"], pend["r_inv"]
             ns = len(bucket.stack)
             win = state["stat_windows"][bucket.bucket_id]
             a_win, g_win, n_cnt = win["a"], win["g"], win["n"]
@@ -943,6 +1142,23 @@ def mkor(backend: GradientTransformation,
                 g_vecs.append(statlib.get_g_vec(grads, path))
                 a_vecs.append(statlib.get_a_vec(stats, path)
                               if stats is not None else None)
+
+            # --- health sentinel, async (DESIGN.md §14): same detect
+            # phase as the sync path, with BOTH buffers of the double-
+            # buffered state in scope — a trip resets active AND pending
+            # to identity (the pending launch may have consumed poisoned
+            # windows at the last tick).  Inversion itself is gated at
+            # the tick (tick_banked) via the carried cooldown. ---------- #
+            if cfg.health:
+                hst = state["health"][bucket.bucket_id]
+                cool, trips = hst["cooldown"], hst["trips"]
+                phase_hit = so_on & (state["count"] % cfg.inv_freq
+                                     == phases[bucket.bucket_id])
+                srcs = [l_act, r_act, l_pen, r_pen, a_win, g_win] + g_ws \
+                    + [v for v in g_vecs + a_vecs if v is not None]
+                trip = (_any_nonfinite(srcs)
+                        | norm_hot(l_act) | norm_hot(r_act)
+                        | norm_hot(l_pen) | norm_hot(r_pen))
 
             sig_groups: Dict[Any, list] = {}
             for slot, (av, gv) in enumerate(zip(a_vecs, g_vecs)):
@@ -956,6 +1172,9 @@ def mkor(backend: GradientTransformation,
                 idx = jnp.asarray(slots)
                 gv = jnp.stack([g_vecs[i] for i in slots])
                 av = jnp.stack([a_vecs[i] for i in slots])
+                if cfg.health:
+                    gv = _finite_or_zero(gv)      # keep windows clean
+                    av = _finite_or_zero(av)
                 aw = a_win if whole else a_win[idx]
                 gw = g_win if whole else g_win[idx]
                 cnt = n_cnt if whole else n_cnt[idx]
@@ -969,20 +1188,51 @@ def mkor(backend: GradientTransformation,
                     a_win = a_win.at[idx].set(aw)
                     g_win = g_win.at[idx].set(gw)
                     n_cnt = n_cnt.at[idx].set(cnt)
+            stacked_gw = jnp.stack(g_ws)
+            if cfg.health:
+                l_act = jnp.where(trip, _identity_like(l_act), l_act)
+                r_act = jnp.where(trip, _identity_like(r_act), r_act)
+                gw_c = _finite_or_zero(stacked_gw)
+            else:
+                gw_c = stacked_gw
+            delta = banked_precond(l_act, r_act, gw_c, ns + 1)
+            if cfg.health:
+                eps_hit = jnp.any((_slice_sumsq(delta) == 0.0)
+                                  & (_slice_sumsq(gw_c) > 0.0))
+                trip = trip | eps_hit | _any_nonfinite([delta])
+                l_act = jnp.where(trip, _identity_like(l_act), l_act)
+                r_act = jnp.where(trip, _identity_like(r_act), r_act)
+                l_pen = jnp.where(trip, _identity_like(l_pen), l_pen)
+                r_pen = jnp.where(trip, _identity_like(r_pen), r_pen)
+                delta = _finite_or_zero(delta)
+                a_win = jnp.where(trip, jnp.zeros((), a_win.dtype), a_win)
+                g_win = jnp.where(trip, jnp.zeros((), g_win.dtype), g_win)
+                n_cnt = jnp.where(trip, 0, n_cnt)
+                new_health[bucket.bucket_id] = {
+                    "cooldown": jnp.where(
+                        trip, jnp.int32(cfg.health_cooldown),
+                        jnp.where(phase_hit,
+                                  jnp.maximum(cool - 1, 0), cool)),
+                    "trips": trips + trip.astype(jnp.int32)}
+                new_banks[bucket.bucket_id] = {"l_inv": l_act,
+                                               "r_inv": r_act}
+                new_pending[bucket.bucket_id] = {"l_inv": l_pen,
+                                                 "r_inv": r_pen}
             new_windows[bucket.bucket_id] = {"a": a_win, "g": g_win,
                                              "n": n_cnt}
-
-            stacked_gw = jnp.stack(g_ws)
-            delta = banked_precond(bank["l_inv"], bank["r_inv"],
-                                   stacked_gw, ns + 1)
-            delta = jnp.where(so_on, delta, stacked_gw)  # MKOR-H fallback
+            delta = jnp.where(so_on, delta, gw_c)     # MKOR-H fallback
             for i, path in enumerate(bucket.paths):
                 out = statlib.tree_set(
                     out, path,
                     {**statlib.tree_get(out, path), "w": delta[i]})
-        return out, {"factor_banks": state["factor_banks"],
-                     "pending_banks": state["pending_banks"],
-                     "stat_windows": new_windows}
+        fstate = {"factor_banks": new_banks if cfg.health
+                  else state["factor_banks"],
+                  "pending_banks": new_pending if cfg.health
+                  else state["pending_banks"],
+                  "stat_windows": new_windows}
+        if cfg.health:
+            fstate["health"] = new_health
+        return out, fstate
 
     def precompute(state, params=None, **_):
         """Phase tick of the two-phase async protocol (DESIGN.md §13).

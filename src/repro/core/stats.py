@@ -236,7 +236,8 @@ def layer_phases(manifest: BucketManifest, inv_freq: int,
 
 
 def bucket_cost(bucket: FactorBucket, factor_bytes: int = 2,
-                rank: int = 1, staleness: int = 0) -> Dict[str, Any]:
+                rank: int = 1, staleness: int = 0,
+                health: bool = False) -> Dict[str, Any]:
     """Analytic per-bucket factor FLOPs/bytes (launch/dryrun, benchmarks).
 
     Slices = bank slots x stacked repeats; each slice owns an (d_out, d_out)
@@ -249,7 +250,10 @@ def bucket_cost(bucket: FactorBucket, factor_bytes: int = 2,
     doubles the resident inverse state (the pending bank) and allocates the
     ring windows at every rank — but adds zero FLOPs (same one block update
     per factor per window, just launched a window early) and zero wire
-    bytes (see :func:`bucket_comm_cost`)."""
+    bytes (see :func:`bucket_comm_cost`).  ``health=True`` (DESIGN.md
+    §14) carries two int32 scalars per bucket (cool-down + trip counter)
+    — 8 bytes regardless of bucket size, and zero extra wire bytes (the
+    sentinel reads replicated data only)."""
     n = bucket.n_slots
     for d in bucket.stack:
         n *= d
@@ -279,6 +283,7 @@ def bucket_cost(bucket: FactorBucket, factor_bytes: int = 2,
         "factor_bytes": factor_mem,
         "window_bytes": window_mem,
         "pending_factor_bytes": pending_mem,
+        "health_state_bytes": 8 if health else 0,
         "smw_flops_per_inv": smw_flops,
         "precond_flops_per_step": precond_flops,
         # block SMW streams each factor twice (read for the V matvecs +

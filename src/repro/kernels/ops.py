@@ -237,7 +237,7 @@ def smw_rank1_update_banked(j: jnp.ndarray, v: jnp.ndarray, *, gamma: float,
 
 def smw_block_update(j_inv: jnp.ndarray, v: jnp.ndarray, *, gamma: float,
                      variant: str = "paper", n_valid=None, block: int = 0,
-                     interpret: bool = False) -> jnp.ndarray:
+                     interpret: bool = False, with_pivot: bool = False):
     """Fused-Pallas block rank-r Woodbury update (DESIGN.md §11).
 
     v: (r, d) window rows oldest-first.  The √w_i row weights and the γ^m
@@ -245,7 +245,13 @@ def smw_block_update(j_inv: jnp.ndarray, v: jnp.ndarray, *, gamma: float,
     filled window) are applied here in fp32; the r matvecs, the r×r solve,
     and the rank-r axpy then run in ONE ``pallas_call``
     (kernels/rank1_smw.fused_block_smw) — vs r dispatches for the chained
-    rank-1 path.  The rank dim is sublane-padded with zero (inert) rows."""
+    rank-1 path.  The rank dim is sublane-padded with zero (inert) rows.
+
+    ``with_pivot=True`` returns ``(new, min_pivot)`` with the scalar
+    minimum |Gauss–Jordan pivot| of the in-kernel r×r solve (fp32) —
+    the conditioning signal the health sentinel trips on (DESIGN.md
+    §14).  The zero padding rows contribute pivots of gm² (paper) / gm
+    (exact_smw), never zero, so padding cannot mask a real collapse."""
     from repro.core.mkor import block_weights
     r, d = v.shape
     assert j_inv.shape == (d, d), (j_inv.shape, v.shape)
@@ -259,14 +265,18 @@ def smw_block_update(j_inv: jnp.ndarray, v: jnp.ndarray, *, gamma: float,
         vp = jnp.pad(vp, ((0, rpad - r), (0, 0)))
     out = rk.fused_block_smw(
         jp, vp, jnp.asarray(gm, jnp.float32).reshape(1, 1),
-        variant=variant, block=blk, interpret=interpret)
+        variant=variant, block=blk, interpret=interpret,
+        with_pivot=with_pivot)
+    if with_pivot:
+        out, piv = out
+        return out[:d, :d], piv[0, 0]
     return out[:d, :d]
 
 
 def smw_block_update_banked(j: jnp.ndarray, v: jnp.ndarray, n_valid, *,
                             gamma: float, variant: str = "paper",
-                            block: int = 0,
-                            interpret: bool = False) -> jnp.ndarray:
+                            block: int = 0, interpret: bool = False,
+                            with_pivot: bool = False):
     """Banked fused block update: ONE batched dispatch per bucket per phase
     step (DESIGN.md §11).
 
@@ -274,20 +284,25 @@ def smw_block_update_banked(j: jnp.ndarray, v: jnp.ndarray, n_valid, *,
     (core/stats.py window_ordered); n_valid: int broadcastable to ``lead``
     — per-slice window fill counts (0 slices are exact no-ops).  As with
     the rank-1 entry, lead may be a locally-sliced owner chunk, including
-    an empty one."""
+    an empty one.  ``with_pivot=True`` returns ``(new, min_pivot)`` with
+    the minimum in-kernel Gauss–Jordan pivot across every slice of the
+    bank (a scalar — per-bucket is the sentinel's quarantine unit)."""
     d = j.shape[-1]
     lead = j.shape[:-2]
     r = v.shape[-2]
     assert v.shape[:len(lead)] == lead, (v.shape, j.shape)
     fn = partial(smw_block_update, gamma=gamma, variant=variant,
-                 block=block, interpret=interpret)
+                 block=block, interpret=interpret, with_pivot=with_pivot)
     if not lead:
         return fn(j, v, n_valid=n_valid)
     if 0 in lead:                                   # empty owner slice
-        return j
+        return (j, jnp.float32(jnp.inf)) if with_pivot else j
     nv = jnp.broadcast_to(jnp.asarray(n_valid), lead).reshape((-1,))
     out = jax.vmap(lambda jj, vv, nn: fn(jj, vv, n_valid=nn))(
         j.reshape((-1, d, d)), v.reshape((-1, r, d)), nv)
+    if with_pivot:
+        out, pivs = out
+        return out.reshape(j.shape), jnp.min(pivs)
     return out.reshape(j.shape)
 
 

@@ -169,8 +169,8 @@ def _fused_smw_kernel(j_ref, vr_ref, vc_ref, out_ref, u_ref, s_ref, *,
 
 
 def _fused_block_smw_kernel(j_ref, vr_ref, vc_ref, gm_ref, out_ref,
-                            u_ref, s_ref, m_ref, *, variant: str,
-                            block: int, rank: int):
+                            *refs, variant: str, block: int, rank: int,
+                            with_pivot: bool = False):
     """Two-pass grid (pass, rows, cols) — the block rank-r SMW update
     (DESIGN.md §11) in ONE dispatch.
 
@@ -186,7 +186,19 @@ def _fused_block_smw_kernel(j_ref, vr_ref, vc_ref, gm_ref, out_ref,
         exact_smw:  out = (J − U_i M U_kᵀ)/gm, A = gm·I + S
 
     U, S, and M never round-trip through HBM; gm = γ^m is a runtime scalar
-    (the window may be partially filled)."""
+    (the window may be partially filled).
+
+    ``with_pivot`` adds a second (1, 1) fp32 output: the minimum |pivot|
+    across the Gauss–Jordan elimination — the in-kernel conditioning
+    signal the numerical-health sentinel consumes (DESIGN.md §14).  A
+    near-zero or NaN pivot means the mid matrix lost positive
+    definiteness (only possible through rounding/corruption; Lemma 3.1
+    guarantees PD in exact arithmetic), i.e. the factor update that was
+    just written is untrustworthy."""
+    if with_pivot:
+        piv_ref, u_ref, s_ref, m_ref = refs
+    else:
+        piv_ref, (u_ref, s_ref, m_ref) = None, refs
     p, i, k = pl.program_id(0), pl.program_id(1), pl.program_id(2)
 
     @pl.when(p == 0)
@@ -224,8 +236,11 @@ def _fused_block_smw_kernel(j_ref, vr_ref, vc_ref, gm_ref, out_ref,
             else:
                 raise ValueError(variant)
             minv = eye
+            pmin = jnp.float32(jnp.inf)
             for kk in range(rank):          # unrolled: rank is static+tiny
                 piv = jnp.sum(jnp.where((rows == kk) & (cols == kk), a, 0.0))
+                # NaN-propagating min: a non-finite pivot must surface
+                pmin = jnp.minimum(pmin, jnp.abs(piv))
                 arow = jnp.sum(jnp.where(rows == kk, a, 0.0),
                                axis=0, keepdims=True) / piv
                 mrow = jnp.sum(jnp.where(rows == kk, minv, 0.0),
@@ -240,6 +255,8 @@ def _fused_block_smw_kernel(j_ref, vr_ref, vc_ref, gm_ref, out_ref,
                 a = jnp.where(rows == kk, arow, a)
                 minv = jnp.where(rows == kk, mrow, minv)
             m_ref[...] = minv
+            if with_pivot:
+                piv_ref[0, 0] = pmin
 
         ui = u_ref[pl.ds(i * block, block), :]
         uk = u_ref[pl.ds(k * block, block), :]
@@ -256,21 +273,35 @@ def _fused_block_smw_kernel(j_ref, vr_ref, vc_ref, gm_ref, out_ref,
 
 def fused_block_smw(j: jnp.ndarray, vt: jnp.ndarray, gm: jnp.ndarray, *,
                     variant: str = "paper", block: int = DEFAULT_BLOCK,
-                    interpret: bool = False) -> jnp.ndarray:
+                    interpret: bool = False, with_pivot: bool = False):
     """One-dispatch block rank-r SMW inverse update (DESIGN.md §11).
 
     J: (d, d) any dtype; vt: (r, d) fp32 PRE-WEIGHTED window rows
     (√w_i · v_i, ops.py computes the weights); gm: (1, 1) fp32 scalar γ^m.
     d must be a block multiple and zero rows of vt are inert, so callers
-    pad both dims freely (kernels/ops.py)."""
+    pad both dims freely (kernels/ops.py).
+
+    ``with_pivot=True`` additionally returns a (1, 1) fp32 array holding
+    the minimum |Gauss–Jordan pivot| of the r×r mid-matrix solve — the
+    conditioning signal the health sentinel trips on (DESIGN.md §14).
+    The factor update itself is bit-identical with or without it."""
     d = j.shape[0]
     r = vt.shape[0]
     assert d % block == 0, f"pad to block multiple ({d} % {block})"
     assert vt.shape == (r, d), (vt.shape, j.shape)
     g = d // block
+    out_shape = jax.ShapeDtypeStruct((d, d), j.dtype)
+    out_spec = pl.BlockSpec((block, block), lambda p, i, k: (i, k))
+    if with_pivot:
+        # the (1, 1) pivot block is revisited by every grid step and
+        # written once at the first pass-1 tile (same pattern as the
+        # persistent scratches); it flushes to HBM after the last step
+        out_shape = (out_shape, jax.ShapeDtypeStruct((1, 1), jnp.float32))
+        out_spec = (out_spec,
+                    pl.BlockSpec((1, 1), lambda p, i, k: (0, 0)))
     return pl.pallas_call(
         functools.partial(_fused_block_smw_kernel, variant=variant,
-                          block=block, rank=r),
+                          block=block, rank=r, with_pivot=with_pivot),
         grid=(2, g, g),
         in_specs=[
             pl.BlockSpec((block, block), lambda p, i, k: (i, k)),
@@ -278,8 +309,8 @@ def fused_block_smw(j: jnp.ndarray, vt: jnp.ndarray, gm: jnp.ndarray, *,
             pl.BlockSpec((r, block), lambda p, i, k: (0, k)),
             pl.BlockSpec((1, 1), lambda p, i, k: (0, 0)),
         ],
-        out_specs=pl.BlockSpec((block, block), lambda p, i, k: (i, k)),
-        out_shape=jax.ShapeDtypeStruct((d, d), j.dtype),
+        out_specs=out_spec,
+        out_shape=out_shape,
         scratch_shapes=[pltpu.VMEM((d, r), jnp.float32),
                         pltpu.VMEM((r, r), jnp.float32),
                         pltpu.VMEM((r, r), jnp.float32)],

@@ -44,12 +44,14 @@ from repro.training import serving as serve_lib
 # --------------------------------------------------------------------- #
 # Optimizers available to the train-mode dry-run
 # --------------------------------------------------------------------- #
-def make_optimizer(name: str, cfg: ModelConfig) -> firstorder.GradientTransformation:
+def make_optimizer(name: str, cfg: ModelConfig,
+                   mcfg: MKORConfig = MKORConfig()) \
+        -> firstorder.GradientTransformation:
     backend = firstorder.lamb(1e-3)
     if name == "mkor":
-        return mkor(backend, MKORConfig())
+        return mkor(backend, mcfg)
     if name == "mkor_h":
-        return mkor_h(backend, MKORConfig())
+        return mkor_h(backend, mcfg)
     if name == "lamb":
         return backend
     raise ValueError(f"unknown optimizer {name!r}")
@@ -79,7 +81,9 @@ def factor_bucket_report(params_sds, mcfg: MKORConfig = MKORConfig(),
     factor payload per inversion, owner-sharded inverse gather per phase
     step)."""
     fbytes = jnp.dtype(mcfg.factor_dtype).itemsize
-    return [{**statlib.bucket_cost(b, fbytes, rank=mcfg.rank),
+    return [{**statlib.bucket_cost(b, fbytes, rank=mcfg.rank,
+                                   staleness=mcfg.staleness,
+                                   health=mcfg.health),
              **statlib.bucket_comm_cost(b, world_size, fbytes, fbytes,
                                         rank=mcfg.rank)}
             for b in manifest_for(params_sds, mcfg)]
@@ -113,6 +117,7 @@ def active_param_counts(cfg: ModelConfig, params_sds) -> Dict[str, int]:
 # --------------------------------------------------------------------- #
 def lower_one(cfg: ModelConfig, shape: InputShape, *, multi_pod: bool,
               optimizer: str = "mkor",
+              mcfg: MKORConfig = MKORConfig(),
               collect_stats: bool = True,
               save_hlo: str = "") -> Dict[str, Any]:
     mesh = mesh_lib.make_production_mesh(multi_pod=multi_pod)
@@ -131,7 +136,7 @@ def lower_one(cfg: ModelConfig, shape: InputShape, *, multi_pod: bool,
 
     t0 = time.time()
     if mode == "train":
-        opt = make_optimizer(optimizer, cfg)
+        opt = make_optimizer(optimizer, cfg, mcfg)
         opt_sds = jax.eval_shape(opt.init, params_sds)
         ospecs = rules.opt_state_specs(opt_sds, mesh, axes)
         opt_in = rules.with_sharding(opt_sds, ospecs, mesh)
@@ -188,7 +193,7 @@ def lower_one(cfg: ModelConfig, shape: InputShape, *, multi_pod: bool,
                                  ana["collective_total_bytes"])
 
     factor_buckets = factor_bucket_report(
-        params_sds, world_size=axes.data_size(mesh)) \
+        params_sds, mcfg, world_size=axes.data_size(mesh)) \
         if mode == "train" and optimizer in ("mkor", "mkor_h") else []
 
     counts = active_param_counts(cfg, params_sds)
@@ -236,10 +241,14 @@ def format_row(r: Dict[str, Any]) -> str:
         # (amortized over the inversion window) — DESIGN.md §10
         r1 = sum(b["rank1_stats_bytes_per_step"] for b in fb)
         kfac = sum(b["kfac_factor_bytes_per_inv"] for b in fb)
+        # health-sentinel state is 8 B/bucket and wire-free (DESIGN.md
+        # §14) — surfaced so the dry-run documents the (negligible) cost
+        hb = sum(b.get("health_state_bytes", 0) for b in fb)
         fb_note = (f"buckets={len(fb)} "
                    f"smw={flops:.2e}F factors={mem / 2**30:.2f}GiB "
                    f"r1comm={r1 / 2**20:.2f}MiB/step "
-                   f"(kfac {kfac / 2**20:.0f}MiB/inv) ")
+                   f"(kfac {kfac / 2**20:.0f}MiB/inv) "
+                   + (f"health={hb}B " if hb else ""))
     return (f"{r['arch']:17s} {r['shape']:12s} {r['mesh']:8s} "
             f"{fb_note}"
             f"flops={r['flops']:.3e} bytes={r['bytes_accessed']:.3e} "
@@ -272,6 +281,11 @@ def main() -> None:
                     choices=["mkor", "mkor_h", "lamb"])
     ap.add_argument("--no-stats", action="store_true",
                     help="disable MKOR stat capture in the train step")
+    ap.add_argument("--health", action="store_true",
+                    help="plan with the numerical-health sentinel on "
+                         "(DESIGN.md \u00a714): the traced step carries the "
+                         "per-bucket quarantine state and the bucket "
+                         "report gains its health-state bytes column")
     ap.add_argument("--out", default="experiments/dryrun")
     ap.add_argument("--save-hlo", default="",
                     help="dump the optimized HLO text to this path")
@@ -302,6 +316,7 @@ def main() -> None:
                 try:
                     rec = lower_one(cfg, shape, multi_pod=args.multi_pod,
                                     optimizer=args.optimizer,
+                                    mcfg=MKORConfig(health=args.health),
                                     collect_stats=not args.no_stats,
                                     save_hlo=args.save_hlo)
                     print(format_row(rec))

@@ -52,7 +52,10 @@ from repro.training import loop as train_lib
 
 def build_optimizer(name: str, lr, *, inv_freq: int = 10, rank: int = 1,
                     staleness: int = 0, use_pallas: bool = False,
-                    platform: str = "", dist=None):
+                    platform: str = "", dist=None, health: bool = False):
+    """Returns ``(optimizer, mkor_cfg)`` — ``mkor_cfg`` is None for the
+    non-MKOR baselines (the chaos harness needs the config to locate
+    injection targets inside the state tree)."""
     # Pallas interpret mode is a testing device, not an execution strategy:
     # only a real TPU runs the compiled kernels (they use TPU memory
     # spaces), every other backend interprets.  Before this gate,
@@ -61,20 +64,23 @@ def build_optimizer(name: str, lr, *, inv_freq: int = 10, rank: int = 1,
     interpret = use_pallas and platform != "tpu"
     backend = firstorder.lamb(lr)
     if name == "mkor":
-        return mkor(backend, MKORConfig(
+        mcfg = MKORConfig(
             inv_freq=inv_freq, rank=rank, staleness=staleness,
-            use_pallas=use_pallas, interpret=interpret, dist=dist))
+            use_pallas=use_pallas, interpret=interpret, dist=dist,
+            health=health)
+        return mkor(backend, mcfg), mcfg
     if name == "mkor_h":
-        return mkor_h(backend, MKORConfig(inv_freq=inv_freq, rank=rank,
-                                          staleness=staleness, dist=dist))
+        mcfg = MKORConfig(inv_freq=inv_freq, rank=rank,
+                          staleness=staleness, dist=dist, health=health)
+        return mkor_h(backend, mcfg), mcfg
     if name == "eva":
-        return eva(backend, EvaConfig())
+        return eva(backend, EvaConfig()), None
     if name == "lamb":
-        return backend
+        return backend, None
     if name == "sgd":
-        return firstorder.sgd(lr, momentum=0.9)
+        return firstorder.sgd(lr, momentum=0.9), None
     if name == "adamw":
-        return firstorder.adamw(lr)
+        return firstorder.adamw(lr), None
     raise ValueError(name)
 
 
@@ -127,6 +133,16 @@ def main() -> None:
     ap.add_argument("--dist-devices", type=int, default=8,
                     help="data-parallel world size for --dist "
                          "(--global-batch must be a multiple of it)")
+    ap.add_argument("--health", action="store_true",
+                    help="numerical-health sentinel (DESIGN.md §14): "
+                         "per-bucket quarantine/recovery of corrupted "
+                         "factor state (MKOR optimizers only)")
+    ap.add_argument("--chaos", default="",
+                    help="deterministic fault injections, e.g. "
+                         "'grad_nan@5,factor_inf@15[:bucket]' "
+                         "(training/chaos.py; sites: "
+                         "grad_nan, factor_inf, window_flip, "
+                         "payload_corrupt); MKOR optimizers only")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--ckpt-every", type=int, default=0)
@@ -147,9 +163,19 @@ def main() -> None:
                 f"of --dist-devices {args.dist_devices}")
         mesh = mesh_lib.make_host_mesh(n_data=args.dist_devices)
         dist = collectives.dist_axes(mesh, mesh_lib.mesh_axes(mesh))
-    opt = build_optimizer(args.optimizer, lr, inv_freq=args.inv_freq,
-                          rank=args.rank, staleness=args.staleness,
-                          use_pallas=args.use_pallas, dist=dist)
+    opt, mcfg = build_optimizer(args.optimizer, lr, inv_freq=args.inv_freq,
+                                rank=args.rank, staleness=args.staleness,
+                                use_pallas=args.use_pallas, dist=dist,
+                                health=args.health)
+    if args.health and mcfg is None:
+        raise SystemExit("--health needs an MKOR optimizer")
+    if args.chaos:
+        from repro.training import chaos as chaos_lib
+        if mcfg is None:
+            raise SystemExit("--chaos needs an MKOR optimizer (the "
+                             "injection sites live in MKOR state)")
+        opt = chaos_lib.chaotic(opt, chaos_lib.parse_chaos_spec(args.chaos),
+                                mcfg)
 
     params = model_lib.init_params(jax.random.PRNGKey(args.seed), cfg)
     n_params = model_lib.param_count(params)
@@ -169,10 +195,13 @@ def main() -> None:
 
     start = 0
     if args.ckpt_dir:
-        latest = checkpointing.latest_step(args.ckpt_dir)
-        if latest is not None:
-            (params, opt_state), meta = checkpointing.restore(
-                args.ckpt_dir, latest, (params, opt_state))
+        # newest VALID checkpoint: a crash mid-save (or corruption caught
+        # by the manifest CRCs) rolls back to the previous one instead of
+        # killing the restart (DESIGN.md §14)
+        restored = checkpointing.restore_latest_valid(
+            args.ckpt_dir, (params, opt_state))
+        if restored is not None:
+            (params, opt_state), meta, latest = restored
             start = int(meta.get("step", latest)) + 1
             print(f"restored checkpoint step {latest}")
 

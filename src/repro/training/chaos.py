@@ -1,0 +1,223 @@
+"""Deterministic fault injection for the numerical-health sentinel
+(DESIGN.md §14).
+
+The harness wraps a ``GradientTransformation`` and, at exact step counts,
+poisons one element of a chosen tensor *in-graph* — the injection is a
+``jnp.where(count == step, poison, x)`` select keyed on the optimizer's
+own step counter, so it is deterministic, jit/scan/shard_map-safe, and
+bit-identical across dist workers (the counter is replicated state).
+Everything downstream — detection, per-bucket quarantine, cool-down,
+recovery — is exercised exactly as a real flipped bit would exercise it.
+
+Injection sites (``Injection.site``):
+
+* ``grad_nan``        — NaN into the first weight-gradient element of the
+                        target bucket's first layer (a bad reduction /
+                        overflowed backward).
+* ``factor_inf``      — Inf into the active L⁻¹ bank (bit rot in carried
+                        optimizer state).
+* ``window_flip``     — NaN into the ā ring stat window (a corrupted
+                        carried window row; requires rank > 1 or
+                        staleness >= 1, which allocate windows).
+* ``payload_corrupt`` — NaN into the synced ā stat vector, i.e. the
+                        owner-gather/pmean payload AFTER the collective —
+                        what a corrupted wire payload looks like to every
+                        worker.
+
+Checkpoint faults are host-side files, not graph values:
+:func:`truncate_checkpoint` / :func:`corrupt_checkpoint` damage a saved
+checkpoint directory the way a crash mid-save or disk corruption would,
+for `checkpointing.restore_latest_valid` to roll back past.
+
+CLI: ``launch/train.py --chaos "grad_nan@5,factor_inf@15"`` (optionally
+``site@step:bucket_id``).
+"""
+from __future__ import annotations
+
+import os
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+from repro.core import stats as statlib
+from repro.core.firstorder import GradientTransformation
+from repro.core.mkor import MKORConfig, manifest_for
+
+SITES = ("grad_nan", "factor_inf", "window_flip", "payload_corrupt")
+
+_DEFAULT_VALUE = {"grad_nan": float("nan"), "factor_inf": float("inf"),
+                  "window_flip": float("nan"),
+                  "payload_corrupt": float("nan")}
+
+
+@dataclass(frozen=True)
+class Injection:
+    site: str
+    step: int
+    bucket: Optional[str] = None    # bucket_id; None = first bucket
+    value: Optional[float] = None   # poison value; None = site default
+
+    def poison(self) -> float:
+        return _DEFAULT_VALUE[self.site] if self.value is None \
+            else self.value
+
+
+@dataclass(frozen=True)
+class ChaosPlan:
+    injections: Tuple[Injection, ...] = ()
+
+    def __bool__(self) -> bool:
+        return bool(self.injections)
+
+
+def parse_chaos_spec(spec: str) -> ChaosPlan:
+    """``"site@step[:bucket],site@step..."`` -> :class:`ChaosPlan`."""
+    inj = []
+    for item in filter(None, (s.strip() for s in spec.split(","))):
+        try:
+            site, rest = item.split("@", 1)
+            bucket = None
+            if ":" in rest:
+                rest, bucket = rest.split(":", 1)
+            step = int(rest)
+        except ValueError:
+            raise ValueError(f"bad chaos spec item {item!r} "
+                             f"(want site@step[:bucket])") from None
+        if site not in SITES:
+            raise ValueError(f"unknown chaos site {site!r}; one of {SITES}")
+        inj.append(Injection(site=site, step=step, bucket=bucket))
+    return ChaosPlan(tuple(inj))
+
+
+def _poison_elem(x, hit, value):
+    """Overwrite element [0,...,0] with ``value`` when ``hit`` (traced)."""
+    idx = (0,) * x.ndim
+    return x.at[idx].set(jnp.where(hit, jnp.asarray(value, x.dtype),
+                                   x[idx]))
+
+
+def _resolve_bucket(manifest, bucket_id):
+    buckets = list(manifest)
+    if not buckets:
+        raise ValueError("chaos: no eligible MKOR buckets to inject into")
+    if bucket_id is None:
+        return buckets[0]
+    for b in buckets:
+        if b.bucket_id == bucket_id:
+            return b
+    raise ValueError(f"chaos: bucket {bucket_id!r} not in manifest "
+                     f"{[b.bucket_id for b in buckets]}")
+
+
+def _apply(plan: ChaosPlan, mcfg: MKORConfig, count, grads, state, stats):
+    manifest = manifest_for(grads, mcfg)
+    for inj in plan.injections:
+        bucket = _resolve_bucket(manifest, inj.bucket)
+        hit = count == inj.step
+        val = inj.poison()
+        path = bucket.paths[0]
+        if inj.site == "grad_nan":
+            dense = statlib.tree_get(grads, path)
+            grads = statlib.tree_set(
+                grads, path,
+                {**dense, "w": _poison_elem(dense["w"], hit, val)})
+        elif inj.site == "payload_corrupt":
+            if stats is None or statlib.get_a_vec(stats, path) is None:
+                raise ValueError("chaos: payload_corrupt needs rank-1 "
+                                 "stats (collect_stats=True)")
+            node = statlib.tree_get(stats, path)
+            stats = statlib.tree_set(
+                stats, path,
+                {**node, "a": _poison_elem(node["a"], hit, val)})
+        elif inj.site == "factor_inf":
+            if "factor_banks" not in state:
+                raise ValueError("chaos: factor_inf needs the bank layout")
+            bank = state["factor_banks"][bucket.bucket_id]
+            state = {**state, "factor_banks": {
+                **state["factor_banks"],
+                bucket.bucket_id: {
+                    **bank,
+                    "l_inv": _poison_elem(bank["l_inv"], hit, val)}}}
+        elif inj.site == "window_flip":
+            if "stat_windows" not in state:
+                raise ValueError("chaos: window_flip needs stat windows "
+                                 "(rank > 1 or staleness >= 1)")
+            win = state["stat_windows"][bucket.bucket_id]
+            state = {**state, "stat_windows": {
+                **state["stat_windows"],
+                bucket.bucket_id: {
+                    **win, "a": _poison_elem(win["a"], hit, val)}}}
+        else:                                       # pragma: no cover
+            raise ValueError(inj.site)
+    return grads, state, stats
+
+
+def chaotic(optimizer: GradientTransformation, plan: ChaosPlan,
+            mcfg: MKORConfig) -> GradientTransformation:
+    """Wrap ``optimizer`` so ``plan``'s faults fire inside its update.
+
+    The wrapper reads the step from ``state["count"]`` (the MKOR state
+    tree) and rewrites grads/stats/state functionally before delegating —
+    it composes unchanged with the single, dist, chunk-scan, and async
+    (precompute) paths, because the poisoned values flow through exactly
+    the tensors a real fault would corrupt."""
+    if not plan:
+        return optimizer
+
+    def update(grads, state, params=None, stats=None, loss=None, **kw):
+        grads, state, stats = _apply(plan, mcfg, state["count"],
+                                     grads, state, stats)
+        return optimizer.update(grads, state, params=params, stats=stats,
+                                loss=loss, **kw)
+
+    return GradientTransformation(optimizer.init, update,
+                                  optimizer.precompute)
+
+
+# --------------------------------------------------------------------- #
+# Host-side checkpoint faults (crash/corruption simulation)
+# --------------------------------------------------------------------- #
+def _ckpt_dir(directory: str, step: int) -> str:
+    return os.path.join(directory, f"step_{step:08d}")
+
+
+def truncate_checkpoint(directory: str, step: int, nbytes: int = 64) -> str:
+    """Truncate ``arrays.npz`` to ``nbytes`` — a crash mid-array-write."""
+    path = os.path.join(_ckpt_dir(directory, step), "arrays.npz")
+    with open(path, "rb") as f:
+        head = f.read(nbytes)
+    with open(path, "wb") as f:
+        f.write(head)
+    return path
+
+
+def corrupt_checkpoint(directory: str, step: int,
+                       mode: str = "arrays") -> str:
+    """Damage one file of a saved checkpoint.
+
+    mode: ``arrays`` flips bytes inside arrays.npz (CRC-detectable),
+    ``manifest`` overwrites the manifest with garbage, ``marker``
+    removes the COMMITTED marker (simulating a crash before commit)."""
+    d = _ckpt_dir(directory, step)
+    if mode == "marker":
+        path = os.path.join(d, "COMMITTED")
+        os.remove(path)
+        return path
+    if mode == "manifest":
+        path = os.path.join(d, "manifest.msgpack")
+        with open(path, "wb") as f:
+            f.write(b"\x00garbage\xff")
+        return path
+    if mode == "arrays":
+        path = os.path.join(d, "arrays.npz")
+        with open(path, "r+b") as f:
+            data = bytearray(f.read())
+            # flip bytes in the back half: past the zip directory header,
+            # inside some member's payload
+            for off in range(len(data) // 2, len(data) // 2 + 8):
+                data[off] ^= 0xFF
+            f.seek(0)
+            f.write(data)
+        return path
+    raise ValueError(f"unknown corrupt mode {mode!r}")

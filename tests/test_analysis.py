@@ -256,6 +256,67 @@ def test_seeded_extra_step_bytes_trips_staleness_lint():
 
 
 # --------------------------------------------------------------------- #
+# Seeded violation 6: health sentinel wire contract (health-gating)
+# --------------------------------------------------------------------- #
+def test_seeded_health_factor_broadcast_trips_health_lint():
+    """A 'sentinel' that broadcasts a quarantine-reset (256, 256) bank on
+    an every-step psum raises health.ungated-factor-bytes — resets must
+    be local identity writes (the same payload also trips comm-linearity,
+    like the staleness twin of this fixture; both fire)."""
+    mesh = Mesh(np.array(jax.devices()[:8]), ("d",))
+
+    def leaky_reset(bank):
+        def inner(b):
+            return jax.lax.psum(b, "d")                    # ungated O(d^2)
+        return shard_map.shard_map(
+            inner, mesh=mesh, in_specs=P(), out_specs=P())(bank)
+
+    target = trace.custom_target(
+        "fixture/bank-reset-psum", leaky_reset,
+        jax.ShapeDtypeStruct((256, 256), jnp.float32),
+        meta={"health": True, "factor_dims": {256}, "world": 8})
+    report = run_checkers([target])
+    assert report.by_code("health.ungated-factor-bytes")
+    assert report.exit_code() == 1
+    assert _error_checkers(report) == {"health-gating", "comm-linearity"}
+
+
+def test_seeded_health_extra_collective_trips_health_lint():
+    """Differential check against an attached health-off baseline: a
+    sentinel that adds an every-step agreement round (any new ungated
+    collective) raises health.extra-step-collectives.  The payload here
+    is 64 bytes — under the byte slack — so the count code fires alone,
+    proving the two differential codes are independent."""
+    mesh = Mesh(np.array(jax.devices()[:8]), ("d",))
+
+    def agreeing_step(flags):
+        def inner(f):
+            return jax.lax.psum(f, "d")    # cross-worker trip agreement
+        return shard_map.shard_map(
+            inner, mesh=mesh, in_specs=P(), out_specs=P())(flags)
+
+    target = trace.custom_target(
+        "fixture/health-agreement-round", agreeing_step,
+        jax.ShapeDtypeStruct((16,), jnp.float32),
+        meta={"health": True, "plain_ungated_count": 0,
+              "plain_ungated_bytes": 0, "n_dense_layers": 2, "world": 8})
+    report = run_checkers([target])
+    errs = report.by_code("health.extra-step-collectives")
+    assert errs and report.exit_code() == 1
+    assert not report.by_code("health.extra-step-bytes")
+    assert _error_checkers(report) == {"health-gating"}
+
+    # the health-off twin of the same program is out of the checker's
+    # scope: inactive means zero diagnostics
+    from repro.analysis.checkers import check_health_gating
+    off_twin = trace.custom_target(
+        "fixture/health-off-twin", agreeing_step,
+        jax.ShapeDtypeStruct((16,), jnp.float32),
+        meta={"health": False, "plain_ungated_count": 0, "world": 8})
+    assert check_health_gating(off_twin) == []
+
+
+# --------------------------------------------------------------------- #
 # Clean passes over the real entry points
 # --------------------------------------------------------------------- #
 def test_lint_clean_on_bert_large_single_and_chunk():
@@ -307,6 +368,30 @@ def test_lint_clean_on_bert_large_async_dist():
     assert async_t.meta["sync_ungated_bytes"] > 0
     res = jaxpr_walk.walk(async_t.jaxpr)
     assert res.prim_counts.get("cond", 0) >= async_t.meta["n_buckets"] > 0
+    assert any(not c.gated for c in res.collectives)
+
+
+def test_lint_clean_on_bert_large_health_dist():
+    """The real health-on dist step passes health-gating with the
+    differential health-off baseline attached — non-vacuously: the
+    checker is genuinely active (health=True in the traced config) and
+    the baseline footprint is positive, so the zero-extra-wire claim of
+    DESIGN.md §14 is actually being compared against something."""
+    import dataclasses
+    cfg = MKORConfig(inv_freq=10)
+    plain = trace.dist_target("bert_large", world=8, mkor_cfg=cfg)
+    health_t = trace.dist_target(
+        "bert_large", world=8,
+        mkor_cfg=dataclasses.replace(cfg, health=True))
+    trace.attach_health_baseline(health_t, plain)
+    report = run_checkers([health_t], names=["health-gating"])
+    assert report.exit_code() == 0, report.render()
+    # non-vacuity: the checker really ran with a real baseline
+    assert health_t.meta["mkor_cfg"].health
+    assert health_t.meta["plain_ungated_count"] > 0
+    assert health_t.meta["plain_ungated_bytes"] > 0
+    assert health_t.name.endswith("-health")
+    res = jaxpr_walk.walk(health_t.jaxpr)
     assert any(not c.gated for c in res.collectives)
 
 

@@ -100,3 +100,77 @@ def test_latest_step(tmp_path):
     checkpointing.save(str(tmp_path), 3, {"a": jnp.ones(1)})
     checkpointing.save(str(tmp_path), 12, {"a": jnp.ones(1)})
     assert checkpointing.latest_step(str(tmp_path)) == 12
+
+
+# --------------------------------------------------------------------- #
+# Crash safety (DESIGN.md §14): typed corruption errors + auto-rollback
+# --------------------------------------------------------------------- #
+_TREE = {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+         "b": [jnp.ones((4,), jnp.bfloat16)]}
+
+
+def test_checkpoint_missing_marker_is_corrupt(tmp_path):
+    from repro.training import chaos
+    out = checkpointing.save(str(tmp_path), 4, _TREE)
+    chaos.corrupt_checkpoint(str(tmp_path), 4, mode="marker")
+    assert not checkpointing.validate(str(tmp_path), 4)
+    with pytest.raises(checkpointing.CheckpointCorruptError,
+                       match="COMMITTED"):
+        checkpointing.restore(str(tmp_path), 4, _TREE)
+    assert out.endswith("step_00000004")
+
+
+def test_checkpoint_truncated_arrays_is_corrupt(tmp_path):
+    from repro.training import chaos
+    checkpointing.save(str(tmp_path), 4, _TREE)
+    chaos.truncate_checkpoint(str(tmp_path), 4, nbytes=40)
+    with pytest.raises(checkpointing.CheckpointCorruptError):
+        checkpointing.restore(str(tmp_path), 4, _TREE)
+    assert not checkpointing.validate(str(tmp_path), 4)
+
+
+def test_checkpoint_bitflip_fails_crc(tmp_path):
+    from repro.training import chaos
+    checkpointing.save(str(tmp_path), 4, _TREE)
+    assert checkpointing.validate(str(tmp_path), 4)
+    chaos.corrupt_checkpoint(str(tmp_path), 4, mode="arrays")
+    with pytest.raises(checkpointing.CheckpointCorruptError):
+        checkpointing.restore(str(tmp_path), 4, _TREE)
+
+
+def test_checkpoint_corrupt_manifest(tmp_path):
+    from repro.training import chaos
+    checkpointing.save(str(tmp_path), 4, _TREE)
+    chaos.corrupt_checkpoint(str(tmp_path), 4, mode="manifest")
+    with pytest.raises(checkpointing.CheckpointCorruptError,
+                       match="manifest"):
+        checkpointing.restore(str(tmp_path), 4, _TREE)
+
+
+def test_restore_latest_valid_rolls_back_past_corruption(tmp_path):
+    from repro.training import chaos
+    checkpointing.save(str(tmp_path), 3, _TREE, {"step": 3})
+    checkpointing.save(str(tmp_path), 9, _TREE, {"step": 9})
+    checkpointing.save(str(tmp_path), 15, _TREE, {"step": 15})
+    chaos.truncate_checkpoint(str(tmp_path), 15, nbytes=16)
+    chaos.corrupt_checkpoint(str(tmp_path), 9, mode="marker")
+    got = checkpointing.restore_latest_valid(str(tmp_path), _TREE)
+    assert got is not None
+    tree, meta, step = got
+    assert step == 3 and meta["step"] == 3
+    np.testing.assert_array_equal(np.asarray(tree["a"]), np.asarray(_TREE["a"]))
+
+
+def test_restore_latest_valid_empty_and_all_corrupt(tmp_path):
+    assert checkpointing.restore_latest_valid(str(tmp_path), _TREE) is None
+    checkpointing.save(str(tmp_path), 1, _TREE)
+    from repro.training import chaos
+    chaos.corrupt_checkpoint(str(tmp_path), 1, mode="arrays")
+    assert checkpointing.restore_latest_valid(str(tmp_path), _TREE) is None
+
+
+def test_restore_latest_valid_structure_mismatch_still_raises(tmp_path):
+    checkpointing.save(str(tmp_path), 2, _TREE)
+    with pytest.raises(ValueError, match="structure"):
+        checkpointing.restore_latest_valid(str(tmp_path),
+                                           {"z": jnp.ones((2,))})

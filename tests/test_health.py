@@ -1,0 +1,378 @@
+"""Numerical-health sentinel (DESIGN.md §14): per-bucket detection,
+quarantine, recovery — driven by the deterministic fault-injection
+harness (training/chaos.py).
+
+Contracts under test:
+* health=False keeps the update math byte-identical (clean data) across
+  sync/async × rank 1/2 — the sentinel is free when off AND when on;
+* every injection site (grad_nan, factor_inf, payload_corrupt,
+  window_flip) is detected within the injected step, trips exactly
+  once, and quarantines ONLY the target bucket (identity banks) while
+  the other buckets keep their second-order factors;
+* the cool-down clock counts phase steps and the bucket re-enters with
+  live factors afterwards; losses stay finite throughout;
+* staleness=1 trips reset BOTH buffers (active + pending) and zero the
+  stat window rows and counts;
+* the chaotic optimizer composes with the scan-chunk runner;
+* the 8-worker dist step trips the same buckets at the same steps as
+  the single-device run under the same injections and stays allclose;
+* post-fault convergence: the fitted log-loss slope of the recovery
+  tail is at least half the clean run's (ISSUE 8 acceptance);
+* config validation and the GJ-pivot conditioning signal.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import baseline_net, firstorder
+from repro.core import stats as statlib
+from repro.core.mkor import (MKORConfig, manifest_for, mkor,
+                             smw_block_update)
+from repro.launch import mesh as mesh_lib
+from repro.sharding import collectives
+from repro.training import chaos
+from repro.training import loop as train_lib
+
+WORLD = 8
+
+
+def _batch(step, d_in=96):
+    rng = np.random.default_rng(step)
+    basis = np.random.default_rng(0).standard_normal((8, d_in)) / 3
+    x = (rng.standard_normal((64, 8)) @ basis).astype(np.float32)
+    return {"x": jnp.asarray(x), "y": jnp.asarray(x)}
+
+
+def _opt(plan=None, **cfg_kw):
+    cfg = MKORConfig(inv_freq=2, exclude=(), **cfg_kw)
+    opt = mkor(firstorder.sgd(1e-2, momentum=0.9), cfg)
+    if plan:
+        opt = chaos.chaotic(opt, plan, cfg)
+    return opt, cfg
+
+
+def _jit_step(opt):
+    @jax.jit
+    def step(params, state, batch):
+        loss, grads, stats = baseline_net.grads_and_full_stats(params,
+                                                               batch)
+        upd, state = opt.update(grads, state, params=params, stats=stats,
+                                loss=loss)
+        return firstorder.apply_updates(params, upd), state, loss
+    return step
+
+
+def _run(opt, params0, steps):
+    """Drive the autoencoder; returns (params, state, losses, trips_hist,
+    cool_hist) where the histories hold each bucket's post-step counters
+    (empty when health is off)."""
+    step = _jit_step(opt)
+    params, state = jax.tree.map(jnp.array, params0), opt.init(params0)
+    losses, trips_hist, cool_hist = [], [], []
+    for i in range(steps):
+        params, state, loss = step(params, state, _batch(i))
+        losses.append(float(loss))
+        if "health" in state:
+            trips_hist.append({b: int(state["health"][b]["trips"])
+                               for b in state["health"]})
+            cool_hist.append({b: int(state["health"][b]["cooldown"])
+                              for b in state["health"]})
+    return params, state, losses, trips_hist, cool_hist
+
+
+def _log_loss_slope(losses) -> float:
+    y = np.log(np.maximum(np.asarray(losses, np.float64), 1e-30))
+    return float(np.polyfit(np.arange(len(y)), y, 1)[0])
+
+
+def _is_identity_bank(bank, atol=0.0) -> bool:
+    eye = np.broadcast_to(np.eye(bank.shape[-1], dtype=np.float32),
+                          bank.shape)
+    return np.allclose(np.asarray(bank, np.float32), eye, atol=atol)
+
+
+def _plan(site, step, bucket=None):
+    return chaos.ChaosPlan((chaos.Injection(site=site, step=step,
+                                            bucket=bucket),))
+
+
+# --------------------------------------------------------------------- #
+# Config validation + state allocation
+# --------------------------------------------------------------------- #
+def test_health_requires_bank_layout():
+    with pytest.raises(ValueError, match="layout='bank'"):
+        mkor(firstorder.sgd(1e-2),
+             MKORConfig(health=True, layout="per_layer"))
+
+
+def test_health_cooldown_must_be_positive():
+    with pytest.raises(ValueError, match="health_cooldown"):
+        mkor(firstorder.sgd(1e-2),
+             MKORConfig(health=True, health_cooldown=0))
+
+
+def test_health_state_allocated_per_bucket(ae_params, ae_manifest):
+    opt, _ = _opt(health=True)
+    state = opt.init(ae_params)
+    assert set(state["health"]) == {b.bucket_id for b in ae_manifest}
+    for hst in state["health"].values():
+        assert hst["cooldown"].dtype == jnp.int32
+        assert hst["trips"].dtype == jnp.int32
+        assert int(hst["cooldown"]) == 0 and int(hst["trips"]) == 0
+    # 8 bytes/bucket of carried state, and it is budgeted (dryrun rows)
+    b = next(iter(ae_manifest))
+    assert statlib.bucket_cost(b)["health_state_bytes"] == 0
+    assert statlib.bucket_cost(b, health=True)["health_state_bytes"] == 8
+
+
+# --------------------------------------------------------------------- #
+# Byte-identity: chaos off => the sentinel changes no update math
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("rank,staleness",
+                         [(1, 0), (2, 0), (1, 1), (2, 1)])
+def test_health_on_clean_run_byte_identical(ae_params, rank, staleness):
+    """On clean data the sentinel never trips, and every gate is a scalar
+    no-op select: params AND shared optimizer state must match the
+    health-off twin bit-for-bit across all four scheduling modes."""
+    steps = 6
+    p_off, s_off, l_off, _, _ = _run(
+        _opt(rank=rank, staleness=staleness)[0], ae_params, steps)
+    p_on, s_on, l_on, trips, _ = _run(
+        _opt(rank=rank, staleness=staleness, health=True)[0],
+        ae_params, steps)
+    assert l_off == l_on
+    assert all(t == 0 for h in trips for t in h.values())
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(b)), p_off, p_on)
+    s_on = {k: v for k, v in s_on.items() if k != "health"}
+    assert set(s_on) == set(s_off)
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(b)), s_off, s_on)
+
+
+# --------------------------------------------------------------------- #
+# Detection + quarantine per injection site
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("site,cfg_kw", [
+    ("grad_nan", {}),
+    ("factor_inf", {}),
+    ("payload_corrupt", {"rank": 2}),
+    ("window_flip", {"staleness": 1}),
+])
+def test_injection_trips_once_within_the_step(ae_params, site, cfg_kw):
+    """Each site is detected within the injected step, increments the
+    target bucket's trip counter exactly once, arms the cool-down, and
+    never poisons the loss or the other buckets.
+
+    The injection step is chosen OFF-phase for the target bucket (odd
+    count, phases land on even counts here): with staleness=1, poison
+    landing on the exact phase step is erased by the tick's promote —
+    the clean pending bank overwrites it before anything consumes it,
+    so there is nothing to detect (or recover from); off-phase is the
+    case where the corrupted state would actually be used.  14 steps so
+    the async path's promote brings the relaunched bank live again
+    (trip@5 -> cool-down 0 @8 -> relaunch @10 -> promote @12)."""
+    inject_at, steps = 5, 14
+    opt, cfg = _opt(plan=_plan(site, inject_at), health=True, **cfg_kw)
+    target = next(iter(manifest_for(ae_params, cfg))).bucket_id
+
+    _, state, losses, trips, cools = _run(opt, ae_params, steps)
+    assert np.isfinite(losses).all(), losses
+    # detected within the injected step, exactly once, target bucket only
+    assert trips[inject_at - 1][target] == 0
+    assert trips[inject_at][target] == 1
+    assert trips[-1][target] == 1
+    for bid in trips[-1]:
+        if bid != target:
+            assert trips[-1][bid] == 0, f"bucket {bid} poisoned"
+    # the trip arms the cool-down; it expires before the run ends
+    assert cools[inject_at][target] == cfg.health_cooldown
+    assert cools[-1][target] == 0
+    # recovery is real: the bucket re-entered second-order (live banks)
+    bank = state["factor_banks"][target]
+    assert not _is_identity_bank(bank["l_inv"])
+    assert np.isfinite(np.asarray(bank["l_inv"],
+                                  np.float32)).all()
+
+
+def test_quarantine_isolates_the_tripped_bucket(ae_params):
+    """While the target bucket sits in identity quarantine, the other
+    buckets keep their (non-identity) second-order factors — per-bucket
+    blast radius, the tentpole claim."""
+    inject_at = 4
+    opt, cfg = _opt(plan=_plan("factor_inf", inject_at), health=True)
+    manifest = list(manifest_for(ae_params, cfg))
+    target = manifest[0].bucket_id
+
+    step = _jit_step(opt)
+    params, state = jax.tree.map(jnp.array, ae_params), opt.init(ae_params)
+    for i in range(inject_at + 1):
+        params, state, _ = step(params, state, _batch(i))
+    # post-trip snapshot: target banks are the exact identity reset
+    assert int(state["health"][target]["trips"]) == 1
+    assert _is_identity_bank(state["factor_banks"][target]["l_inv"])
+    assert _is_identity_bank(state["factor_banks"][target]["r_inv"])
+    others = [b.bucket_id for b in manifest if b.bucket_id != target]
+    assert others, "need >= 2 buckets for an isolation claim"
+    for bid in others:
+        assert int(state["health"][bid]["trips"]) == 0
+        assert not _is_identity_bank(state["factor_banks"][bid]["l_inv"])
+
+
+def test_staleness1_trip_resets_both_banks_and_window(ae_params):
+    """Async double-buffering: a trip must reset the ACTIVE and PENDING
+    buffers (else the next promote re-installs the poison) and zero the
+    stat window rows and counts (else 0-weighted NaN rows re-poison the
+    first post-recovery inversion).  Injected off-phase — see
+    test_injection_trips_once_within_the_step on why on-phase poison is
+    benignly erased by the promote."""
+    inject_at = 5
+    opt, cfg = _opt(plan=_plan("factor_inf", inject_at), health=True,
+                    staleness=1)
+    target = next(iter(manifest_for(ae_params, cfg))).bucket_id
+
+    step = _jit_step(opt)
+    params, state = jax.tree.map(jnp.array, ae_params), opt.init(ae_params)
+    for i in range(inject_at + 1):
+        params, state, _ = step(params, state, _batch(i))
+    assert int(state["health"][target]["trips"]) == 1
+    for bufs in (state["factor_banks"], state["pending_banks"]):
+        assert _is_identity_bank(bufs[target]["l_inv"])
+        assert _is_identity_bank(bufs[target]["r_inv"])
+    win = state["stat_windows"][target]
+    np.testing.assert_array_equal(np.asarray(win["a"], np.float32), 0.0)
+    np.testing.assert_array_equal(np.asarray(win["g"], np.float32), 0.0)
+    np.testing.assert_array_equal(np.asarray(win["n"]), 0)
+    # ... and the run recovers: more steps, banks go live again
+    for i in range(inject_at + 1, inject_at + 9):
+        params, state, loss = step(params, state, _batch(i))
+    assert np.isfinite(float(loss))
+    assert int(state["health"][target]["cooldown"]) == 0
+    assert not _is_identity_bank(state["factor_banks"][target]["l_inv"])
+
+
+def test_chaotic_opt_composes_with_chunk_runner(ae_params):
+    """The injections are in-graph selects on the carried step counter,
+    so the chaotic optimizer folds into the jitted lax.scan chunk runner
+    unchanged — and the trip still lands on the right step."""
+    inject_at, steps = 3, 8
+    opt, cfg = _opt(plan=_plan("grad_nan", inject_at), health=True)
+    target = next(iter(manifest_for(ae_params, cfg))).bucket_id
+
+    def step_fn(params, state, batch):
+        loss, grads, stats = baseline_net.grads_and_full_stats(params,
+                                                               batch)
+        upd, state = opt.update(grads, state, params=params, stats=stats,
+                                loss=loss)
+        return (firstorder.apply_updates(params, upd), state,
+                {"loss": loss})
+
+    p, s, hist = train_lib.train_epoch(
+        step_fn, jax.tree.map(jnp.array, ae_params), opt.init(ae_params),
+        [_batch(i) for i in range(steps)], chunk=4)
+    assert len(hist) == steps
+    assert np.isfinite([h["loss"] for h in hist]).all()
+    assert int(s["health"][target]["trips"]) == 1
+    assert all(int(h["trips"]) == 0 for b, h in s["health"].items()
+               if b != target)
+
+
+# --------------------------------------------------------------------- #
+# Recovery: post-fault convergence rate (ISSUE 8 acceptance)
+# --------------------------------------------------------------------- #
+def test_recovery_slope_at_least_half_of_clean(ae_params):
+    """After the quarantine window the optimizer must actually converge
+    again: the fitted log-loss slope of the faulted run's tail is at
+    least half the clean run's over the same steps."""
+    steps, inject_at, tail = 30, 6, 12
+    _, _, clean, _, _ = _run(_opt(health=True)[0], ae_params, steps)
+    _, _, faulted, trips, _ = _run(
+        _opt(plan=_plan("grad_nan", inject_at), health=True)[0],
+        ae_params, steps)
+    assert np.isfinite(faulted).all()
+    assert sum(trips[-1].values()) == 1
+    clean_slope = _log_loss_slope(clean[tail:])
+    fault_slope = _log_loss_slope(faulted[tail:])
+    assert clean_slope < 0, "clean run is not converging; test is vacuous"
+    assert fault_slope <= 0.5 * clean_slope, \
+        (f"recovery slope {fault_slope:.4f}/step vs clean "
+         f"{clean_slope:.4f}/step")
+
+
+# --------------------------------------------------------------------- #
+# Dist == single under faults
+# --------------------------------------------------------------------- #
+@pytest.mark.skipif(jax.device_count() < WORLD,
+                    reason=f"needs {WORLD} devices (conftest forces them "
+                           "on the CPU backend only)")
+def test_dist_matches_single_with_faults(ae_params):
+    """Same injections, same trips, same steps: the 8-worker shard_map
+    step and the single-device run quarantine identically (every sentinel
+    input is replicated post-collective state) and stay allclose."""
+    steps = 8
+    plan = chaos.ChaosPlan((
+        chaos.Injection(site="grad_nan", step=3),
+        chaos.Injection(site="factor_inf", step=5),
+    ))
+    opt_s, cfg = _opt(plan=plan, health=True)
+    p_ref, s_ref, ref_losses, ref_trips, _ = _run(opt_s, ae_params, steps)
+    assert sum(ref_trips[-1].values()) >= 2, "faults did not trip"
+
+    mesh = mesh_lib.make_host_mesh(WORLD)
+    dist = collectives.dist_axes(mesh, mesh_lib.mesh_axes(mesh))
+    cfg_d = dataclasses.replace(cfg, dist=dist)
+    opt_d = chaos.chaotic(
+        mkor(firstorder.sgd(1e-2, momentum=0.9), cfg_d), plan, cfg_d)
+    step = train_lib.make_dist_step_fn(
+        lambda p, b: baseline_net.grads_and_full_stats(p, b),
+        opt_d, mesh, ("data",), stats_payload_dtype=None)
+    p, s = jax.tree.map(jnp.array, ae_params), opt_d.init(ae_params)
+    losses = []
+    for i in range(steps):
+        p, s, m = step(p, s, _batch(i))
+        losses.append(float(m["loss"]))
+
+    np.testing.assert_allclose(losses, ref_losses, rtol=1e-5)
+    assert {b: int(h["trips"]) for b, h in s["health"].items()} \
+        == ref_trips[-1]
+    jax.tree.map(lambda a, b: np.testing.assert_allclose(
+        np.asarray(a, np.float32), np.asarray(b, np.float32),
+        rtol=2e-4, atol=1e-5), p, p_ref)
+    jax.tree.map(lambda a, b: np.testing.assert_allclose(
+        np.asarray(a, np.float32), np.asarray(b, np.float32),
+        rtol=2e-4, atol=1e-5), s["health"], s_ref["health"])
+
+
+# --------------------------------------------------------------------- #
+# GJ-pivot conditioning signal (pure function)
+# --------------------------------------------------------------------- #
+def test_block_update_pivot_signal():
+    """with_pivot exports the min squared Cholesky diagonal of the r×r
+    mid matrix: healthy windows sit far above health_pivot_tol, and a
+    poisoned window yields a NaN pivot, which ``pivot >= tol`` rejects
+    (NaN compares false — the sentinel's trip direction)."""
+    d, r, tol = 16, 4, MKORConfig().health_pivot_tol
+    a = jax.random.normal(jax.random.key(0), (d, d)) / np.sqrt(d)
+    j_inv = jnp.linalg.inv(jnp.eye(d) + a @ a.T)
+    v = 0.3 * jax.random.normal(jax.random.key(1), (r, d))
+    new, piv = smw_block_update(j_inv, v, 0.9, with_pivot=True)
+    assert new.shape == (d, d)
+    assert np.isfinite(float(piv)) and float(piv) > tol
+    _, bad = smw_block_update(j_inv, v.at[0, 0].set(jnp.nan), 0.9,
+                              with_pivot=True)
+    assert not bool(bad >= tol)
+
+
+def test_chaos_spec_parsing():
+    plan = chaos.parse_chaos_spec("grad_nan@4, factor_inf@7:12x48")
+    assert plan and len(plan.injections) == 2
+    assert plan.injections[0] == chaos.Injection("grad_nan", 4)
+    assert plan.injections[1].bucket == "12x48"
+    assert not chaos.parse_chaos_spec("")
+    with pytest.raises(ValueError, match="unknown chaos site"):
+        chaos.parse_chaos_spec("gamma_ray@3")
+    with pytest.raises(ValueError, match="site@step"):
+        chaos.parse_chaos_spec("grad_nan")
