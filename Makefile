@@ -1,5 +1,6 @@
 # Single verification gate (ROADMAP.md tier-1 + launcher smokes).
-.PHONY: verify verify-dist verify-chaos chaos test lint bench-step-time
+.PHONY: verify verify-dist verify-chaos verify-elastic chaos test lint \
+	bench-step-time bench-failover
 
 verify:
 	bash scripts/verify.sh
@@ -12,6 +13,11 @@ verify-dist:
 # corruption/rollback tests, and a --chaos train smoke (DESIGN.md §14)
 verify-chaos:
 	bash scripts/verify.sh chaos
+
+# host-fault slice (nightly CI): resilience tests plus kill-shard and
+# delay-shard --elastic chaos smokes through the remapped step (§15)
+verify-elastic:
+	bash scripts/verify.sh elastic
 
 # quick interactive chaos run: inject NaN grads + Inf factors mid-train
 # with the sentinel on; must end with a finite loss and quarantine trips
@@ -32,3 +38,6 @@ lint:
 
 bench-step-time:
 	PYTHONPATH=src python -m benchmarks.step_time
+
+bench-failover:
+	PYTHONPATH=src python -m benchmarks.failover

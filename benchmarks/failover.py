@@ -1,0 +1,269 @@
+"""Elastic failover benchmark (DESIGN.md §15) -> BENCH_failover.json.
+
+Three measurements on the reduced dist config over fake host devices:
+
+* ``elastic.overhead_mean`` — steady-state cost of ``--elastic`` with
+  every worker live: the elastic chunk driver (supervisor EWMA
+  bookkeeping, retry wrapper, donate=False runner) vs the plain donated
+  chunk loop.  The all-live mask collapses to the static program
+  (``collectives.effective_live``), so the jitted step is IDENTICAL —
+  this ratio isolates the host-side driver + no-donation cost, and the
+  perf gate bounds it.
+* ``remap.latency_s`` — declare-dead to first step back: host-side state
+  surgery (``quarantine_orphans``) + the runner rebuild under the
+  survivor mask (the failover recompile) + the first chunk dispatch on
+  the remapped owner map.  Dominated by the recompile; absolute seconds,
+  reported but not gated (compile times are host-dependent).
+* ``recovery.steps_to_reconverge`` — after ``kill_shard`` at step K, how
+  many steps until the faulted run's loss re-enters the clean run's
+  trajectory (loss <= clean loss at the same step * (1 + tol)).  The
+  quarantined bucket trains first-order (identity banks) until fresh
+  windows rebuild its factors, so this measures the cost of losing one
+  owner, not of losing the run.
+
+  PYTHONPATH=src python -m benchmarks.failover
+  PYTHONPATH=src python -m benchmarks.failover --quick --out BENCH.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+# the dist workload needs fake host devices; force BEFORE jax initializes
+if "--xla_force_host_platform_device_count" \
+        not in os.environ.get("XLA_FLAGS", ""):
+    _n = 8
+    for _i, _a in enumerate(sys.argv):
+        try:
+            if _a == "--world":
+                _n = int(sys.argv[_i + 1])
+            elif _a.startswith("--world="):
+                _n = int(_a.split("=", 1)[1])
+        except (ValueError, IndexError):
+            pass
+    os.environ["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={_n} "
+        + os.environ.get("XLA_FLAGS", ""))
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit
+from repro.configs import registry
+from repro.core import firstorder
+from repro.core.mkor import MKORConfig, mkor
+from repro.data import pipeline
+from repro.launch import mesh as mesh_lib
+from repro.models import model as model_lib
+from repro.sharding import collectives
+from repro.training import chaos as chaos_lib
+from repro.training import loop as train_lib
+from repro.training import resilience
+
+ARCH = "bert-large"
+INV_FREQ = 3
+
+
+class Workload:
+    """One dist training setup; runners are cached per (live, donate) so
+    repeated elastic_train calls reuse the compiled executable."""
+
+    def __init__(self, args):
+        self.cfg = registry.get_config(ARCH).reduced(
+            d_model=args.d_model, d_ff=2 * args.d_model,
+            n_heads=2, n_kv_heads=2)
+        self.world = args.world
+        self.mesh = mesh_lib.make_host_mesh(n_data=self.world)
+        dist = collectives.dist_axes(self.mesh,
+                                     mesh_lib.mesh_axes(self.mesh))
+        self.mcfg = MKORConfig(inv_freq=INV_FREQ, dist=dist,
+                               staleness=args.staleness)
+        self.ds = pipeline.make_dataset(self.cfg, global_batch=args.batch,
+                                        seq_len=args.seq)
+        self._runners = {}
+
+    def fresh_state(self):
+        params = model_lib.init_params(jax.random.PRNGKey(0), self.cfg)
+        opt = self.optimizer(None)
+        return params, opt.init(params)
+
+    def optimizer(self, live):
+        import dataclasses
+        mcfg = dataclasses.replace(self.mcfg, live=live)
+        return mkor(firstorder.lamb(1e-3), mcfg)
+
+    def runner(self, live, donate):
+        key = (live, donate)
+        if key not in self._runners:
+            sf = train_lib.make_dist_train_step(
+                self.cfg, self.optimizer(live), self.mesh)
+            self._runners[key] = train_lib.make_chunk_runner(
+                sf, donate=donate)
+        return self._runners[key]
+
+    def make_batch(self, step):
+        return pipeline.make_batch(self.ds, step)
+
+    def stacked(self, lo, hi):
+        return train_lib.stack_batches(
+            [self.make_batch(s) for s in range(lo, hi)])
+
+
+# --------------------------------------------------------------------- #
+# steady-state overhead: plain donated loop vs elastic driver, all live
+# --------------------------------------------------------------------- #
+def plain_total_s(w: Workload, steps, chunk):
+    params, state = w.fresh_state()
+    runner = w.runner(None, donate=True)
+    params, state, m = runner(params, state, w.stacked(0, chunk))
+    jax.block_until_ready(m)                       # compile, untimed
+    t0 = time.perf_counter()
+    for lo in range(chunk, steps, chunk):
+        params, state, m = runner(params, state,
+                                  w.stacked(lo, lo + chunk))
+    jax.device_get(m)
+    return time.perf_counter() - t0
+
+
+def elastic_total_s(w: Workload, steps, chunk):
+    factory = lambda live: w.runner(live, donate=False)
+    params, state = w.fresh_state()
+    sup = resilience.ElasticSupervisor(w.world)
+    params, state, _, _ = resilience.elastic_train(   # compile, untimed
+        factory, params, state, make_batch=w.make_batch,
+        stack_batches=train_lib.stack_batches, start=0, steps=chunk,
+        chunk=chunk, supervisor=sup)
+    t0 = time.perf_counter()
+    resilience.elastic_train(
+        factory, params, state, make_batch=w.make_batch,
+        stack_batches=train_lib.stack_batches, start=chunk,
+        steps=steps - chunk, chunk=chunk, supervisor=sup)
+    return time.perf_counter() - t0
+
+
+def steady_state(w: Workload, args):
+    # min over repeats: noise-floor estimate on a contended host
+    plain = min(plain_total_s(w, args.steps, args.chunk)
+                for _ in range(args.repeats))
+    elastic = min(elastic_total_s(w, args.steps, args.chunk)
+                  for _ in range(args.repeats))
+    n = args.steps - args.chunk
+    return {"plain_total_s": plain, "elastic_total_s": elastic,
+            "plain_step_ms": plain / n * 1e3,
+            "elastic_step_ms": elastic / n * 1e3,
+            "n_steps": n, "overhead_mean": elastic / plain}
+
+
+# --------------------------------------------------------------------- #
+# remap latency: declare-dead -> first step back on the survivor map
+# --------------------------------------------------------------------- #
+def remap_latency(w: Workload, args):
+    params, state = w.fresh_state()
+    runner = w.runner(None, donate=False)
+    params, state, m = runner(params, state, w.stacked(0, args.chunk))
+    jax.block_until_ready(m)
+    sup = resilience.ElasticSupervisor(w.world)
+    dead = w.world - 1
+    old_live = sup.live_mask()
+    t0 = time.perf_counter()
+    sup.declare_dead(dead, args.chunk)
+    state, orphans = resilience.quarantine_orphans(
+        state, params, w.mcfg, [dead], old_live)
+    remapped = w.runner(sup.live_mask(), donate=False)   # the recompile
+    params, state, m = remapped(
+        params, state, w.stacked(args.chunk, 2 * args.chunk))
+    jax.block_until_ready(m)
+    dt = time.perf_counter() - t0
+    return {"latency_s": dt, "orphaned_buckets": len(orphans),
+            "survivors": sup.n_live(), "world": w.world}
+
+
+# --------------------------------------------------------------------- #
+# recovery: steps back to the clean trajectory after kill_shard@K
+# --------------------------------------------------------------------- #
+def recovery(w: Workload, args, tol=0.02):
+    factory = lambda live: w.runner(live, donate=False)
+
+    def run(plan):
+        params, state = w.fresh_state()
+        sup = resilience.ElasticSupervisor(w.world)
+        _, _, history, _ = resilience.elastic_train(
+            factory, params, state, make_batch=w.make_batch,
+            stack_batches=train_lib.stack_batches, start=0,
+            steps=args.recovery_steps, chunk=args.chunk,
+            supervisor=sup, plan=plan, mcfg=w.mcfg)
+        return np.asarray([h["loss"] for h in history])
+
+    kill = args.kill_step
+    clean = run(None)
+    fault = run(chaos_lib.parse_chaos_spec(
+        f"kill_shard@{kill}:{w.world - 1}"))
+    back = None
+    for t in range(kill, len(fault)):
+        if fault[t] <= clean[t] * (1.0 + tol):
+            back = t - kill
+            break
+    capped = back is None
+    if capped:
+        back = len(fault) - kill
+    return {"kill_step": kill, "steps_to_reconverge": int(back),
+            "reconverged": not capped, "tol": tol,
+            "clean_final_loss": float(clean[-1]),
+            "fault_final_loss": float(fault[-1])}
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--world", type=int, default=8)
+    ap.add_argument("--d-model", type=int, default=64)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=16)
+    ap.add_argument("--staleness", type=int, default=1)
+    ap.add_argument("--chunk", type=int, default=2)
+    ap.add_argument("--steps", type=int, default=14,
+                    help="steady-state steps (first chunk is warmup)")
+    ap.add_argument("--recovery-steps", type=int, default=18)
+    ap.add_argument("--kill-step", type=int, default=6)
+    ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--quick", action="store_true",
+                    help="perf-gate mode: fewer steps/repeats")
+    ap.add_argument("--out", default="BENCH_failover.json")
+    args, _ = ap.parse_known_args()
+    if args.quick:
+        args.steps, args.recovery_steps = 10, 12
+        args.kill_step, args.repeats = 4, 2
+
+    w = Workload(args)
+    result = {"arch": w.cfg.name, "world": args.world,
+              "staleness": args.staleness, "quick": args.quick}
+
+    result["elastic"] = ss = steady_state(w, args)
+    emit([{"plain_ms": f"{ss['plain_step_ms']:.2f}",
+           "elastic_ms": f"{ss['elastic_step_ms']:.2f}",
+           "overhead_mean": f"{ss['overhead_mean']:.3f}"}],
+         "steady-state: elastic driver vs donated loop (all live)")
+
+    result["remap"] = rm = remap_latency(w, args)
+    emit([{"latency_s": f"{rm['latency_s']:.2f}",
+           "orphans": rm["orphaned_buckets"],
+           "survivors": f"{rm['survivors']}/{rm['world']}"}],
+         "remap latency: declare-dead -> first remapped step")
+
+    result["recovery"] = rc = recovery(w, args)
+    emit([{"kill_step": rc["kill_step"],
+           "steps_to_reconverge": rc["steps_to_reconverge"],
+           "reconverged": rc["reconverged"],
+           "fault_final_loss": f"{rc['fault_final_loss']:.4f}"}],
+         "recovery: kill_shard -> back inside the clean trajectory")
+
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(result, f, indent=1)
+        print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -5,14 +5,22 @@
 """
 from __future__ import annotations
 
+import os
 import sys
 import time
 import traceback
 
+# benchmarks.failover needs 8 fake host devices; force before any
+# benchmark module pulls in jax (same dance as repro.analysis.lint)
+if "--xla_force_host_platform_device_count" \
+        not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=8 "
+                               + os.environ.get("XLA_FLAGS", ""))
+
 from benchmarks import (breakdown, comm_volume, complexity, convergence,
-                        factor_bank, inversion_frequency, lr_sensitivity,
-                        memory, overlap, quantization, rank1_error, rank_r,
-                        roofline, step_time)
+                        factor_bank, failover, inversion_frequency,
+                        lr_sensitivity, memory, overlap, quantization,
+                        rank1_error, rank_r, roofline, step_time)
 
 ALL = {
     "complexity": complexity.main,              # Table 1
@@ -29,6 +37,7 @@ ALL = {
     "memory": memory.main,                      # Table 6 / §8.8
     "quantization": quantization.main,          # Lemma 3.2
     "roofline": roofline.main,                  # §Roofline (reads dry-runs)
+    "failover": failover.main,                  # elastic overhead + remap
 }
 
 

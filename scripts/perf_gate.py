@@ -1,12 +1,19 @@
 #!/usr/bin/env python
-"""Perf-regression gate: compare a fresh ``benchmarks.step_time`` JSON
-against the checked-in budget (``benchmarks/perf_budget.json``).
+"""Perf-regression gate: compare fresh benchmark JSONs against the
+checked-in budget (``benchmarks/perf_budget.json``).
 
 Usage (what scripts/verify.sh runs):
 
     python -m benchmarks.step_time --quick --out /tmp/bench.json
-    python scripts/perf_gate.py /tmp/bench.json \
+    python -m benchmarks.failover  --quick --out /tmp/failover.json
+    python scripts/perf_gate.py /tmp/bench.json /tmp/failover.json \
         --budget benchmarks/perf_budget.json [--hard]
+
+Multiple benchmark JSONs are shallow-merged (their top-level keys are
+disjoint by construction: step_time owns ``sync_vs_async``/... and
+failover owns ``elastic``/``remap``/``recovery``), so one budget file
+can bound metrics from several benchmarks and the missing-metric rule
+below still bites when a bench is skipped.
 
 The budget is a list of bounds on *ratio* metrics only (p95/p50 tail
 ratios, scan-vs-loop speedup) — absolute step times vary with the host
@@ -65,18 +72,22 @@ def check(bench: dict, budget: list[dict]) -> list[str]:
 
 def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("bench_json", help="fresh step_time --quick output")
+    ap.add_argument("bench_json", nargs="+",
+                    help="fresh benchmark --quick outputs (step_time, "
+                         "failover, ...); shallow-merged")
     ap.add_argument("--budget", default="benchmarks/perf_budget.json")
     ap.add_argument("--hard", action="store_true",
                     help="exit 1 on violation instead of warning")
     args = ap.parse_args()
 
-    with open(args.bench_json) as f:
-        bench = json.load(f)
+    bench = {}
+    for path in args.bench_json:
+        with open(path) as f:
+            bench.update(json.load(f))
     with open(args.budget) as f:
         budget = json.load(f)["bounds"]
 
-    print(f"perf gate: {args.bench_json} vs {args.budget}")
+    print(f"perf gate: {' + '.join(args.bench_json)} vs {args.budget}")
     violations = check(bench, budget)
     if not violations:
         print("perf gate: within budget")

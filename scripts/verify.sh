@@ -14,11 +14,13 @@
 #    production mesh, no arrays allocated);
 # 4. a 2-step launch/train.py smoke on a reduced config through the
 #    scan-chunk runner (real arrays, checkpointing path untouched);
-# 5. perf-regression gate: a fresh benchmarks/step_time.py --quick run
-#    compared against benchmarks/perf_budget.json (ratio metrics only —
-#    async flat-step p95/p50, stagger tail, scan speedup).  Violations
-#    WARN by default (quick benches on shared runners are noisy);
-#    PERF_GATE=hard (nightly CI) turns them into failures.
+# 5. perf-regression gate: fresh benchmarks/step_time.py --quick and
+#    benchmarks/failover.py --quick runs compared against
+#    benchmarks/perf_budget.json (ratio metrics only — async flat-step
+#    p95/p50, stagger tail, scan speedup, steady-state --elastic
+#    overhead).  Violations WARN by default (quick benches on shared
+#    runners are noisy); PERF_GATE=hard (nightly CI) turns them into
+#    failures.
 #
 #   scripts/verify.sh dist   (== make verify-dist) runs only the
 # distributed slice: the shard_map test file on 8 fake CPU devices plus a
@@ -29,6 +31,13 @@
 # corruption/rollback tests, and a --chaos train smoke that injects NaN
 # grads + Inf factors mid-run and must still finish with a finite loss
 # (DESIGN.md §14).
+#
+#   scripts/verify.sh elastic  (== make verify-elastic, nightly CI) runs
+# the host-fault slice (DESIGN.md §15): the resilience test file
+# (supervisor / backoff / quarantine / elastic resume) plus kill-shard
+# and delay-shard --elastic chaos smokes through the remapped
+# shard_map step — the killed run must quarantine the orphaned buckets,
+# remap owners over the survivors, and finish with a finite loss.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -60,6 +69,26 @@ if [[ "${1:-}" == "chaos" ]]; then
         --health --chaos "grad_nan@4,factor_inf@7"
 
     echo "== verify-chaos OK =="
+    exit 0
+fi
+
+if [[ "${1:-}" == "elastic" ]]; then
+    echo "== resilience tests (supervisor / backoff / quarantine / resume) =="
+    python -m pytest tests/test_resilience.py -q
+
+    echo "== kill-shard chaos smoke (shard 3 dies @4, 8 workers, elastic) =="
+    python -m repro.launch.train --arch bert-large --reduced --steps 12 \
+        --global-batch 8 --seq-len 16 --inv-freq 3 --log-every 4 \
+        --dist --dist-devices 8 --elastic --staleness 1 --health \
+        --chaos "kill_shard@4:3"
+
+    echo "== delay-shard chaos smoke (shard 2 straggles @3, demotion) =="
+    python -m repro.launch.train --arch bert-large --reduced --steps 10 \
+        --global-batch 8 --seq-len 16 --inv-freq 3 --log-every 4 \
+        --dist --dist-devices 8 --elastic \
+        --chaos "delay_shard@3:2"
+
+    echo "== verify-elastic OK =="
     exit 0
 fi
 
@@ -96,14 +125,16 @@ echo "== 2-step train smoke (bert-large reduced) =="
 python -m repro.launch.train --arch bert-large --reduced --steps 2 \
     --global-batch 2 --seq-len 16 --chunk 2 --log-every 1
 
-echo "== perf-regression gate (quick bench vs checked-in budget) =="
-PERF_JSON="$(mktemp -d)/bench_quick.json"
-python -m benchmarks.step_time --quick --out "$PERF_JSON"
+echo "== perf-regression gate (quick benches vs checked-in budget) =="
+PERF_DIR="$(mktemp -d)"
+python -m benchmarks.step_time --quick --out "$PERF_DIR/bench_quick.json"
+python -m benchmarks.failover --quick --out "$PERF_DIR/failover_quick.json"
 GATE_ARGS=""
 if [[ "${PERF_GATE:-}" == "hard" ]]; then
     GATE_ARGS="--hard"
 fi
-python scripts/perf_gate.py "$PERF_JSON" \
+python scripts/perf_gate.py "$PERF_DIR/bench_quick.json" \
+    "$PERF_DIR/failover_quick.json" \
     --budget benchmarks/perf_budget.json $GATE_ARGS
 
 echo "== verify OK =="

@@ -518,6 +518,83 @@ def check_health_gating(target) -> List[Diagnostic]:
 
 
 # --------------------------------------------------------------------- #
+# 7. elastic-remap: failover remap adds zero ungated factor traffic
+# --------------------------------------------------------------------- #
+# extra ungated bytes the remapped step may add over the static-owner
+# twin (trivial bookkeeping scalars only; a leaked bank payload is KB+)
+_ELASTIC_EXTRA_BYTES_SLACK = 1024
+
+
+def check_elastic_remap(target) -> List[Diagnostic]:
+    """The elastic-failover wire contract (DESIGN.md §15), statically:
+
+    1. no ungated collective ships a factor-shaped payload — the remap
+       redistributes ownership of the phase-gated inversion work; it must
+       never turn into a per-step bank broadcast (e.g. re-replicating the
+       dead owner's slices every step);
+    2. the remapped step adds ZERO ungated collectives and zero ungated
+       wire bytes over the static (fully-live) owner map — differentially
+       against ``meta["static_ungated_count"]`` /
+       ``static_ungated_bytes`` (trace.attach_static_owner_baseline).
+       Failover changes WHO inverts a slice, not what crosses the wire
+       per step.
+
+    Inactive (no diagnostics) unless the target carries a liveness mask
+    with at least one dead worker (``meta["live"]`` on custom fixtures,
+    else ``mkor_cfg.live``)."""
+    out: List[Diagnostic] = []
+    cfg = target.meta.get("mkor_cfg")
+    live = target.meta.get("live")
+    if live is None:
+        live = getattr(cfg, "live", None)
+    if live is None or all(live) or target.jaxpr is None:
+        return out
+    res = jaxpr_walk.walk(target.jaxpr)
+    factor_dims = set(target.meta.get("factor_dims", ()))
+    ungated = [c for c in res.collectives if not c.gated]
+
+    # 1. no ungated factor-shaped payloads
+    for c in ungated:
+        for shape in c.shapes:
+            if _is_factor_square(shape, factor_dims):
+                out.append(_d(
+                    "elastic-remap", "elastic.ungated-factor-bytes",
+                    Severity.ERROR,
+                    f"remapped step: ungated {c.prim} at {c.path} moves a "
+                    f"factor-shaped payload {list(shape)} every step — "
+                    f"failover redistributes the phase-gated inversion "
+                    f"work; it must not re-broadcast bank slices per "
+                    f"step", target,
+                    prim=c.prim, shape=list(shape), path=c.path))
+
+    # 2. differential: zero extra ungated collectives / bytes vs the
+    # static owner map
+    static_count = target.meta.get("static_ungated_count")
+    if static_count is not None and len(ungated) > static_count:
+        out.append(_d(
+            "elastic-remap", "elastic.extra-step-collectives",
+            Severity.ERROR,
+            f"remapped step runs {len(ungated)} ungated collectives vs "
+            f"{static_count} under the static owner map "
+            f"(+{len(ungated) - static_count}) — the liveness remap must "
+            f"not add per-step agreement rounds", target,
+            remap_count=len(ungated), static_count=static_count))
+    static_bytes = target.meta.get("static_ungated_bytes")
+    if static_bytes is not None:
+        total = sum(c.payload_bytes for c in ungated)
+        if total > static_bytes + _ELASTIC_EXTRA_BYTES_SLACK:
+            out.append(_d(
+                "elastic-remap", "elastic.extra-step-bytes",
+                Severity.ERROR,
+                f"remapped step moves {total} ungated collective bytes "
+                f"vs {static_bytes} under the static owner map "
+                f"(+{total - static_bytes}) — failover changes slice "
+                f"ownership, not per-step wire traffic", target,
+                remap_bytes=total, static_bytes=static_bytes))
+    return out
+
+
+# --------------------------------------------------------------------- #
 # Registry
 # --------------------------------------------------------------------- #
 CHECKERS: Dict[str, Callable] = {
@@ -527,6 +604,7 @@ CHECKERS: Dict[str, Callable] = {
     "donation": check_donation,
     "staleness-bound": check_staleness_bound,
     "health-gating": check_health_gating,
+    "elastic-remap": check_elastic_remap,
 }
 
 # which target kinds each checker runs on ("custom" targets opt in to
@@ -538,6 +616,7 @@ _APPLIES: Dict[str, tuple] = {
     "donation": ("chunk", "custom"),
     "staleness-bound": ("single", "dist", "custom"),
     "health-gating": ("single", "dist", "custom"),
+    "elastic-remap": ("dist", "custom"),
 }
 
 

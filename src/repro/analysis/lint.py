@@ -61,6 +61,13 @@ def main() -> int:
                          "sentinel twins (health-gating proves the "
                          "sentinel adds zero ungated wire traffic); "
                          "0 skips them")
+    ap.add_argument("--elastic", type=int, default=1,
+                    help="1 (default, needs --dist) also lints the "
+                         "elastic-remapped dist step — one worker dead, "
+                         "ownership re-split over survivors "
+                         "(elastic-remap proves the remap adds zero "
+                         "ungated factor bytes vs the static owner "
+                         "map); 0 skips it")
     ap.add_argument("--chunk", type=int, default=2)
     ap.add_argument("--steps", type=int, default=100)
     ap.add_argument("--compile", action="store_true",
@@ -93,7 +100,9 @@ def main() -> int:
           + (" + dist" if args.dist else "")
           + (f", sync + async staleness={args.staleness}"
              if args.staleness else "")
-          + (", + health twins" if args.health else "") + ") ...",
+          + (", + health twins" if args.health else "")
+          + (", + elastic remap twin"
+             if args.elastic and args.dist else "") + ") ...",
           flush=True)
     targets.append(trace.single_target(args.config, **common))
     targets.append(trace.chunk_target(args.config, chunk=args.chunk,
@@ -129,6 +138,16 @@ def main() -> int:
             # collectives/bytes over the health-off step
             targets.append(trace.attach_health_baseline(health_dist,
                                                         sync_dist))
+        if args.elastic:
+            # remap twin: last worker dead, ownership re-split over the
+            # survivors; elastic-remap proves the failover step adds
+            # zero ungated collectives/bytes vs the static owner map
+            live = (True,) * (args.dist_devices - 1) + (False,)
+            remap_dist = trace.dist_target(
+                args.config, world=args.dist_devices, live=live,
+                compile_hlo=args.compile, **common)
+            targets.append(trace.attach_static_owner_baseline(remap_dist,
+                                                              sync_dist))
 
     report = run_checkers(targets, names=args.checkers)
     print(report.render())

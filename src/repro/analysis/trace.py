@@ -125,10 +125,14 @@ def dist_target(arch: str, *, world: int = 8,
                 mkor_cfg: Optional[MKORConfig] = None,
                 global_batch: int = 8, seq_len: int = 16,
                 reduced: bool = False,
+                live: Optional[tuple] = None,
                 compile_hlo: bool = False) -> LintTarget:
     """The explicit-collective shard_map step (``--dist``).  Needs
     ``world`` available devices (the CLI forces fake host devices; tests
-    ride conftest's 8)."""
+    ride conftest's 8).  ``live`` traces the elastic-remapped step
+    (MKORConfig.live, DESIGN.md §15): dead workers own zero inversion
+    slices and ownership re-splits over the survivors — the
+    `elastic-remap` checker proves the remap adds zero ungated traffic."""
     cfg = registry.get_config(normalize_arch(arch))
     if reduced:
         cfg = cfg.reduced()
@@ -137,7 +141,8 @@ def dist_target(arch: str, *, world: int = 8,
                          f"of world {world}")
     mesh = mesh_lib.make_host_mesh(n_data=world)
     dist = collectives.dist_axes(mesh, mesh_lib.mesh_axes(mesh))
-    mkor_cfg = dataclasses.replace(mkor_cfg or MKORConfig(), dist=dist)
+    mkor_cfg = dataclasses.replace(mkor_cfg or MKORConfig(), dist=dist,
+                                   live=live)
     opt = _default_optimizer(mkor_cfg)
     params, opt_state = abstract_state(cfg, opt)
     batch = train_lib.train_batch_shapes(cfg, global_batch, seq_len)
@@ -148,11 +153,14 @@ def dist_target(arch: str, *, world: int = 8,
         compiled = step.lower(params, opt_state,
                               batch).compile().as_text()
     suffix = ("-async" if mkor_cfg.staleness else "") \
-        + ("-health" if mkor_cfg.health else "")
+        + ("-health" if mkor_cfg.health else "") \
+        + ("-remap" if live is not None and not all(live) else "")
+    meta = _target_meta(cfg, params, mkor_cfg, world=world)
+    if live is not None:
+        meta["live"] = tuple(bool(x) for x in live)
     return LintTarget(
         name=f"{cfg.name}/dist{suffix}", kind="dist", jaxpr=jaxpr,
-        compiled_text=compiled,
-        meta=_target_meta(cfg, params, mkor_cfg, world=world))
+        compiled_text=compiled, meta=meta)
 
 
 def chunk_target(arch: str, *, chunk: int = 2, steps: int = 100,
@@ -222,6 +230,27 @@ def attach_health_baseline(health_target: LintTarget,
         c.payload_bytes for c in ungated)
     health_target.meta["plain_ungated_count"] = len(ungated)
     return health_target
+
+
+def attach_static_owner_baseline(remap_target: LintTarget,
+                                 static_target: LintTarget) -> LintTarget:
+    """Record the fully-live twin's ungated per-step collective footprint
+    in the remapped target's meta (``static_ungated_bytes`` /
+    ``static_ungated_count``).
+
+    The `elastic-remap` checker uses this as its differential baseline:
+    failover re-splits the phase-gated inversion work over the survivors,
+    so the remapped step must add ZERO ungated collectives and zero
+    ungated wire bytes vs the static owner map (DESIGN.md §15).  Mutates
+    and returns ``remap_target``."""
+    from repro.analysis import jaxpr_walk
+
+    res = jaxpr_walk.walk(static_target.jaxpr)
+    ungated = [c for c in res.collectives if not c.gated]
+    remap_target.meta["static_ungated_bytes"] = sum(
+        c.payload_bytes for c in ungated)
+    remap_target.meta["static_ungated_count"] = len(ungated)
+    return remap_target
 
 
 def attach_sync_baseline(async_target: LintTarget,

@@ -21,6 +21,7 @@ from __future__ import annotations
 
 import os
 import re
+import time
 import zipfile
 import zlib
 from typing import Any, Dict, Optional, Tuple
@@ -163,7 +164,9 @@ def restore(directory: str, step: int, like: Any) -> Tuple[Any, Dict]:
     return jax.tree_util.tree_unflatten(treedef, leaves), manifest["metadata"]
 
 
-def restore_latest_valid(directory: str, like: Any
+def restore_latest_valid(directory: str, like: Any, *,
+                         io_retries: int = 2, io_backoff_s: float = 0.05,
+                         sleep=time.sleep
                          ) -> Optional[Tuple[Any, Dict, int]]:
     """Restore the newest checkpoint that passes validation.
 
@@ -173,17 +176,33 @@ def restore_latest_valid(directory: str, like: Any
     ``(tree, metadata, step)`` or ``None`` when no valid checkpoint
     exists.  A structure mismatch still raises ``ValueError``: an intact
     checkpoint for a different config should fail loudly, not roll back.
+
+    A *transient* IO failure (EINTR, a partial read racing a concurrent
+    re-save, NFS hiccup) surfaces through the same
+    :class:`CheckpointCorruptError` as real corruption — it must not
+    permanently skip a good checkpoint, so each candidate gets
+    ``io_retries`` bounded re-reads with exponential backoff
+    (``io_backoff_s * 2**attempt``) before the rollback declares it
+    corrupt.  True corruption just pays ``io_retries`` short sleeps
+    before rolling back — bounded, and rollback is already the rare
+    path.  ``sleep`` is injectable for tests.
     """
     if not os.path.isdir(directory):
         return None
     steps = sorted((int(m.group(1)) for d in os.listdir(directory)
                     if (m := re.fullmatch(r"step_(\d+)", d))), reverse=True)
     for step in steps:
-        try:
-            tree, meta = restore(directory, step, like)
-            return tree, meta, step
-        except CheckpointCorruptError as e:
-            print(f"checkpoint step {step} corrupt, rolling back: {e}")
+        for attempt in range(io_retries + 1):
+            try:
+                tree, meta = restore(directory, step, like)
+                return tree, meta, step
+            except CheckpointCorruptError as e:
+                if attempt < io_retries:
+                    sleep(io_backoff_s * (2 ** attempt))
+                    continue
+                print(f"checkpoint step {step} corrupt "
+                      f"(after {io_retries + 1} read attempts), "
+                      f"rolling back: {e}")
     return None
 
 

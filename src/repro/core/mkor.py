@@ -164,6 +164,16 @@ class MKORConfig:
     # all-gathered on that bucket's phase step.  None = single-program.
     # Only the bank layout shards; the per-layer oracle stays replicated.
     dist: Optional[Tuple[Tuple[str, int], ...]] = None
+    # Elastic liveness mask (DESIGN.md §15): static per-worker bools, one
+    # per dist worker.  Dead/demoted workers own zero inversion slices and
+    # every bucket's bank dim is re-split over the survivors
+    # (survivor-rank order, collectives.owner_shard/gather_shards).  The
+    # mask changes WHO inverts a slice, never the state tree or the wire
+    # bytes per step — failover is a recompile with a new mask plus
+    # host-side quarantine of the orphaned buckets
+    # (training/resilience.py).  None or all-True = the static schedule,
+    # bit-identical program.
+    live: Optional[Tuple[bool, ...]] = None
     # MKOR-H (§3.2)
     hybrid: bool = False
     hybrid_ema_fast: float = 0.9
@@ -809,7 +819,7 @@ def mkor(backend: GradientTransformation,
                                     (j.reshape((n,) + j.shape[ns + 1:]),
                                      v.reshape((n,) + v.shape[ns + 1:]),
                                      c.reshape((n,))),
-                                    cfg.dist, n)
+                                    cfg.dist, n, cfg.live)
                                 return new.reshape(j.shape)
 
                             l_new = sharded(l, g_ord, cnt_full)
@@ -870,7 +880,7 @@ def mkor(backend: GradientTransformation,
                                 _vmap_over_stack(stab_slice, 1)(jc), vc, 1),
                             (j.reshape((n,) + j.shape[ns + 1:]),
                              v.reshape((n,) + v.shape[ns + 1:])),
-                            cfg.dist, n)
+                            cfg.dist, n, cfg.live)
                         return new.reshape(j.shape)
 
                     return sharded(l, gv), sharded(r, av)
@@ -1027,7 +1037,7 @@ def mkor(backend: GradientTransformation,
                             (j.reshape((n,) + j.shape[ns + 1:]),
                              v.reshape((n,) + v.shape[ns + 1:]),
                              c.reshape((n,))),
-                            cfg.dist, n)
+                            cfg.dist, n, cfg.live)
                         return new.reshape(j.shape)
 
                     n_l = sharded(p_l, g_ord, cnt_full)

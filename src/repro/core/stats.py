@@ -301,15 +301,36 @@ def bucket_slices(bucket: FactorBucket) -> int:
     return n
 
 
-def bucket_owner_map(manifest: BucketManifest,
-                     world_size: int) -> Dict[str, Tuple[Tuple[int, int], ...]]:
+def live_mask(world_size: int,
+              live: Optional[Tuple[bool, ...]] = None) -> Tuple[bool, ...]:
+    """Normalize/validate a liveness mask for ``world_size`` workers.
+
+    ``None`` means fully live.  The mask is static (a Python tuple, part of
+    the trace-time config): failover is a *recompile*, not a runtime branch
+    — the remapped step is a different program with the same state tree
+    (DESIGN.md §15)."""
+    w = max(world_size, 1)
+    if live is None:
+        return (True,) * w
+    mask = tuple(bool(x) for x in live)
+    if len(mask) != w:
+        raise ValueError(
+            f"liveness mask has {len(mask)} entries for world {w}")
+    if not any(mask):
+        raise ValueError("liveness mask declares every worker dead")
+    return mask
+
+
+def bucket_owner_map(manifest: BucketManifest, world_size: int,
+                     live: Optional[Tuple[bool, ...]] = None,
+                     ) -> Dict[str, Tuple[Tuple[int, int], ...]]:
     """Manifest-driven owner map for the owner-sharded inversion schedule
     (DESIGN.md §10): ``{bucket_id: ((start, stop), ...)}`` — worker w owns
     the flattened (slot x stack) slices ``[start_w, stop_w)`` of every
     bucket's factor bank.
 
-    Slices are split into ``world_size`` contiguous chunks of equal size
-    ``ceil(slices / world_size)`` (clipped; trailing workers may own empty
+    Slices are split into contiguous chunks of equal size
+    ``ceil(slices / n_live)`` (clipped; trailing workers may own empty
     ranges) — the same rule as ``sharding/collectives.py: owner_chunk``,
     which the optimizer applies per runtime stat-signature group (in the
     common case one group spans the whole bucket, and this map IS the
@@ -319,14 +340,30 @@ def bucket_owner_map(manifest: BucketManifest,
     updated inverse slices are recombined in worker order
     (``collectives.gather_shards``).  Like the bucket phases, the map is a
     pure function of the (static) manifest + world size, so init- and
-    update-time rebuilds always agree."""
+    update-time rebuilds always agree.
+
+    ``live`` is the elastic-failover hook (DESIGN.md §15): dead or demoted
+    workers own the empty range ``(0, 0)`` and every bucket's slices are
+    re-split over the ``n_live`` survivors in survivor-rank order — the
+    remap moves ownership only, never state (factors are replicated), so
+    re-deriving the map under a new mask is the entire failover step at
+    this layer."""
     w = max(world_size, 1)
+    mask = live_mask(w, live)
+    n_live = sum(mask)
+    ranks = []
+    r = 0
+    for alive in mask:
+        ranks.append(r)
+        r += int(alive)
     out = {}
     for b in manifest:
         n = bucket_slices(b)
-        chunk = -(-n // w)
+        chunk = -(-n // n_live)
         out[b.bucket_id] = tuple(
-            (min(i * chunk, n), min((i + 1) * chunk, n)) for i in range(w))
+            (min(ranks[i] * chunk, n), min((ranks[i] + 1) * chunk, n))
+            if mask[i] else (0, 0)
+            for i in range(w))
     return out
 
 

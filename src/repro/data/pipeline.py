@@ -92,6 +92,59 @@ def synthetic_batches(cfg: SyntheticLMConfig, n_steps: int,
         yield make_batch(cfg, s)
 
 
+# --------------------------------------------------------------------- #
+# Resume cursor
+# --------------------------------------------------------------------- #
+@dataclass(frozen=True)
+class Cursor:
+    """Data-pipeline position persisted in the checkpoint manifest.
+
+    ``step`` is the NEXT unconsumed global batch index — a checkpoint
+    taken after consuming batches ``[0, k)`` carries ``step == k``, so a
+    resumed run draws batch ``k`` first and never double-trains a chunk
+    (nor skips one).  ``epoch``/``index`` are the epoch-relative view for
+    finite datasets (``steps_per_epoch > 0``); the synthetic stream is
+    effectively infinite, so there ``epoch == 0`` and ``index == step``.
+    """
+    step: int
+    epoch: int = 0
+    index: int = 0
+
+
+def cursor_for_step(step: int, steps_per_epoch: int = 0) -> Cursor:
+    """Cursor whose next unconsumed batch is global ``step``."""
+    step = int(step)
+    if steps_per_epoch and steps_per_epoch > 0:
+        return Cursor(step=step, epoch=step // steps_per_epoch,
+                      index=step % steps_per_epoch)
+    return Cursor(step=step, epoch=0, index=step)
+
+
+def cursor_metadata(cursor: Cursor) -> Dict[str, int]:
+    """Manifest-serializable form (plain ints; msgpack-safe)."""
+    return {"step": int(cursor.step), "epoch": int(cursor.epoch),
+            "index": int(cursor.index)}
+
+
+def cursor_from_metadata(meta: Optional[Dict],
+                         fallback_step: Optional[int] = None
+                         ) -> Optional[Cursor]:
+    """Recover the cursor from checkpoint metadata.
+
+    Pre-cursor checkpoints (no ``"cursor"`` key) fall back to
+    ``fallback_step`` — the legacy ``meta["step"] + 1`` inference the
+    launcher used before the cursor existed.  Returns ``None`` when
+    neither is available."""
+    cur = (meta or {}).get("cursor")
+    if isinstance(cur, dict) and "step" in cur:
+        return Cursor(step=int(cur["step"]),
+                      epoch=int(cur.get("epoch", 0)),
+                      index=int(cur.get("index", cur["step"])))
+    if fallback_step is not None:
+        return cursor_for_step(fallback_step)
+    return None
+
+
 def make_dataset(model_cfg, *, global_batch: int, seq_len: int, seed: int = 0,
                  n_shards: int = 1, shard_id: int = 0) -> SyntheticLMConfig:
     """Dataset config matched to a ModelConfig (handles multimodal prefix)."""

@@ -52,10 +52,14 @@ from repro.training import loop as train_lib
 
 def build_optimizer(name: str, lr, *, inv_freq: int = 10, rank: int = 1,
                     staleness: int = 0, use_pallas: bool = False,
-                    platform: str = "", dist=None, health: bool = False):
+                    platform: str = "", dist=None, health: bool = False,
+                    live=None):
     """Returns ``(optimizer, mkor_cfg)`` — ``mkor_cfg`` is None for the
     non-MKOR baselines (the chaos harness needs the config to locate
-    injection targets inside the state tree)."""
+    injection targets inside the state tree).  ``live`` is the elastic
+    liveness mask (DESIGN.md §15): rebuilding with a new mask remaps the
+    owner-sharded inversions over the survivors; the state tree is
+    mask-independent, so the carried opt state transfers unchanged."""
     # Pallas interpret mode is a testing device, not an execution strategy:
     # only a real TPU runs the compiled kernels (they use TPU memory
     # spaces), every other backend interprets.  Before this gate,
@@ -67,11 +71,12 @@ def build_optimizer(name: str, lr, *, inv_freq: int = 10, rank: int = 1,
         mcfg = MKORConfig(
             inv_freq=inv_freq, rank=rank, staleness=staleness,
             use_pallas=use_pallas, interpret=interpret, dist=dist,
-            health=health)
+            health=health, live=live)
         return mkor(backend, mcfg), mcfg
     if name == "mkor_h":
         mcfg = MKORConfig(inv_freq=inv_freq, rank=rank,
-                          staleness=staleness, dist=dist, health=health)
+                          staleness=staleness, dist=dist, health=health,
+                          live=live)
         return mkor_h(backend, mcfg), mcfg
     if name == "eva":
         return eva(backend, EvaConfig()), None
@@ -142,7 +147,21 @@ def main() -> None:
                          "'grad_nan@5,factor_inf@15[:bucket]' "
                          "(training/chaos.py; sites: "
                          "grad_nan, factor_inf, window_flip, "
-                         "payload_corrupt); MKOR optimizers only")
+                         "payload_corrupt); MKOR optimizers only. "
+                         "Host sites (kill_shard, delay_shard, "
+                         "drop_collective; site@step[:shard]) need "
+                         "--elastic")
+    ap.add_argument("--elastic", action="store_true",
+                    help="elastic fault tolerance (DESIGN.md §15; "
+                         "training/resilience.py): retry/backoff around "
+                         "dispatch, SIGTERM emergency checkpoint, "
+                         "straggler EWMAs with owner demotion, and "
+                         "kill-shard failover (owner remap + orphan "
+                         "quarantine); MKOR optimizers only")
+    ap.add_argument("--elastic-slow-factor", type=float, default=2.0,
+                    help="straggler policy: demote a shard whose "
+                         "step-time EWMA exceeds this multiple of the "
+                         "median (--elastic)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--ckpt-every", type=int, default=0)
@@ -163,19 +182,34 @@ def main() -> None:
                 f"of --dist-devices {args.dist_devices}")
         mesh = mesh_lib.make_host_mesh(n_data=args.dist_devices)
         dist = collectives.dist_axes(mesh, mesh_lib.mesh_axes(mesh))
-    opt, mcfg = build_optimizer(args.optimizer, lr, inv_freq=args.inv_freq,
-                                rank=args.rank, staleness=args.staleness,
-                                use_pallas=args.use_pallas, dist=dist,
-                                health=args.health)
-    if args.health and mcfg is None:
-        raise SystemExit("--health needs an MKOR optimizer")
+    plan = None
     if args.chaos:
         from repro.training import chaos as chaos_lib
-        if mcfg is None:
-            raise SystemExit("--chaos needs an MKOR optimizer (the "
-                             "injection sites live in MKOR state)")
-        opt = chaos_lib.chaotic(opt, chaos_lib.parse_chaos_spec(args.chaos),
-                                mcfg)
+        plan = chaos_lib.parse_chaos_spec(args.chaos)
+        if plan.host_faults and not args.elastic:
+            raise SystemExit("host chaos sites (kill_shard/delay_shard/"
+                             "drop_collective) need --elastic")
+
+    def make_optimizer(live=None):
+        """(optimizer, mkor_cfg) for a liveness mask — the elastic remap
+        rebuild path; the state tree is mask-independent."""
+        opt_l, mcfg_l = build_optimizer(
+            args.optimizer, lr, inv_freq=args.inv_freq, rank=args.rank,
+            staleness=args.staleness, use_pallas=args.use_pallas,
+            dist=dist, health=args.health, live=live)
+        if plan is not None and plan.injections:
+            if mcfg_l is None:
+                raise SystemExit("--chaos needs an MKOR optimizer (the "
+                                 "injection sites live in MKOR state)")
+            opt_l = chaos_lib.chaotic(opt_l, plan, mcfg_l)
+        return opt_l, mcfg_l
+
+    opt, mcfg = make_optimizer()
+    if args.health and mcfg is None:
+        raise SystemExit("--health needs an MKOR optimizer")
+    if args.elastic and mcfg is None:
+        raise SystemExit("--elastic needs an MKOR optimizer (failover "
+                         "quarantines MKOR factor state)")
 
     params = model_lib.init_params(jax.random.PRNGKey(args.seed), cfg)
     n_params = model_lib.param_count(params)
@@ -186,24 +220,45 @@ def main() -> None:
 
     ds = pipeline.make_dataset(cfg, global_batch=args.global_batch,
                                seq_len=args.seq_len, seed=args.seed)
-    if args.dist:
-        step_fn = train_lib.make_dist_train_step(cfg, opt, mesh)
-    else:
-        step_fn = train_lib.make_train_step(cfg, opt)
-    runner = train_lib.make_chunk_runner(step_fn)
+
+    def make_runner(live=None):
+        """Chunk runner for a liveness mask — rebuilding with a new mask
+        is the failover recompile (same state tree, remapped owners).
+        Under --elastic the runner keeps its inputs (no donation): a
+        retried dispatch must be able to re-present the same buffers."""
+        opt_l, _ = make_optimizer(live)
+        if args.dist:
+            sf = train_lib.make_dist_train_step(cfg, opt_l, mesh)
+        else:
+            sf = train_lib.make_train_step(cfg, opt_l)
+        return train_lib.make_chunk_runner(sf, donate=not args.elastic)
+
+    runner = make_runner()
     opt_state = opt.init(params)
 
     start = 0
     if args.ckpt_dir:
         # newest VALID checkpoint: a crash mid-save (or corruption caught
         # by the manifest CRCs) rolls back to the previous one instead of
-        # killing the restart (DESIGN.md §14)
+        # killing the restart (DESIGN.md §14).  The state tree is
+        # replicated (world-independent), so a W-way owner-sharded
+        # checkpoint restores into this run's W'-way world as-is: owner
+        # maps re-derive at trace time (elastic resume, DESIGN.md §15).
         restored = checkpointing.restore_latest_valid(
             args.ckpt_dir, (params, opt_state))
         if restored is not None:
             (params, opt_state), meta, latest = restored
-            start = int(meta.get("step", latest)) + 1
-            print(f"restored checkpoint step {latest}")
+            cur = pipeline.cursor_from_metadata(
+                meta, fallback_step=int(meta.get("step", latest)) + 1)
+            start = cur.step
+            from_world = meta.get("world")
+            note = ""
+            if from_world and from_world != (args.dist_devices
+                                             if args.dist else 1):
+                note = (f"; elastic resume from world {from_world} into "
+                        f"{args.dist_devices if args.dist else 1}")
+            print(f"restored checkpoint step {latest} "
+                  f"(data cursor {start}{note})")
 
     def make_batch(step: int):
         batch = pipeline.make_batch(ds, step)
@@ -212,39 +267,73 @@ def main() -> None:
                 cfg, args.global_batch, step, args.seed)
         return batch
 
+    def save_ckpt(next_step: int, p, s, extra=None):
+        # metadata carries the data cursor (next UNconsumed batch), so a
+        # resumed run never replays a chunk it already trained on
+        meta = {"step": next_step - 1,
+                "world": args.dist_devices if args.dist else 1,
+                "cursor": pipeline.cursor_metadata(
+                    pipeline.cursor_for_step(next_step))}
+        meta.update(extra or {})
+        checkpointing.save(args.ckpt_dir, next_step - 1, (p, s), meta)
+
     history = []
     t0 = time.time()
-    i = start
-    # at most two distinct chunk lengths (full + one trailing partial), so
-    # the runner compiles at most two traces (train_lib.chunk_schedule)
-    for n in train_lib.chunk_schedule(args.steps - start, args.chunk):
-        stacked = train_lib.stack_batches([make_batch(i + k)
-                                           for k in range(n)])
-        params, opt_state, metrics = runner(params, opt_state, stacked)
-        metrics = jax.device_get(metrics)
-        wall = time.time() - t0
-        for k in range(n):
-            step = i + k
-            if step % args.log_every == 0 or step == args.steps - 1:
-                m = {key: float(v[k]) for key, v in metrics.items()}
-                m["step"] = step
-                m["wall_s"] = wall
-                history.append(m)
-                print(f"step {step:5d} loss={m['loss']:.4f} "
-                      f"gnorm={m['grad_norm']:.3f} ({m['wall_s']:.1f}s)")
-        prev, i = i, i + n
-        if args.ckpt_dir and args.ckpt_every and i < args.steps \
-                and (i // args.ckpt_every) > (prev // args.ckpt_every):
-            checkpointing.save(args.ckpt_dir, i - 1, (params, opt_state),
-                               {"step": i - 1,
-                                "loss": float(metrics["loss"][n - 1])})
-    if args.ckpt_dir:
-        checkpointing.save(args.ckpt_dir, args.steps - 1,
-                           (params, opt_state), {"step": args.steps - 1})
+
+    def log_step(step: int, m, force=False):
+        if step % args.log_every == 0 or step == args.steps - 1 or force:
+            m = dict(m)
+            m["step"] = step
+            m.setdefault("wall_s", time.time() - t0)
+            history.append(m)
+            print(f"step {step:5d} loss={m['loss']:.4f} "
+                  f"gnorm={m['grad_norm']:.3f} ({m['wall_s']:.1f}s)")
+
+    preempted = False
+    if args.elastic:
+        from repro.training import resilience
+        world = args.dist_devices if args.dist else 1
+        supervisor = resilience.ElasticSupervisor(
+            world=world,
+            monitor=resilience.StragglerMonitor(
+                world, slow_factor=args.elastic_slow_factor))
+        with resilience.PreemptionGuard() as guard:
+            params, opt_state, _, preempted = resilience.elastic_train(
+                make_runner, params, opt_state,
+                make_batch=make_batch,
+                stack_batches=train_lib.stack_batches,
+                start=start, steps=args.steps - start, chunk=args.chunk,
+                supervisor=supervisor, plan=plan, mcfg=mcfg,
+                save=save_ckpt if args.ckpt_dir else None,
+                ckpt_every=args.ckpt_every, guard=guard,
+                on_metrics=lambda step, hi, m: log_step(step, m))
+    else:
+        i = start
+        # at most two distinct chunk lengths (full + one trailing
+        # partial), so the runner compiles at most two traces
+        # (train_lib.chunk_schedule)
+        for n in train_lib.chunk_schedule(args.steps - start, args.chunk):
+            stacked = train_lib.stack_batches([make_batch(i + k)
+                                               for k in range(n)])
+            params, opt_state, metrics = runner(params, opt_state, stacked)
+            metrics = jax.device_get(metrics)
+            for k in range(n):
+                log_step(i + k,
+                         {key: float(v[k]) for key, v in metrics.items()})
+            prev, i = i, i + n
+            if args.ckpt_dir and args.ckpt_every and i < args.steps \
+                    and (i // args.ckpt_every) > (prev // args.ckpt_every):
+                save_ckpt(i, params, opt_state,
+                          {"loss": float(metrics["loss"][n - 1])})
+    if args.ckpt_dir and not preempted:
+        save_ckpt(args.steps, params, opt_state)
     if args.log_json:
         os.makedirs(os.path.dirname(args.log_json) or ".", exist_ok=True)
         with open(args.log_json, "w") as f:
             json.dump(history, f, indent=1)
+    if preempted:
+        print("preempted: emergency checkpoint taken, exiting cleanly")
+        return
     final = history[-1]["loss"] if history else float("nan")
     print(f"done: final loss {final:.4f}")
     if not np.isfinite(final):

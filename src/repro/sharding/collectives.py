@@ -202,31 +202,96 @@ def all_reduce_mean_tree(tree, dist: DistSpec):
 
 
 # --------------------------------------------------------------------- #
-# Owner-sharded factor inversions (DESIGN.md §10)
+# Owner-sharded factor inversions (DESIGN.md §10, liveness §15)
 # --------------------------------------------------------------------- #
+LiveMask = Tuple[bool, ...]
+
+
+def normalize_live(dist: Optional[DistSpec],
+                   live: Optional[LiveMask]) -> LiveMask:
+    """Validated per-worker liveness tuple (``None`` → fully live).  The
+    mask is static config: remapping ownership after a death/demotion is a
+    recompile with a new mask, not a runtime branch (DESIGN.md §15)."""
+    w = world_size(dist)
+    if live is None:
+        return (True,) * w
+    mask = tuple(bool(x) for x in live)
+    if len(mask) != w:
+        raise ValueError(f"liveness mask has {len(mask)} entries "
+                         f"for world {w}")
+    if not any(mask):
+        raise ValueError("liveness mask declares every worker dead")
+    return mask
+
+
+def n_live(dist: Optional[DistSpec],
+           live: Optional[LiveMask] = None) -> int:
+    return sum(normalize_live(dist, live))
+
+
+def survivor_index(dist: DistSpec,
+                   live: Optional[LiveMask] = None) -> jnp.ndarray:
+    """This worker's rank among the live workers (dead workers get 0 — any
+    value they compute is masked out of the recombine).  The static mask
+    lowers to a constant gather on :func:`worker_index`."""
+    mask = normalize_live(dist, live)
+    ranks, r = [], 0
+    for alive in mask:
+        ranks.append(r if alive else 0)
+        r += int(alive)
+    return jnp.asarray(ranks, jnp.int32)[worker_index(dist)]
+
+
+def is_live(dist: DistSpec,
+            live: Optional[LiveMask] = None) -> jnp.ndarray:
+    """Per-worker liveness bit as a traced scalar (constant-indexed)."""
+    mask = normalize_live(dist, live)
+    return jnp.asarray(mask, jnp.bool_)[worker_index(dist)]
+
+
+def effective_live(dist: Optional[DistSpec],
+                   live: Optional[LiveMask]) -> Optional[LiveMask]:
+    """Degrade a fully-live mask to ``None`` so the all-live elastic step
+    traces to the IDENTICAL program as the static step — the steady-state
+    in-graph overhead of ``--elastic`` is exactly zero (perf-budget
+    contract, benchmarks/failover.py)."""
+    if live is None:
+        return None
+    mask = normalize_live(dist, live)
+    return None if all(mask) else mask
+
+
 def owner_chunk(n_slots: int, world: int) -> int:
-    """Bank-dim slots each worker owns (last chunks may be pure padding)."""
+    """Bank-dim slots each worker owns (last chunks may be pure padding).
+    Under a liveness mask ``world`` is the number of LIVE workers."""
     return -(-n_slots // max(world, 1))
 
 
-def owner_shard(x: jnp.ndarray, dist: DistSpec) -> jnp.ndarray:
+def owner_shard(x: jnp.ndarray, dist: DistSpec,
+                live: Optional[LiveMask] = None) -> jnp.ndarray:
     """Slice this worker's owned chunk of a bank-dim-leading array.
 
-    dim 0 is padded (zeros) to ``world * chunk`` so every worker slices a
+    dim 0 is padded (zeros) to ``n_live * chunk`` so every worker slices a
     static-size chunk; zero-padded slots are numerically inert through
     stabilize + SMW (zero factor, zero vector → zero update) and are
-    dropped again by :func:`gather_shards`."""
-    w = world_size(dist)
-    chunk = owner_chunk(x.shape[0], w)
-    padded = w * chunk
-    if padded != x.shape[0]:
+    dropped again by :func:`gather_shards`.  Under a liveness mask the
+    slices are re-split over the survivors (survivor-rank offsets); dead
+    workers slice offset 0 — whatever they compute never reaches the
+    recombined bank."""
+    live = effective_live(dist, live)
+    mask = normalize_live(dist, live)
+    nl = sum(mask)
+    chunk = owner_chunk(x.shape[0], nl)
+    padded = nl * chunk
+    if padded > x.shape[0]:
         x = jnp.pad(x, [(0, padded - x.shape[0])] + [(0, 0)] * (x.ndim - 1))
-    off = worker_index(dist) * chunk
+    off = (survivor_index(dist, mask) if live is not None
+           else worker_index(dist)) * chunk
     return lax.dynamic_slice_in_dim(x, off, chunk, axis=0)
 
 
-def owner_sharded_map(fn, arrays, dist: DistSpec,
-                      n_slots: int) -> jnp.ndarray:
+def owner_sharded_map(fn, arrays, dist: DistSpec, n_slots: int,
+                      live: Optional[LiveMask] = None) -> jnp.ndarray:
     """Owner-sharded map over dim 0: slice each array's owned chunk
     (:func:`owner_shard`), apply ``fn`` to the local chunks, and recombine
     the result's dim 0 (:func:`gather_shards`).
@@ -236,34 +301,47 @@ def owner_sharded_map(fn, arrays, dist: DistSpec,
     factor paths guarantee this: zero factor + zero vector, or a rank-r
     window count of 0, is a no-op).  This is the single home of the
     pad/slice/compute/recombine contract the optimizer's rank-1 and
-    block-rank-r inversions share (DESIGN.md §10/§11)."""
-    chunks = [owner_shard(x, dist) for x in arrays]
-    return gather_shards(fn(*chunks), dist, n_slots)
+    block-rank-r inversions share (DESIGN.md §10/§11).  A liveness mask
+    redistributes the chunks over the survivors without touching state
+    layout — the elastic-remap contract is that this changes WHO inverts a
+    slice, never what is shipped per step (DESIGN.md §15)."""
+    chunks = [owner_shard(x, dist, live) for x in arrays]
+    return gather_shards(fn(*chunks), dist, n_slots, live)
 
 
-def gather_shards(x: jnp.ndarray, dist: DistSpec, n_slots: int) -> jnp.ndarray:
+def gather_shards(x: jnp.ndarray, dist: DistSpec, n_slots: int,
+                  live: Optional[LiveMask] = None) -> jnp.ndarray:
     """Recombine the per-worker owned chunks into the full bank dim.
 
     Each worker's wire *payload* is its chunk — ~1/min(world, n_slots) of
     the bank bytes.  Two recombine strategies, chosen statically:
 
-    * ``all_gather`` (tiled, padded tail dropped) when the padded gather is
-      within ~2x of the useful bytes — the cheap case whenever the bank has
-      at least ~world/2 slices;
+    * ``all_gather`` (tiled, padded tail dropped) when every worker is live
+      and the padded gather is within ~2x of the useful bytes — the cheap
+      case whenever the bank has at least ~world/2 slices;
     * masked-psum otherwise (world >> n_slots, where a padded all-gather
-      would move world/n_slots times the bank): every worker scatters its
-      chunk into a zero buffer at its owned offset and one all-reduce sums
+      would move world/n_slots times the bank — or any worker is dead, so
+      worker order no longer equals chunk order): every live worker
+      scatters its chunk into a zero buffer at its survivor-rank offset,
+      dead workers contribute an all-zero buffer, and one all-reduce sums
       the disjoint contributions — bit-exact (each slot has exactly one
       non-zero contributor; adding zeros is exact in fp) and bounded at
       ring-all-reduce cost ~2x the bank bytes regardless of world size.
     """
-    w = world_size(dist)
+    live = effective_live(dist, live)
+    mask = normalize_live(dist, live)
+    nl = sum(mask)
     chunk = x.shape[0]
-    padded = w * chunk
-    if (w - 1) * chunk <= 2 * n_slots:
+    padded = nl * chunk
+    if live is None and (nl - 1) * chunk <= 2 * n_slots:
         full = lax.all_gather(x, _names(dist), axis=0, tiled=True)
         return full[:n_slots]
+    if live is not None:
+        x = jnp.where(is_live(dist, mask), x,
+                      jnp.zeros_like(x))
+        off = survivor_index(dist, mask) * chunk
+    else:
+        off = worker_index(dist) * chunk
     buf = jnp.zeros((padded,) + x.shape[1:], x.dtype)
-    off = worker_index(dist) * chunk
     buf = lax.dynamic_update_slice_in_dim(buf, x, off, axis=0)
     return lax.psum(buf[:n_slots], _names(dist))

@@ -29,8 +29,25 @@ Checkpoint faults are host-side files, not graph values:
 checkpoint directory the way a crash mid-save or disk corruption would,
 for `checkpointing.restore_latest_valid` to roll back past.
 
+Host-level faults (``HOST_SITES``) drive the elastic supervisor
+(training/resilience.py, DESIGN.md §15) instead of the in-graph sentinel
+— they are events the supervisor consumes at chunk boundaries, not
+tensor poisons:
+
+* ``kill_shard``      — declare a shard dead at step N: the supervisor
+                        remaps its owned bucket slices over survivors
+                        and quarantines the orphaned buckets.
+* ``delay_shard``     — inflate the shard's reported step time by the
+                        fault value (default 3x) from step N on, feeding
+                        the straggler EWMA until the demotion policy
+                        fires.
+* ``drop_collective`` — raise a simulated collective timeout on the step
+                        dispatch at step N (once), exercising the
+                        retry/backoff path.
+
 CLI: ``launch/train.py --chaos "grad_nan@5,factor_inf@15"`` (optionally
-``site@step:bucket_id``).
+``site@step:bucket_id``); host faults use ``site@step[:shard]``, e.g.
+``--chaos "kill_shard@4:3" --elastic``.
 """
 from __future__ import annotations
 
@@ -45,10 +62,12 @@ from repro.core.firstorder import GradientTransformation
 from repro.core.mkor import MKORConfig, manifest_for
 
 SITES = ("grad_nan", "factor_inf", "window_flip", "payload_corrupt")
+HOST_SITES = ("kill_shard", "delay_shard", "drop_collective")
 
 _DEFAULT_VALUE = {"grad_nan": float("nan"), "factor_inf": float("inf"),
                   "window_flip": float("nan"),
                   "payload_corrupt": float("nan")}
+_DELAY_FACTOR = 3.0                 # default delay_shard slowdown
 
 
 @dataclass(frozen=True)
@@ -64,30 +83,64 @@ class Injection:
 
 
 @dataclass(frozen=True)
+class HostFault:
+    """A supervisor-level event (HOST_SITES), fired at a step boundary by
+    training/resilience.py — never enters the jitted graph."""
+    site: str
+    step: int
+    shard: int = 0                  # target worker (drop_collective: n/a)
+    value: Optional[float] = None   # delay_shard slowdown factor
+
+    def factor(self) -> float:
+        return _DELAY_FACTOR if self.value is None else self.value
+
+
+@dataclass(frozen=True)
 class ChaosPlan:
     injections: Tuple[Injection, ...] = ()
+    host_faults: Tuple[HostFault, ...] = ()
 
     def __bool__(self) -> bool:
-        return bool(self.injections)
+        return bool(self.injections or self.host_faults)
+
+    def host_events(self, start: int, stop: int) -> Tuple[HostFault, ...]:
+        """Host faults with ``start <= step < stop``, in step order."""
+        return tuple(sorted((f for f in self.host_faults
+                             if start <= f.step < stop),
+                            key=lambda f: f.step))
 
 
 def parse_chaos_spec(spec: str) -> ChaosPlan:
-    """``"site@step[:bucket],site@step..."`` -> :class:`ChaosPlan`."""
-    inj = []
+    """``"site@step[:bucket],site@step..."`` -> :class:`ChaosPlan`.
+
+    In-graph sites take an optional ``:bucket_id``; host sites
+    (``kill_shard``/``delay_shard``/``drop_collective``) take an optional
+    ``:shard`` index instead."""
+    inj, host = [], []
     for item in filter(None, (s.strip() for s in spec.split(","))):
         try:
             site, rest = item.split("@", 1)
-            bucket = None
+            arg = None
             if ":" in rest:
-                rest, bucket = rest.split(":", 1)
+                rest, arg = rest.split(":", 1)
             step = int(rest)
         except ValueError:
             raise ValueError(f"bad chaos spec item {item!r} "
                              f"(want site@step[:bucket])") from None
-        if site not in SITES:
-            raise ValueError(f"unknown chaos site {site!r}; one of {SITES}")
-        inj.append(Injection(site=site, step=step, bucket=bucket))
-    return ChaosPlan(tuple(inj))
+        if site in HOST_SITES:
+            try:
+                shard = int(arg) if arg is not None else 0
+            except ValueError:
+                raise ValueError(f"bad chaos spec item {item!r} "
+                                 f"(host sites want site@step[:shard])"
+                                 ) from None
+            host.append(HostFault(site=site, step=step, shard=shard))
+        elif site in SITES:
+            inj.append(Injection(site=site, step=step, bucket=arg))
+        else:
+            raise ValueError(f"unknown chaos site {site!r}; one of "
+                             f"{SITES + HOST_SITES}")
+    return ChaosPlan(tuple(inj), tuple(host))
 
 
 def _poison_elem(x, hit, value):
@@ -161,8 +214,10 @@ def chaotic(optimizer: GradientTransformation, plan: ChaosPlan,
     tree) and rewrites grads/stats/state functionally before delegating —
     it composes unchanged with the single, dist, chunk-scan, and async
     (precompute) paths, because the poisoned values flow through exactly
-    the tensors a real fault would corrupt."""
-    if not plan:
+    the tensors a real fault would corrupt.  Host faults are NOT handled
+    here — a host-only plan returns the optimizer untouched; the elastic
+    supervisor consumes those events at chunk boundaries."""
+    if not plan.injections:
         return optimizer
 
     def update(grads, state, params=None, stats=None, loss=None, **kw):

@@ -1,0 +1,498 @@
+"""Elastic fault tolerance: the host-side supervisor (DESIGN.md §15).
+
+The dist step assumes a fixed, fully-live world — `stats.bucket_owner_map`
+statically pins each bucket's inversion slices to an owner shard, and one
+lost device would kill the run and orphan that bucket's second-order
+state.  This module is everything that happens OUTSIDE the jitted graph
+to make the run degrade gracefully instead:
+
+* :class:`RetryPolicy` / :func:`with_retries` — bounded attempts with
+  decorrelated-jitter backoff around the step dispatch and checkpoint IO.
+* :class:`PreemptionGuard` — SIGTERM/SIGINT handler; the training loop
+  polls it at chunk boundaries and takes a synchronized emergency
+  checkpoint before exiting cleanly.
+* :class:`StragglerMonitor` — per-shard step-time EWMAs with a slow-shard
+  policy (log + demote the straggler's owned buckets to survivors).
+* :class:`ElasticSupervisor` — the failover state machine
+  (live → suspect → dead → remapped → recovered) that owns the liveness
+  mask.  Declaring a shard dead is a *recompile*: the step function is
+  rebuilt with ``MKORConfig.live`` excluding the dead worker (ownership
+  re-splits over survivors, collectives.owner_shard/gather_shards), and
+  :func:`quarantine_orphans` performs the host-side state surgery — the
+  orphaned buckets' inverse banks reset to identity (the PR-8 first-order
+  passthrough), their ring windows zero, and their health cool-down arms,
+  so fresh stat windows rebuild the factors.  Under staleness=1 the dead
+  owner's pending inversion is discarded (pending banks reset too), never
+  promoted.
+* :func:`elastic_train` — the chunk-driver `launch/train.py --elastic`
+  runs: splits the chunk schedule at host-fault boundaries
+  (training/chaos.py ``kill_shard``/``delay_shard``/``drop_collective``),
+  wraps dispatch in retries, polls the preemption guard, and persists the
+  data cursor with every checkpoint.
+
+Elastic resume (W → W′) needs no state surgery at all: params and
+optimizer state are replicated across data-parallel workers — only the
+inversion *work* is owner-sharded — so the state tree is W-independent
+and a W-way checkpoint restores into any W′-way world; the owner maps
+and bucket slices are re-derived at trace time from (manifest, W′, live).
+The launcher only re-validates batch divisibility and resumes the data
+cursor.
+"""
+from __future__ import annotations
+
+import random
+import signal
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import stats as statlib
+from repro.core.mkor import MKORConfig, _identity_like, manifest_for
+
+# failover state machine (DESIGN.md §15)
+LIVE = "live"          # healthy, owns its slice ranges
+SUSPECT = "suspect"    # straggling: EWMA over threshold, not yet demoted
+DEAD = "dead"          # declared lost: owns nothing, orphans quarantined
+DEMOTED = "demoted"    # alive but slow: owns nothing, still computes grads
+STATUSES = (LIVE, SUSPECT, DEAD, DEMOTED)
+
+
+class Preempted(Exception):
+    """Raised (or returned as a flag) when SIGTERM interrupted training."""
+
+
+class CollectiveDropped(RuntimeError):
+    """A (simulated) collective timeout — the retryable dispatch failure
+    the chaos ``drop_collective`` site raises."""
+
+
+# --------------------------------------------------------------------- #
+# Retry / backoff
+# --------------------------------------------------------------------- #
+@dataclass(frozen=True)
+class RetryPolicy:
+    """Bounded retries with decorrelated-jitter backoff.
+
+    Sleep_k ~ Uniform(base_s, 3 * sleep_{k-1}) clipped to cap_s — the
+    AWS-style decorrelated jitter: retries spread out instead of
+    synchronizing across workers, and the expected backoff still grows
+    geometrically.  ``seed`` makes the schedule deterministic for tests
+    and chaos runs."""
+    max_attempts: int = 3
+    base_s: float = 0.05
+    cap_s: float = 2.0
+    seed: int = 0
+
+    def sleeps(self) -> List[float]:
+        """The full (max_attempts - 1)-entry backoff schedule."""
+        rng = random.Random(self.seed)
+        out, prev = [], self.base_s
+        for _ in range(max(self.max_attempts - 1, 0)):
+            prev = min(self.cap_s, rng.uniform(self.base_s, 3.0 * prev))
+            out.append(prev)
+        return out
+
+
+def with_retries(fn: Callable[[], Any], policy: RetryPolicy, *,
+                 retry_on: Tuple[type, ...] = (CollectiveDropped, OSError),
+                 on_retry: Optional[Callable[[int, BaseException], None]]
+                 = None,
+                 sleep: Callable[[float], None] = time.sleep) -> Any:
+    """Run ``fn`` with up to ``policy.max_attempts`` attempts.
+
+    Only ``retry_on`` exceptions are retried — anything else (a real
+    assertion, a ValueError from bad config) propagates immediately; so
+    does the last retryable failure once attempts are exhausted.
+    ``on_retry(attempt, exc)`` observes each retry (logging, chaos
+    bookkeeping); ``sleep`` is injectable for tests."""
+    sleeps = policy.sleeps()
+    for attempt in range(policy.max_attempts):
+        try:
+            return fn()
+        except retry_on as e:
+            if attempt >= policy.max_attempts - 1:
+                raise
+            if on_retry is not None:
+                on_retry(attempt, e)
+            sleep(sleeps[attempt])
+
+
+# --------------------------------------------------------------------- #
+# Preemption
+# --------------------------------------------------------------------- #
+class PreemptionGuard:
+    """Catch SIGTERM/SIGINT and convert them into a polled flag.
+
+    The jitted step cannot be interrupted mid-dispatch; instead the
+    training loop polls :meth:`triggered` at chunk boundaries and, when
+    set, takes a synchronized emergency checkpoint and exits cleanly
+    (exit code 0 — the scheduler sees a graceful shutdown, and the next
+    incarnation resumes from the emergency checkpoint + data cursor).
+    Use as a context manager; previous handlers are restored on exit."""
+
+    def __init__(self, signals: Sequence[int] = (signal.SIGTERM,)):
+        self._signals = tuple(signals)
+        self._previous: Dict[int, Any] = {}
+        self._hits: List[int] = []
+
+    def __enter__(self) -> "PreemptionGuard":
+        for sig in self._signals:
+            self._previous[sig] = signal.signal(sig, self._handle)
+        return self
+
+    def __exit__(self, *exc) -> None:
+        for sig, prev in self._previous.items():
+            signal.signal(sig, prev)
+        self._previous.clear()
+
+    def _handle(self, signum, frame) -> None:
+        self._hits.append(signum)
+
+    @property
+    def triggered(self) -> bool:
+        return bool(self._hits)
+
+
+# --------------------------------------------------------------------- #
+# Straggler awareness
+# --------------------------------------------------------------------- #
+class StragglerMonitor:
+    """Per-shard step-time EWMAs with a slow-shard policy.
+
+    A shard whose EWMA exceeds ``slow_factor`` times the median-of-EWMAs
+    for ``patience`` consecutive observations is flagged slow.  The
+    supervisor then logs it (SUSPECT) and — under the demotion policy —
+    moves its owned bucket slices to the survivors (DEMOTED: the shard
+    keeps computing gradients, it just stops owning inversion work).
+    ``min_obs`` observations are required before any verdict so compile
+    steps do not trip the policy."""
+
+    def __init__(self, world: int, *, alpha: float = 0.3,
+                 slow_factor: float = 2.0, patience: int = 2,
+                 min_obs: int = 3):
+        self.world = world
+        self.alpha = alpha
+        self.slow_factor = slow_factor
+        self.patience = patience
+        self.min_obs = min_obs
+        self.ewma = [0.0] * world
+        self.n_obs = 0
+        self._strikes = [0] * world
+
+    def observe(self, shard_times_s: Sequence[float]) -> List[int]:
+        """Feed one step's per-shard wall times; returns shards whose
+        strike count just reached ``patience`` (newly flagged slow)."""
+        if len(shard_times_s) != self.world:
+            raise ValueError(f"expected {self.world} shard times, got "
+                             f"{len(shard_times_s)}")
+        a = self.alpha
+        for i, t in enumerate(shard_times_s):
+            self.ewma[i] = t if self.n_obs == 0 \
+                else (1 - a) * self.ewma[i] + a * float(t)
+        self.n_obs += 1
+        if self.n_obs < self.min_obs:
+            return []
+        med = sorted(self.ewma)[self.world // 2]
+        flagged = []
+        for i, e in enumerate(self.ewma):
+            if med > 0 and e > self.slow_factor * med:
+                self._strikes[i] += 1
+                if self._strikes[i] == self.patience:
+                    flagged.append(i)
+            else:
+                self._strikes[i] = 0
+        return flagged
+
+
+# --------------------------------------------------------------------- #
+# Failover state machine
+# --------------------------------------------------------------------- #
+@dataclass
+class ElasticSupervisor:
+    """Owns worker statuses and the derived static liveness mask.
+
+    Transitions (DESIGN.md §15)::
+
+        live --observe slow--> suspect --patience--> demoted
+        live/suspect --declare_dead--> dead
+        demoted --recover--> live          (dead workers never recover
+                                            in-run; they rejoin via
+                                            elastic resume at restart)
+
+    The mask feeds ``MKORConfig.live``; any transition that changes it
+    must rebuild the step function (a recompile) and, for deaths, run
+    :func:`quarantine_orphans` on the optimizer state."""
+    world: int
+    retry: RetryPolicy = field(default_factory=RetryPolicy)
+    monitor: Optional[StragglerMonitor] = None
+    demote_stragglers: bool = True
+    status: List[str] = field(default_factory=list)
+    events: List[Dict[str, Any]] = field(default_factory=list)
+
+    def __post_init__(self):
+        if not self.status:
+            self.status = [LIVE] * self.world
+        if self.monitor is None:
+            self.monitor = StragglerMonitor(self.world)
+
+    def live_mask(self) -> Tuple[bool, ...]:
+        return tuple(s in (LIVE, SUSPECT) for s in self.status)
+
+    def n_live(self) -> int:
+        return sum(self.live_mask())
+
+    def _log(self, step: int, kind: str, shard: int) -> None:
+        self.events.append({"step": step, "event": kind, "shard": shard,
+                            "mask": self.live_mask()})
+        print(f"[elastic] step {step}: shard {shard} {kind} "
+              f"(live {self.n_live()}/{self.world})")
+
+    def declare_dead(self, shard: int, step: int = -1) -> bool:
+        """live/suspect/demoted → dead.  Returns True iff the liveness
+        mask changed (caller must remap + quarantine)."""
+        if self.status[shard] == DEAD:
+            return False
+        owned = self.status[shard] in (LIVE, SUSPECT)
+        self.status[shard] = DEAD
+        if self.n_live() == 0:
+            raise RuntimeError("elastic: every worker is dead")
+        self._log(step, "declared dead", shard)
+        return owned
+
+    def observe_step_times(self, shard_times_s: Sequence[float],
+                           step: int = -1) -> bool:
+        """Feed per-shard step times; applies the straggler policy.
+        Returns True iff the liveness mask changed (demotion)."""
+        changed = False
+        for shard in self.monitor.observe(shard_times_s):
+            if self.status[shard] != LIVE:
+                continue
+            if self.demote_stragglers:
+                self.status[shard] = DEMOTED
+                self._log(step, "demoted (straggler)", shard)
+                changed = True
+            else:
+                self.status[shard] = SUSPECT
+                self._log(step, "suspect (straggler)", shard)
+        return changed
+
+    def recover(self, shard: int, step: int = -1) -> bool:
+        """demoted/suspect → live (the shard caught back up)."""
+        if self.status[shard] not in (DEMOTED, SUSPECT):
+            return False
+        changed = self.status[shard] == DEMOTED
+        self.status[shard] = LIVE
+        self._log(step, "recovered", shard)
+        return changed
+
+
+# --------------------------------------------------------------------- #
+# Orphan quarantine (host-side state surgery)
+# --------------------------------------------------------------------- #
+def orphaned_buckets(tree, cfg: MKORConfig, dead: Sequence[int],
+                     old_live: Optional[Tuple[bool, ...]] = None
+                     ) -> List[str]:
+    """Bucket ids whose slices the ``dead`` workers owned under the OLD
+    map — the buckets whose in-flight inversion state is now suspect."""
+    manifest = manifest_for(tree, cfg)
+    owners = statlib.bucket_owner_map(manifest, _world_of(cfg), old_live)
+    out = []
+    for b in manifest:
+        ranges = owners[b.bucket_id]
+        if any(ranges[w][1] > ranges[w][0] for w in dead):
+            out.append(b.bucket_id)
+    return out
+
+
+def _world_of(cfg: MKORConfig) -> int:
+    from repro.sharding import collectives
+    return collectives.world_size(cfg.dist)
+
+
+def quarantine_orphans(opt_state, tree, cfg: MKORConfig,
+                       dead: Sequence[int],
+                       old_live: Optional[Tuple[bool, ...]] = None):
+    """Reset the orphaned buckets to the PR-8 quarantine state.
+
+    A dead owner may have died mid-collective: every bucket it owned
+    slices of gets the conservative reset — active AND pending inverse
+    banks to identity (exact first-order passthrough; under staleness=1
+    the lost owner's pending inversion is discarded, never promoted),
+    ring windows and write counts to zero, and the health cool-down armed
+    when the sentinel is on, so the bucket re-enters second-order only
+    after fresh stat windows rebuild its factors.  Healthy buckets are
+    untouched.  Pure host-side surgery on the (replicated) state tree;
+    returns ``(new_opt_state, orphaned_bucket_ids)``."""
+    orphans = orphaned_buckets(tree, cfg, dead, old_live)
+    if not orphans or "factor_banks" not in opt_state:
+        return opt_state, orphans
+
+    state = dict(opt_state)
+    banks = dict(state["factor_banks"])
+    for bid in orphans:
+        banks[bid] = {k: _identity_like(v) for k, v in banks[bid].items()}
+    state["factor_banks"] = banks
+    if "pending_banks" in state:
+        pend = dict(state["pending_banks"])
+        for bid in orphans:
+            pend[bid] = {k: _identity_like(v)
+                         for k, v in pend[bid].items()}
+        state["pending_banks"] = pend
+    if "stat_windows" in state:
+        wins = dict(state["stat_windows"])
+        for bid in orphans:
+            wins[bid] = jax.tree.map(jnp.zeros_like, wins[bid])
+        state["stat_windows"] = wins
+    if "health" in state:
+        health = dict(state["health"])
+        for bid in orphans:
+            h = health[bid]
+            health[bid] = {
+                "cooldown": jnp.asarray(cfg.health_cooldown, jnp.int32),
+                "trips": h["trips"] + 1}
+        state["health"] = health
+    return state, orphans
+
+
+# --------------------------------------------------------------------- #
+# Elastic chunk driver (launch/train.py --elastic)
+# --------------------------------------------------------------------- #
+def split_schedule(start: int, n_steps: int, chunk: int,
+                   event_steps: Sequence[int]) -> List[Tuple[int, int]]:
+    """Chunk spans ``[(lo, hi), ...)`` covering ``[start, start+n_steps)``
+    with boundaries forced at every event step, so host faults apply
+    between dispatches.  Spans never exceed ``chunk`` steps; without
+    events this reduces to the standard schedule (at most two trace
+    lengths — extra event-split lengths only appear in chaos runs)."""
+    stop = start + n_steps
+    cuts = sorted({s for s in event_steps if start < s < stop})
+    spans, lo = [], start
+    for cut in cuts + [stop]:
+        while lo < cut:
+            hi = min(lo + chunk, cut)
+            spans.append((lo, hi))
+            lo = hi
+    return spans
+
+
+def elastic_train(runner_factory: Callable, params, opt_state, *,
+                  make_batch: Callable[[int], Dict],
+                  stack_batches: Callable,
+                  start: int, steps: int, chunk: int,
+                  supervisor: ElasticSupervisor,
+                  plan=None,
+                  mcfg: Optional[MKORConfig] = None,
+                  save: Optional[Callable[[int, Any, Any, Dict], None]]
+                  = None,
+                  ckpt_every: int = 0,
+                  on_metrics: Optional[Callable[[int, int, Dict], None]]
+                  = None,
+                  guard: Optional[PreemptionGuard] = None,
+                  sleep: Callable[[float], None] = time.sleep):
+    """Run steps ``[start, start + steps)`` under the supervisor.
+
+    ``runner_factory(live_mask_or_None) -> runner`` rebuilds the chunk
+    runner for a liveness mask (the remap recompile); ``save(step, params,
+    opt_state, extra_meta)`` persists a checkpoint whose metadata carries
+    the data cursor (step = next unconsumed batch).  ``plan`` is a
+    training/chaos.py ChaosPlan whose HOST faults fire here, at the span
+    boundaries :func:`split_schedule` aligned to them:
+
+    * ``kill_shard``      → declare dead, quarantine orphans, remap;
+    * ``delay_shard``     → inflate that shard's reported step time until
+                            the straggler EWMA demotes it;
+    * ``drop_collective`` → one simulated dispatch failure, absorbed by
+                            the retry policy.
+
+    Returns ``(params, opt_state, history, preempted)``; ``preempted``
+    is True when the guard tripped and the emergency checkpoint (cursor
+    included) was taken — the caller exits 0.
+    """
+    runner = runner_factory(None)
+    host = list(plan.host_events(start, start + steps)) if plan else []
+    delays: Dict[int, float] = {}          # shard -> slowdown factor
+    drops: List[int] = []                  # steps with an armed drop
+    history: List[Dict[str, float]] = []
+    preempted = False
+
+    def apply_fault(f, at_step: int):
+        nonlocal runner, opt_state
+        if f.site == "kill_shard":
+            old_live = supervisor.live_mask()
+            if supervisor.declare_dead(f.shard, at_step):
+                opt_state, orphans = quarantine_orphans(
+                    opt_state, params, mcfg, [f.shard], old_live)
+                print(f"[elastic] step {at_step}: quarantined "
+                      f"{len(orphans)} orphaned bucket(s) "
+                      f"{orphans}; remapping owners over "
+                      f"{supervisor.n_live()} survivors")
+                runner = runner_factory(supervisor.live_mask())
+        elif f.site == "delay_shard":
+            delays[f.shard] = f.factor()
+            print(f"[elastic] step {at_step}: shard {f.shard} delayed "
+                  f"x{f.factor():g} (chaos)")
+        elif f.site == "drop_collective":
+            drops.append(f.step)
+        else:
+            raise ValueError(f"not a host fault site: {f.site}")
+
+    spans = split_schedule(start, steps, chunk, [f.step for f in host])
+    for lo, hi in spans:
+        if guard is not None and guard.triggered:
+            preempted = True
+            break
+        for f in [f for f in host if f.step <= lo]:
+            apply_fault(f, lo)
+        host = [f for f in host if f.step > lo]
+
+        stacked = stack_batches([make_batch(s) for s in range(lo, hi)])
+
+        armed = [s for s in drops if lo <= s < hi]
+
+        def attempt():
+            if armed:
+                armed.clear()
+                raise CollectiveDropped(
+                    f"chaos: collective dropped at step {lo}")
+            return runner(params, opt_state, stacked)
+
+        t0 = time.time()
+        params, opt_state, metrics = with_retries(
+            attempt, supervisor.retry, sleep=sleep,
+            on_retry=lambda a, e: print(
+                f"[elastic] step {lo}: dispatch failed ({e}); "
+                f"retry {a + 1}/{supervisor.retry.max_attempts - 1}"))
+        metrics = jax.device_get(metrics)
+        per_step = (time.time() - t0) / max(hi - lo, 1)
+
+        # per-shard step-time report: measured wall time per step on every
+        # shard (single-host emulation: identical), inflated for shards
+        # under a chaos delay — a real deployment feeds per-host
+        # heartbeat timings here instead
+        times = [per_step * delays.get(i, 1.0)
+                 for i in range(supervisor.world)]
+        for _ in range(lo, hi):
+            if supervisor.observe_step_times(times, lo):
+                runner = runner_factory(supervisor.live_mask())
+
+        for k in range(hi - lo):
+            m = {key: float(v[k]) for key, v in metrics.items()}
+            m["step"] = lo + k
+            history.append(m)
+            if on_metrics is not None:
+                on_metrics(lo + k, hi, m)
+
+        if save is not None and ckpt_every and hi < start + steps \
+                and (hi // ckpt_every) > (lo // ckpt_every):
+            save(hi, params, opt_state,
+                 {"loss": history[-1]["loss"]})
+
+    if preempted and save is not None:
+        at = history[-1]["step"] + 1 if history else start
+        save(at, params, opt_state, {"emergency": True})
+        print(f"[elastic] preemption: emergency checkpoint at cursor "
+              f"step {at}; exiting cleanly")
+    return params, opt_state, history, preempted

@@ -395,6 +395,89 @@ def test_lint_clean_on_bert_large_health_dist():
     assert any(not c.gated for c in res.collectives)
 
 
+# --------------------------------------------------------------------- #
+# Seeded violation 7: elastic failover wire contract (elastic-remap)
+# --------------------------------------------------------------------- #
+_ONE_DEAD = (True,) * 7 + (False,)
+
+
+def test_seeded_remap_factor_broadcast_trips_elastic_lint():
+    """A 'failover' that re-replicates the dead owner's (256, 256) bank
+    slices on an every-step psum raises elastic.ungated-factor-bytes —
+    the remap redistributes phase-gated work, it never ships banks per
+    step (the payload also trips comm-linearity; both fire)."""
+    mesh = Mesh(np.array(jax.devices()[:8]), ("d",))
+
+    def rebroadcast(bank):
+        def inner(b):
+            return jax.lax.psum(b, "d")                    # ungated O(d^2)
+        return shard_map.shard_map(
+            inner, mesh=mesh, in_specs=P(), out_specs=P())(bank)
+
+    target = trace.custom_target(
+        "fixture/remap-bank-psum", rebroadcast,
+        jax.ShapeDtypeStruct((256, 256), jnp.float32),
+        meta={"live": _ONE_DEAD, "factor_dims": {256}, "world": 8})
+    report = run_checkers([target])
+    assert report.by_code("elastic.ungated-factor-bytes")
+    assert report.exit_code() == 1
+    assert _error_checkers(report) == {"elastic-remap", "comm-linearity"}
+
+
+def test_seeded_remap_extra_collective_trips_elastic_lint():
+    """Differential check against the static-owner baseline: a remapped
+    step that adds an every-step liveness-agreement round (any new
+    ungated collective) raises elastic.extra-step-collectives; the
+    64-byte payload stays under the byte slack, so the count code fires
+    alone.  The fully-live twin of the same program is out of scope:
+    zero diagnostics."""
+    mesh = Mesh(np.array(jax.devices()[:8]), ("d",))
+
+    def liveness_round(flags):
+        def inner(f):
+            return jax.lax.psum(f, "d")    # cross-worker liveness vote
+        return shard_map.shard_map(
+            inner, mesh=mesh, in_specs=P(), out_specs=P())(flags)
+
+    args = (jax.ShapeDtypeStruct((16,), jnp.float32),)
+    target = trace.custom_target(
+        "fixture/remap-liveness-round", liveness_round, *args,
+        meta={"live": _ONE_DEAD, "static_ungated_count": 0,
+              "static_ungated_bytes": 0, "world": 8})
+    report = run_checkers([target])
+    assert report.by_code("elastic.extra-step-collectives")
+    assert report.exit_code() == 1
+    assert not report.by_code("elastic.extra-step-bytes")
+    assert _error_checkers(report) == {"elastic-remap"}
+
+    from repro.analysis.checkers import check_elastic_remap
+    live_twin = trace.custom_target(
+        "fixture/remap-all-live", liveness_round, *args,
+        meta={"live": (True,) * 8})
+    assert check_elastic_remap(live_twin) == []
+
+
+def test_lint_clean_on_bert_large_remap_dist():
+    """The real elastic-remapped dist step (one worker dead, owners
+    re-split over survivors) passes elastic-remap with the static-owner
+    baseline attached — non-vacuously: the mask really has a dead worker
+    and the baseline footprint is positive, so the zero-extra-traffic
+    claim of DESIGN.md §15 is compared against something."""
+    static_t = trace.dist_target("bert_large", world=8,
+                                 mkor_cfg=MKORConfig(inv_freq=10))
+    remap_t = trace.dist_target("bert_large", world=8, live=_ONE_DEAD,
+                                mkor_cfg=MKORConfig(inv_freq=10))
+    trace.attach_static_owner_baseline(remap_t, static_t)
+    report = run_checkers([remap_t], names=["elastic-remap"])
+    assert report.exit_code() == 0, report.render()
+    assert remap_t.name.endswith("-remap")
+    assert remap_t.meta["live"] == _ONE_DEAD
+    assert remap_t.meta["static_ungated_count"] > 0
+    assert remap_t.meta["static_ungated_bytes"] > 0
+    res = jaxpr_walk.walk(remap_t.jaxpr)
+    assert any(not c.gated for c in res.collectives)
+
+
 def test_lint_checker_subset(tiny_model_cfg):
     # --checkers narrowing: only the requested checker runs
     target = _chunk_fixture_target(tiny_model_cfg, False)

@@ -174,3 +174,74 @@ def test_restore_latest_valid_structure_mismatch_still_raises(tmp_path):
     with pytest.raises(ValueError, match="structure"):
         checkpointing.restore_latest_valid(str(tmp_path),
                                            {"z": jnp.ones((2,))})
+
+
+def test_restore_latest_valid_retries_transient_io(tmp_path):
+    """A transient read failure (here: the COMMITTED marker appearing a
+    beat late, as in a concurrent re-save) must be retried with backoff
+    instead of permanently rolling past a good checkpoint
+    (DESIGN.md §15 satellite)."""
+    import os
+    out = checkpointing.save(str(tmp_path), 5, _TREE, {"step": 5})
+    marker = os.path.join(out, "COMMITTED")
+    os.rename(marker, marker + ".inflight")      # transient: heals below
+    slept = []
+
+    def heal_then_sleep(seconds):
+        slept.append(seconds)
+        if len(slept) == 2:
+            os.rename(marker + ".inflight", marker)
+
+    got = checkpointing.restore_latest_valid(
+        str(tmp_path), _TREE, io_retries=3, io_backoff_s=0.01,
+        sleep=heal_then_sleep)
+    assert got is not None and got[2] == 5
+    assert slept == [0.01, 0.02]                 # exponential backoff
+
+
+def test_restore_latest_valid_bounded_attempts_on_real_corruption(tmp_path):
+    from repro.training import chaos
+    checkpointing.save(str(tmp_path), 2, _TREE)
+    chaos.corrupt_checkpoint(str(tmp_path), 2, mode="arrays")
+    slept = []
+    assert checkpointing.restore_latest_valid(
+        str(tmp_path), _TREE, io_retries=2, io_backoff_s=0.01,
+        sleep=slept.append) is None
+    assert len(slept) == 2                       # bounded, then rollback
+
+
+# --------------------------------------------------------------------- #
+# Data-pipeline cursor (elastic resume: no chunk is double-trained)
+# --------------------------------------------------------------------- #
+def test_cursor_roundtrips_through_checkpoint_metadata(tmp_path):
+    cur = pipeline.cursor_for_step(37, steps_per_epoch=10)
+    assert (cur.step, cur.epoch, cur.index) == (37, 3, 7)
+    checkpointing.save(str(tmp_path), 36, _TREE,
+                       {"step": 36, "cursor": pipeline.cursor_metadata(cur)})
+    _, meta = checkpointing.restore(str(tmp_path), 36, _TREE)
+    got = pipeline.cursor_from_metadata(meta)
+    assert (got.step, got.epoch, got.index) == (37, 3, 7)
+
+
+def test_cursor_legacy_metadata_falls_back_to_step():
+    # pre-cursor checkpoints only carry "step": resume at step + 1
+    cur = pipeline.cursor_from_metadata({"step": 9}, fallback_step=10)
+    assert cur.step == 10 and cur.epoch == 0
+    assert pipeline.cursor_from_metadata({}, fallback_step=None) is None
+
+
+def test_cursor_resume_does_not_replay_batches():
+    """Batches drawn after a cursor resume continue the stream exactly
+    where the checkpointed run left off."""
+    ds = _cfg(global_batch=4, seq_len=16)
+    want = [pipeline.make_batch(ds, s) for s in range(6)]
+    cur = pipeline.cursor_from_metadata(
+        {"cursor": pipeline.cursor_metadata(pipeline.cursor_for_step(3))})
+    got = [pipeline.make_batch(ds, s) for s in range(cur.step, 6)]
+    for w, g in zip(want[3:], got):
+        np.testing.assert_array_equal(np.asarray(w["tokens"]),
+                                      np.asarray(g["tokens"]))
+    # and none of the resumed batches repeat a consumed one
+    for w in want[:3]:
+        assert not np.array_equal(np.asarray(w["tokens"]),
+                                  np.asarray(got[0]["tokens"]))

@@ -8,6 +8,7 @@ import pytest
 from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
+from repro import checkpointing
 from repro.core import baseline_net, firstorder
 from repro.core import stats as statlib
 from repro.core.mkor import MKORConfig, manifest_for, mkor
@@ -414,6 +415,196 @@ def _dist_train_step_matches_single_device(cfg):
     assert float(m["loss"]) == pytest.approx(float(m_ref["loss"]),
                                              rel=1e-4)
     _assert_trees_close(p, p_ref, rtol=5e-4, atol=5e-5)
+
+
+# --------------------------------------------------------------------- #
+# Elastic fault tolerance (DESIGN.md §15): liveness, remap, resume
+# --------------------------------------------------------------------- #
+def test_bucket_owner_map_liveness_remaps_over_survivors():
+    params = baseline_net.init_autoencoder(jax.random.key(0), 96,
+                                           (48, 48, 12, 48))
+    manifest = manifest_for(params, MKORConfig(exclude=()))
+    for dead in ([3], [0, 7], [1, 2, 3]):
+        live = tuple(w not in dead for w in range(WORLD))
+        owners = statlib.bucket_owner_map(manifest, WORLD, live)
+        n_live = sum(live)
+        for b in manifest:
+            n = statlib.bucket_slices(b)
+            ranges = owners[b.bucket_id]
+            # dead workers own nothing; survivors cover every slice once
+            assert all(ranges[w] == (0, 0) for w in dead)
+            covered = [s for start, stop in ranges
+                       for s in range(start, stop)]
+            assert covered == list(range(n))
+            chunk = collectives.owner_chunk(n, n_live)
+            assert all(stop - start <= chunk for start, stop in ranges)
+
+
+def test_live_mask_validation():
+    assert statlib.live_mask(4, None) == (True,) * 4
+    with pytest.raises(ValueError, match="entries"):
+        statlib.live_mask(4, (True, False))
+    with pytest.raises(ValueError, match="dead"):
+        statlib.live_mask(2, (False, False))
+
+
+def test_owner_shard_gather_roundtrip_with_dead_worker():
+    """Remapped owner_shard + gather_shards is still the identity when a
+    worker is dead — survivors take over its slices and the masked psum
+    zeroes the dead worker's contribution."""
+    mesh = _mesh()
+    dist = (("data", WORLD),)
+    live = (True, True, True, False, True, True, True, False)
+    for n_slots in (3, 8, 11):
+        x = jnp.arange(n_slots * 4, dtype=jnp.float32).reshape(n_slots, 4)
+
+        def body(v):
+            mine = collectives.owner_shard(v, dist, live=live)
+            return collectives.gather_shards(2.0 * mine, dist,
+                                             v.shape[0], live=live)
+
+        out = jax.jit(shard_map(body, mesh=mesh, in_specs=(P(),),
+                                out_specs=P(), check_rep=False))(x)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(2.0 * x))
+
+
+def test_dist_remap_step_matches_fully_live(ae_params):
+    """The elastic-remapped step (one worker dead, owners re-split over
+    the survivors) computes the SAME update as the static owner map —
+    failover redistributes the inversion work, it never changes the
+    math (DESIGN.md §15)."""
+    steps = 5
+    mesh = _mesh()
+    dist = collectives.dist_axes(mesh, mesh_lib.mesh_axes(mesh))
+    common = dict(inv_freq=2, stagger=True, staleness=1, exclude=(),
+                  dist=dist)
+    live = (True, True, True, False, True, True, True, True)
+
+    outs = {}
+    for name, mask in (("static", None), ("remap", live)):
+        opt = mkor(firstorder.sgd(1e-2, momentum=0.9),
+                   MKORConfig(live=mask, **common))
+        step = train_lib.make_dist_step_fn(_grads_fn, opt, mesh,
+                                           ("data",),
+                                           stats_payload_dtype=None)
+        p, s = _copy(ae_params), opt.init(ae_params)
+        for i in range(steps):
+            p, s, _ = step(p, s, _batch(i))
+        outs[name] = (p, s)
+    _assert_trees_close(outs["remap"][0], outs["static"][0])
+    _assert_trees_close(outs["remap"][1], outs["static"][1])
+
+
+@pytest.mark.parametrize("new_world", [4, 1])
+def test_elastic_resume_into_smaller_world(tmp_path, ae_params,
+                                           new_world):
+    """W=8 owner-sharded run, checkpoint mid-training, restore into a
+    W'-way world and finish: the result must match the uninterrupted
+    single-device run (the state tree is replicated/world-independent;
+    owner maps re-derive at trace time) and the persisted data cursor
+    must hand back the first unconsumed batch."""
+    from repro.data import pipeline
+
+    steps, cut = 6, 3
+    common = dict(inv_freq=2, stagger=True, exclude=())
+    p_ref, s_ref, _ = _run_single(
+        mkor(firstorder.sgd(1e-2, momentum=0.9), MKORConfig(**common)),
+        ae_params, steps)
+
+    def dist_step_for(world):
+        mesh = _mesh(world)
+        dist = collectives.dist_axes(mesh, mesh_lib.mesh_axes(mesh))
+        opt = mkor(firstorder.sgd(1e-2, momentum=0.9),
+                   MKORConfig(dist=dist, **common))
+        return opt, train_lib.make_dist_step_fn(
+            _grads_fn, opt, mesh, ("data",), stats_payload_dtype=None)
+
+    # W=8 run to the cut, checkpoint with the data cursor
+    opt8, step8 = dist_step_for(8)
+    p, s = _copy(ae_params), opt8.init(ae_params)
+    for i in range(cut):
+        p, s, _ = step8(p, s, _batch(i))
+    checkpointing.save(
+        str(tmp_path), cut - 1, (p, s),
+        {"step": cut - 1, "world": 8,
+         "cursor": pipeline.cursor_metadata(
+             pipeline.cursor_for_step(cut))})
+
+    # restore into the W' world and finish
+    like = (ae_params, opt8.init(ae_params))
+    (p, s), meta, latest = checkpointing.restore_latest_valid(
+        str(tmp_path), like)
+    assert latest == cut - 1 and meta["world"] == 8
+    cur = pipeline.cursor_from_metadata(meta)
+    assert cur.step == cut                     # no chunk double-trained
+    if new_world == 1:
+        opt_n = mkor(firstorder.sgd(1e-2, momentum=0.9),
+                     MKORConfig(**common))
+        step_fn = jax.jit(lambda pp, ss, b: _apply_local(opt_n, pp, ss, b))
+        for i in range(cur.step, steps):
+            p, s, _ = step_fn(p, s, _batch(i))
+    else:
+        _, step_n = dist_step_for(new_world)
+        for i in range(cur.step, steps):
+            p, s, _ = step_n(p, s, _batch(i))
+    _assert_trees_close(p, p_ref)
+    _assert_trees_close(s, s_ref)
+
+
+def _apply_local(opt, params, state, batch):
+    loss, grads, stats = baseline_net.grads_and_full_stats(params, batch)
+    upd, state = opt.update(grads, state, params=params, stats=stats,
+                            loss=loss)
+    return firstorder.apply_updates(params, upd), state, {"loss": loss}
+
+
+@pytest.mark.slow   # two 30-step elastic runs + a remap recompile
+def test_kill_shard_recovery_slope_at_least_half_of_clean(ae_params):
+    """ISSUE 9 acceptance: after kill_shard the run must keep converging
+    — quarantined orphans train first-order until fresh windows rebuild
+    their factors, and the fitted log-loss slope of the faulted run's
+    tail is at least half the clean run's over the same steps."""
+    from repro.training import chaos as chaos_lib
+    from repro.training import resilience
+
+    steps, kill_at, tail = 30, 6, 12
+    mesh = _mesh()
+    dist = collectives.dist_axes(mesh, mesh_lib.mesh_axes(mesh))
+    common = dict(inv_freq=2, stagger=True, staleness=1, health=True,
+                  exclude=(), dist=dist)
+    mcfg = MKORConfig(**common)
+
+    def factory(live):
+        opt = mkor(firstorder.sgd(1e-2, momentum=0.9),
+                   MKORConfig(live=live, **common))
+        step = train_lib.make_dist_step_fn(_grads_fn, opt, mesh,
+                                           ("data",),
+                                           stats_payload_dtype=None)
+        return train_lib.make_chunk_runner(step, donate=False)
+
+    def run(plan):
+        opt = mkor(firstorder.sgd(1e-2, momentum=0.9), mcfg)
+        sup = resilience.ElasticSupervisor(WORLD)
+        _, _, hist, _ = resilience.elastic_train(
+            factory, _copy(ae_params), opt.init(ae_params),
+            make_batch=_batch, stack_batches=train_lib.stack_batches,
+            start=0, steps=steps, chunk=6, supervisor=sup,
+            plan=plan, mcfg=mcfg, sleep=lambda s: None)
+        return np.asarray([h["loss"] for h in hist])
+
+    clean = run(None)
+    faulted = run(chaos_lib.parse_chaos_spec(f"kill_shard@{kill_at}:3"))
+    assert np.isfinite(faulted).all()
+
+    def slope(losses):
+        y = np.log(np.maximum(np.asarray(losses, np.float64), 1e-30))
+        return float(np.polyfit(np.arange(len(y)), y, 1)[0])
+
+    clean_slope, fault_slope = slope(clean[tail:]), slope(faulted[tail:])
+    assert clean_slope < 0, "clean run is not converging; test is vacuous"
+    assert fault_slope <= 0.5 * clean_slope, \
+        (f"recovery slope {fault_slope:.4f}/step vs clean "
+         f"{clean_slope:.4f}/step")
 
 
 def test_dist_train_step_model_matches_single_device(tiny_model_cfg):

@@ -1,0 +1,323 @@
+"""Elastic fault tolerance (DESIGN.md §15): retry/backoff, preemption,
+straggler demotion, owner failover + orphan quarantine, the host-fault
+chaos plan, and the elastic chunk driver (training/resilience.py)."""
+import os
+import signal
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import baseline_net, firstorder
+from repro.core import stats as statlib
+from repro.core.mkor import MKORConfig, manifest_for, mkor
+from repro.training import chaos
+from repro.training import resilience as res
+
+
+def _batch(step, d_in=96, n=64):
+    rng = np.random.default_rng(step)
+    basis = np.random.default_rng(0).standard_normal((8, d_in)) / 3
+    x = (rng.standard_normal((n, 8)) @ basis).astype(np.float32)
+    return {"x": x, "y": x}
+
+
+# --------------------------------------------------------------------- #
+# Retry / backoff
+# --------------------------------------------------------------------- #
+def test_retry_policy_sleeps_deterministic_and_bounded():
+    p = res.RetryPolicy(max_attempts=6, base_s=0.1, cap_s=1.0, seed=3)
+    sleeps = p.sleeps()
+    assert sleeps == p.sleeps()                   # seeded: reproducible
+    assert len(sleeps) == 5
+    assert all(p.base_s <= s <= p.cap_s for s in sleeps)
+    assert res.RetryPolicy(max_attempts=6, seed=4).sleeps() != sleeps
+
+
+def test_with_retries_recovers_from_transient_failures():
+    calls, slept, retries = [], [], []
+
+    def flaky():
+        calls.append(1)
+        if len(calls) < 3:
+            raise res.CollectiveDropped("transient")
+        return "ok"
+
+    out = res.with_retries(
+        flaky, res.RetryPolicy(max_attempts=3), sleep=slept.append,
+        on_retry=lambda a, e: retries.append(a))
+    assert out == "ok" and len(calls) == 3
+    assert retries == [0, 1] and len(slept) == 2
+
+
+def test_with_retries_exhausts_and_raises():
+    def always(): raise res.CollectiveDropped("down")
+    with pytest.raises(res.CollectiveDropped):
+        res.with_retries(always, res.RetryPolicy(max_attempts=2),
+                         sleep=lambda s: None)
+
+
+def test_with_retries_non_retryable_propagates_immediately():
+    calls = []
+
+    def bad():
+        calls.append(1)
+        raise ValueError("config bug")
+
+    with pytest.raises(ValueError):
+        res.with_retries(bad, res.RetryPolicy(max_attempts=5),
+                         sleep=lambda s: None)
+    assert len(calls) == 1                        # no retry on ValueError
+
+
+# --------------------------------------------------------------------- #
+# Preemption guard
+# --------------------------------------------------------------------- #
+def test_preemption_guard_catches_sigterm_and_restores_handler():
+    before = signal.getsignal(signal.SIGTERM)
+    with res.PreemptionGuard() as guard:
+        assert not guard.triggered
+        os.kill(os.getpid(), signal.SIGTERM)      # caught, not fatal
+        assert guard.triggered
+    assert signal.getsignal(signal.SIGTERM) is before
+
+
+# --------------------------------------------------------------------- #
+# Straggler monitor + supervisor state machine
+# --------------------------------------------------------------------- #
+def test_straggler_monitor_flags_slow_shard_after_patience():
+    mon = res.StragglerMonitor(4, slow_factor=2.0, patience=2, min_obs=3)
+    assert mon.observe([1.0] * 4) == []           # below min_obs
+    assert mon.observe([1.0] * 4) == []
+    assert mon.observe([1.0, 1.0, 1.0, 5.0]) == []     # strike 1
+    assert mon.observe([1.0, 1.0, 1.0, 5.0]) == [3]    # strike 2: flagged
+    assert mon.observe([1.0, 1.0, 1.0, 5.0]) == []     # flagged once only
+
+
+def test_straggler_monitor_strikes_reset_on_recovery():
+    mon = res.StragglerMonitor(4, slow_factor=2.0, patience=2, min_obs=1)
+    mon.observe([1.0, 1.0, 1.0, 9.0])             # strike 1
+    for _ in range(8):                            # EWMA decays back down
+        flagged = mon.observe([1.0] * 4)
+    assert flagged == [] and mon._strikes[3] == 0
+
+
+def test_supervisor_failover_state_machine():
+    sup = res.ElasticSupervisor(4)
+    assert sup.live_mask() == (True,) * 4
+    assert sup.declare_dead(2, step=5) is True    # mask changed: remap
+    assert sup.live_mask() == (True, True, False, True)
+    assert sup.declare_dead(2, step=6) is False   # idempotent
+    assert [e["event"] for e in sup.events] == ["declared dead"]
+
+
+def test_supervisor_all_dead_raises():
+    sup = res.ElasticSupervisor(2)
+    sup.declare_dead(0)
+    with pytest.raises(RuntimeError, match="every worker"):
+        sup.declare_dead(1)
+
+
+def test_supervisor_demotes_then_recovers_straggler():
+    sup = res.ElasticSupervisor(
+        4, monitor=res.StragglerMonitor(4, patience=1, min_obs=1))
+    assert sup.observe_step_times([1.0, 1.0, 1.0, 9.0], step=3) is True
+    assert sup.status[3] == res.DEMOTED
+    assert sup.live_mask() == (True, True, True, False)
+    assert sup.recover(3, step=7) is True
+    assert sup.live_mask() == (True,) * 4
+    # dead workers never recover in-run
+    sup.declare_dead(1)
+    assert sup.recover(1) is False and sup.status[1] == res.DEAD
+
+
+# --------------------------------------------------------------------- #
+# Orphan quarantine (host-side state surgery)
+# --------------------------------------------------------------------- #
+def _dist_cfg(world=8, **kw):
+    # host-side surgery only consults world_size(dist); no mesh needed
+    return MKORConfig(dist=(("data", world),), exclude=(), **kw)
+
+
+def test_orphaned_buckets_follow_the_old_owner_map(ae_params):
+    cfg = _dist_cfg(world=8)
+    manifest = manifest_for(ae_params, cfg)
+    owners = statlib.bucket_owner_map(manifest, 8)
+    for dead in range(8):
+        want = [b.bucket_id for b in manifest
+                if owners[b.bucket_id][dead][1]
+                > owners[b.bucket_id][dead][0]]
+        assert res.orphaned_buckets(ae_params, cfg, [dead]) == want
+
+
+def test_quarantine_orphans_resets_banks_windows_and_health(ae_params):
+    common = dict(staleness=1, health=True, inv_freq=2, stagger=True)
+    cfg = _dist_cfg(world=8, **common)
+    # the state tree is world/mask-independent: build it with the local
+    # step (the dist step only runs inside shard_map), operate on it with
+    # the dist cfg — exactly what the launcher's surgery does
+    opt = mkor(firstorder.sgd(1e-2, momentum=0.9),
+               MKORConfig(exclude=(), **common))
+    state = opt.init(ae_params)
+    # a few real steps so banks/windows hold non-trivial values
+    step = jax.jit(lambda p, s, b: opt.update(
+        baseline_net.grads_and_full_stats(p, b)[1], s, params=p,
+        stats=baseline_net.grads_and_full_stats(p, b)[2]))
+    params = jax.tree.map(jnp.array, ae_params)
+    for i in range(4):
+        _, state = step(params, state, _batch(i))
+
+    dead = 0
+    orphans = res.orphaned_buckets(ae_params, cfg, [dead])
+    assert orphans, "worker 0 must own something for this test to bite"
+    new_state, got = res.quarantine_orphans(state, ae_params, cfg, [dead])
+    assert got == orphans
+
+    eye = lambda b: np.broadcast_to(
+        np.eye(b.shape[-1], dtype=np.float32), b.shape)
+    for bid in orphans:
+        for key in ("l_inv", "r_inv"):
+            np.testing.assert_array_equal(
+                np.asarray(new_state["factor_banks"][bid][key]),
+                eye(new_state["factor_banks"][bid][key]))
+            np.testing.assert_array_equal(
+                np.asarray(new_state["pending_banks"][bid][key]),
+                eye(new_state["pending_banks"][bid][key]))
+        assert all(not np.asarray(v).any() for v in
+                   jax.tree.leaves(new_state["stat_windows"][bid]))
+        assert int(new_state["health"][bid]["cooldown"]) \
+            == cfg.health_cooldown
+        assert int(new_state["health"][bid]["trips"]) \
+            == int(state["health"][bid]["trips"]) + 1
+    # healthy buckets untouched
+    for bid in new_state["factor_banks"]:
+        if bid in orphans:
+            continue
+        np.testing.assert_array_equal(
+            np.asarray(new_state["factor_banks"][bid]["l_inv"]),
+            np.asarray(state["factor_banks"][bid]["l_inv"]))
+
+
+# --------------------------------------------------------------------- #
+# Host-fault chaos plan
+# --------------------------------------------------------------------- #
+def test_parse_chaos_spec_routes_host_faults():
+    plan = chaos.parse_chaos_spec(
+        "kill_shard@4:3,delay_shard@2:1,drop_collective@6,grad_nan@5")
+    assert [f.site for f in plan.host_faults] \
+        == ["kill_shard", "delay_shard", "drop_collective"]
+    kill, delay, drop = plan.host_faults
+    assert (kill.step, kill.shard) == (4, 3)
+    assert (delay.step, delay.shard, delay.factor()) == (2, 1, 3.0)
+    assert drop.step == 6
+    assert [i.site for i in plan.injections] == ["grad_nan"]
+    assert plan.host_events(3, 7) == (kill, drop)   # sorted, half-open
+
+
+def test_host_only_plan_leaves_optimizer_unwrapped():
+    plan = chaos.parse_chaos_spec("kill_shard@4:3")
+    assert bool(plan) and not plan.injections
+    opt = firstorder.sgd(1e-2)
+    assert chaos.chaotic(opt, plan, MKORConfig()) is opt
+
+
+def test_split_schedule_forces_cuts_at_events():
+    assert res.split_schedule(0, 8, 4, []) == [(0, 4), (4, 8)]
+    assert res.split_schedule(0, 8, 4, [6]) \
+        == [(0, 4), (4, 6), (6, 8)]
+    assert res.split_schedule(2, 6, 4, [3, 5]) \
+        == [(2, 3), (3, 5), (5, 8)]
+    # events outside (start, stop) don't cut
+    assert res.split_schedule(0, 4, 2, [0, 4, 9]) == [(0, 2), (2, 4)]
+
+
+# --------------------------------------------------------------------- #
+# Elastic chunk driver (fake runner: host logic only, no jax dispatch)
+# --------------------------------------------------------------------- #
+def _fake_factory(log):
+    def factory(live):
+        log.append(("build", live))
+
+        def runner(params, state, stacked):
+            n = len(stacked["step"])
+            log.append(("run", tuple(int(s) for s in stacked["step"])))
+            return params, state, {"loss": np.ones(n, np.float32)}
+        return runner
+    return factory
+
+
+def _fake_batches():
+    return (lambda s: {"step": np.asarray([s])},
+            lambda bs: {"step": np.concatenate([b["step"] for b in bs])})
+
+
+def test_elastic_train_clean_run_covers_every_step():
+    log = []
+    make_batch, stack = _fake_batches()
+    sup = res.ElasticSupervisor(4)
+    _, _, hist, preempted = res.elastic_train(
+        _fake_factory(log), {}, {}, make_batch=make_batch,
+        stack_batches=stack, start=2, steps=6, chunk=4, supervisor=sup,
+        sleep=lambda s: None)
+    assert not preempted
+    assert [h["step"] for h in hist] == [2, 3, 4, 5, 6, 7]
+    assert [e for e in log if e[0] == "build"] == [("build", None)]
+
+
+def test_elastic_train_drop_collective_is_retried():
+    log, slept = [], []
+    make_batch, stack = _fake_batches()
+    sup = res.ElasticSupervisor(4)
+    plan = chaos.parse_chaos_spec("drop_collective@2")
+    _, _, hist, _ = res.elastic_train(
+        _fake_factory(log), {}, {}, make_batch=make_batch,
+        stack_batches=stack, start=0, steps=4, chunk=2, supervisor=sup,
+        plan=plan, sleep=slept.append)
+    assert [h["step"] for h in hist] == [0, 1, 2, 3]   # all steps ran
+    # the armed drop failed the first attempt (pre-dispatch) and the
+    # retry — one backoff sleep — re-ran the span successfully
+    assert len(slept) == 1
+    assert [e[1] for e in log if e[0] == "run"] == [(0, 1), (2, 3)]
+
+
+def test_elastic_train_delay_shard_demotes_and_rebuilds():
+    log = []
+    make_batch, stack = _fake_batches()
+    sup = res.ElasticSupervisor(
+        4, monitor=res.StragglerMonitor(4, slow_factor=2.0, patience=2,
+                                        min_obs=1))
+    plan = chaos.parse_chaos_spec("delay_shard@2:3")
+    _, _, hist, _ = res.elastic_train(
+        _fake_factory(log), {}, {}, make_batch=make_batch,
+        stack_batches=stack, start=0, steps=8, chunk=2, supervisor=sup,
+        plan=plan, sleep=lambda s: None)
+    assert len(hist) == 8
+    assert sup.status[3] == res.DEMOTED
+    builds = [e[1] for e in log if e[0] == "build"]
+    assert builds[0] is None
+    assert builds[-1] == (True, True, True, False)     # remap recompile
+
+
+def test_elastic_train_preemption_takes_emergency_checkpoint():
+    log, saves = [], []
+    make_batch, stack = _fake_batches()
+    sup = res.ElasticSupervisor(4)
+
+    class TrippedGuard:
+        calls = 0
+
+        @property
+        def triggered(self):
+            TrippedGuard.calls += 1
+            return TrippedGuard.calls > 1          # trip after 1st span
+
+    _, _, hist, preempted = res.elastic_train(
+        _fake_factory(log), {}, {}, make_batch=make_batch,
+        stack_batches=stack, start=0, steps=8, chunk=2, supervisor=sup,
+        guard=TrippedGuard(),
+        save=lambda at, p, s, extra: saves.append((at, extra)),
+        sleep=lambda s: None)
+    assert preempted
+    assert [h["step"] for h in hist] == [0, 1]     # stopped at boundary
+    assert saves == [(2, {"emergency": True})]     # cursor = next batch
