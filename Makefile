@@ -1,6 +1,6 @@
 # Single verification gate (ROADMAP.md tier-1 + launcher smokes).
-.PHONY: verify verify-dist verify-chaos verify-elastic chaos test lint \
-	bench-step-time bench-failover
+.PHONY: verify verify-dist verify-chaos verify-elastic verify-quant \
+	chaos test lint bench-step-time bench-failover
 
 verify:
 	bash scripts/verify.sh
@@ -18,6 +18,11 @@ verify-chaos:
 # delay-shard --elastic chaos smokes through the remapped step (§15)
 verify-elastic:
 	bash scripts/verify.sh elastic
+
+# quantized-storage slice (nightly CI): quant tests, an int8 --quant
+# train smoke, and the mkor-lint int8 twins (DESIGN.md §16)
+verify-quant:
+	bash scripts/verify.sh quant
 
 # quick interactive chaos run: inject NaN grads + Inf factors mid-train
 # with the sentinel on; must end with a finite loss and quarantine trips

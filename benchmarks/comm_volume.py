@@ -14,7 +14,11 @@ compiled HLO (AOT only — no arrays are allocated):
   banks (KFAC's data-parallel covariance averaging / KAISA factor sync);
 * ``owner_gather``  — the owner-sharded inversion schedule: each worker
   all-gathers only its owned 1/world bank-dim chunk of the updated
-  inverses, on that bucket's phase step.
+  inverses, on that bucket's phase step;
+* ``owner_gather_int8`` — the same schedule under ``factor_quant=int8``
+  (DESIGN.md §16): the chunk ships as int8 codes plus per-slice fp32
+  scales through ``collectives.owner_sharded_map_quant`` — ~2x fewer
+  payload bytes than the bf16 wire format.
 
 Two byte accountings appear in BENCH_comm_volume.json: ``link_bytes``
 (ring-model bytes crossing one chip's links, from hlo_analysis — every
@@ -56,6 +60,11 @@ def _parse(argv):
     ap.add_argument("--arch", default=ARCH)
     ap.add_argument("--devices", type=int, default=DEVICES)
     ap.add_argument("--inv-freq", type=int, default=10)
+    ap.add_argument("--quant", default="none",
+                    choices=("none", "bf16", "int8"),
+                    help="factor_quant mode for the per-bucket analytic "
+                         "rows (the int8 comparison rows are always "
+                         "emitted)")
     ap.add_argument("--out", default=OUT)
     ap.add_argument("--full", action="store_true",
                     help="also lower the end-to-end train step (implicit "
@@ -96,17 +105,22 @@ def _micro(args):
     from repro.sharding import collectives
 
     cfg = registry.get_config(args.arch)
-    mcfg = MKORConfig(inv_freq=args.inv_freq)
+    mcfg = MKORConfig(inv_freq=args.inv_freq, factor_quant=args.quant)
     params_sds = jax.eval_shape(
         lambda: model_lib.init_params(jax.random.PRNGKey(0), cfg))
     manifest = manifest_for(params_sds, mcfg)
-    fbytes = jnp.dtype(mcfg.factor_dtype).itemsize
+    # resident/wire byte width is derived from the config — NEVER a
+    # hard-coded 2 (core/stats.factor_itemsize is the single source)
+    fbytes = statlib.factor_itemsize(mcfg.factor_dtype, mcfg.factor_quant)
+    sbytes = jnp.dtype(collectives.RANK1_PAYLOAD_DTYPE).itemsize
 
     mesh = jax.make_mesh((args.devices,), ("data",))
     dist = (("data", args.devices),)
     bf16 = jnp.bfloat16
 
-    stats_sds, bank_sds = {}, {}
+    stats_sds, bank_sds, bank_sds_q = {}, {}, {}
+    int8 = jnp.int8
+    f32 = jnp.float32
     for b in manifest:
         lead = (b.n_slots,) + b.stack
         stats_sds[b.bucket_id] = {
@@ -115,6 +129,12 @@ def _micro(args):
         bank_sds[b.bucket_id] = {
             "l": jax.ShapeDtypeStruct(lead + (b.d_out, b.d_out), bf16),
             "r": jax.ShapeDtypeStruct(lead + (b.d_in, b.d_in), bf16)}
+        # quantized banks: int8 codes + one fp32 scale per (d, d) slice
+        bank_sds_q[b.bucket_id] = {
+            "l": jax.ShapeDtypeStruct(lead + (b.d_out, b.d_out), int8),
+            "l_scale": jax.ShapeDtypeStruct(lead, f32),
+            "r": jax.ShapeDtypeStruct(lead + (b.d_in, b.d_in), int8),
+            "r_scale": jax.ShapeDtypeStruct(lead, f32)}
 
     def pmean_body(tree):
         # same wire pattern for both schedules: a mean all-reduce of every
@@ -139,10 +159,36 @@ def _micro(args):
             return out
         return owner_body
 
+    def make_owner_body_quant(d):
+        # the int8 wire format: per bucket, each worker ships its owned
+        # chunk's codes + scales through owner_sharded_map_quant, which
+        # type-checks the codes against QUANT_WIRE_DTYPE and recombines
+        # both (codes move verbatim / as disjoint masked-psum terms)
+        def owner_body(tree):
+            out = {}
+            for bid, v in tree.items():
+                o = {}
+                for k in ("l", "r"):
+                    x, sc = v[k], v[k + "_scale"]
+                    n = 1                     # flattened (slot x stack)
+                    for s in x.shape[:-2]:
+                        n *= s
+                    xf = x.reshape((n,) + x.shape[-2:])
+                    scf = sc.reshape((n,))
+                    gq, gsc = collectives.owner_sharded_map_quant(
+                        lambda c, s: (c, s), [xf, scf], d, n)
+                    o[k] = gq.reshape(x.shape)
+                    o[k + "_scale"] = gsc.reshape(sc.shape)
+                out[bid] = o
+            return out
+        return owner_body
+
     measured = {
         "rank1_stats": _measure(pmean_body, stats_sds, mesh),
         "kfac_factors": _measure(pmean_body, bank_sds, mesh),
         "owner_gather": _measure(make_owner_body(dist), bank_sds, mesh),
+        "owner_gather_int8": _measure(make_owner_body_quant(dist),
+                                      bank_sds_q, mesh),
     }
     # a world size <= the per-bucket slice count shows the clean
     # ~world_size payload cut (512 >> slices on this arch caps the cut at
@@ -159,17 +205,30 @@ def _micro(args):
     phases = statlib.bucket_phases(manifest, args.inv_freq, True)
     phase_payload, phase_full = {}, {}
     r1_total = kfac_total = 0
+    bf16_bytes = jnp.dtype(jnp.bfloat16).itemsize
+    int8_bytes = statlib.factor_itemsize(mcfg.factor_dtype, "int8")
+    gather_bf16 = gather_int8 = 0
     for b in manifest:
-        c = statlib.bucket_comm_cost(b, args.devices, fbytes, fbytes)
+        c = statlib.bucket_comm_cost(b, args.devices, fbytes, sbytes,
+                                     factor_quant=mcfg.factor_quant)
+        # the bf16-vs-int8 wire comparison, independent of --quant
+        c_bf16 = statlib.bucket_comm_cost(b, args.devices, bf16_bytes,
+                                          sbytes)
+        c_int8 = statlib.bucket_comm_cost(b, args.devices, int8_bytes,
+                                          sbytes, factor_quant="int8")
         slices = b.n_slots
         for s in b.stack:
             slices *= s
         row = {"bucket_id": b.bucket_id, "d_in": b.d_in, "d_out": b.d_out,
                "n_slots": b.n_slots, "stack": list(b.stack),
-               "slices": slices, "phase": phases[b.bucket_id], **c}
+               "slices": slices, "phase": phases[b.bucket_id], **c,
+               "owner_gather_int8_bytes_per_phase_step":
+                   c_int8["owner_gather_bytes_per_phase_step"]}
         buckets.append(row)
         r1_total += c["rank1_stats_bytes_per_step"]
         kfac_total += c["kfac_factor_bytes_per_inv"]
+        gather_bf16 += c_bf16["owner_gather_bytes_per_phase_step"]
+        gather_int8 += c_int8["owner_gather_bytes_per_phase_step"]
         p = phases[b.bucket_id]
         phase_payload[p] = phase_payload.get(p, 0) \
             + c["owner_gather_bytes_per_phase_step"]
@@ -194,6 +253,12 @@ def _micro(args):
         # owner_gather_small_world program): slices / ceil(slices / 16)
         "owner_vs_full_payload_ratio_small_world": min(
             b["slices"] / -(-b["slices"] // 16) for b in buckets),
+        # int8 codes + fp32 scales vs the bf16 chunk, summed over all
+        # buckets' phase-step gathers — ~2x (the per-slice scales shave
+        # an O(1/d²) sliver off the exact 2x; DESIGN.md §16)
+        "owner_gather_bf16_bytes_per_phase_step": gather_bf16,
+        "owner_gather_int8_bytes_per_phase_step": gather_int8,
+        "int8_vs_bf16_wire_ratio": gather_bf16 / max(gather_int8, 1),
     }
     return {"buckets": buckets, "analytic": analytic, "measured": measured}
 
@@ -252,7 +317,7 @@ def run(args) -> None:
     from benchmarks.common import emit
 
     out = {"arch": args.arch, "devices": args.devices,
-           "inv_freq": args.inv_freq}
+           "inv_freq": args.inv_freq, "factor_quant": args.quant}
     out.update(_micro(args))
     if args.full:
         out["full"] = _full(args)
@@ -275,11 +340,15 @@ def run(args) -> None:
           {"schedule": "owner_gather (per phase step, all buckets)",
            "payload_bytes": sum(b["owner_gather_bytes_per_phase_step"]
                                 for b in out["buckets"]),
-           "hlo_link_bytes": m["owner_gather"]["link_bytes"]}],
+           "hlo_link_bytes": m["owner_gather"]["link_bytes"]},
+          {"schedule": "owner_gather_int8 (codes+scales, per phase step)",
+           "payload_bytes": a["owner_gather_int8_bytes_per_phase_step"],
+           "hlo_link_bytes": m["owner_gather_int8"]["link_bytes"]}],
          f"comm volume, {args.arch} @ {args.devices} workers")
     print(f"O(d²)/O(d) per-step gap: "
           f"{a['od2_over_od_per_step']:.0f}x; owner-sharded gather payload "
-          f"= 1/{a['owner_vs_full_payload_ratio']} of factor bytes")
+          f"= 1/{a['owner_vs_full_payload_ratio']} of factor bytes; "
+          f"int8 wire = {a['int8_vs_bf16_wire_ratio']:.3f}x below bf16")
 
     with open(args.out, "w") as f:
         json.dump(out, f, indent=1)
@@ -314,7 +383,8 @@ def main(argv=None) -> None:
                             + _strip_device_flag(flags))
         cmd = [sys.executable, "-m", "benchmarks.comm_volume",
                "--arch", args.arch, "--devices", str(args.devices),
-               "--inv-freq", str(args.inv_freq), "--out", args.out] \
+               "--inv-freq", str(args.inv_freq), "--quant", args.quant,
+               "--out", args.out] \
             + (["--full"] if args.full else [])
         print(f"re-exec for {need} host devices: {' '.join(cmd)}")
         subprocess.run(cmd, check=True, env=env)

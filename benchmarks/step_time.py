@@ -42,6 +42,15 @@ Two comparisons on the same reduced config, written to BENCH_step_time.json:
   is a handful of elementwise reductions per bucket.  Reported: both
   distributions and ``overhead_mean`` = on.mean/off.mean; the gate bounds
   it (target <=2% on quiet hardware, budget carries CI headroom).
+* ``quant_vs_bf16`` — int8 factor banks (``MKORConfig.factor_quant=
+  "int8"``, DESIGN.md §16) vs the bf16 storage baseline on the staggered
+  schedule, identical otherwise.  The int8 path adds the fused in-kernel
+  dequant plus the phase-step requantize (encode + error-feedback
+  update); the win it buys — halved HBM factor traffic — is invisible on
+  this CPU emulation, so the gate only bounds the compute-side overhead
+  ratio ``overhead_mean`` = int8.mean/bf16.mean against structural
+  regressions (an accidental per-step requant or a materialized fp32
+  bank copy would blow past it).
 
   PYTHONPATH=src python -m benchmarks.step_time
   PYTHONPATH=src python -m benchmarks.step_time --steps 24 --out BENCH.json
@@ -161,6 +170,37 @@ def health_on_vs_off_times(args):
 
     def run_once():
         return one_pass("health_off") + one_pass("health_on")
+
+    both = _min_over_repeats(run_once, args.repeats)
+    return both[:args.steps], both[args.steps:]
+
+
+def quant_vs_bf16_times(args):
+    """Per-step wall times with bf16 vs int8 factor storage (module
+    docstring, ``quant_vs_bf16``).  Staggered schedule so the phase-step
+    requantize cost is spread evenly; back-to-back passes per repeat,
+    elementwise min-filtered like the other sections."""
+    progs = {}
+    for name, quant in (("bf16", "bf16"), ("int8", "int8")):
+        mcfg = MKORConfig(inv_freq=args.inv_freq, stagger=True,
+                          factor_quant=quant)
+        cfg, opt, params0, ds, step_fn = _setup(args, mcfg)
+        progs[name] = (jax.jit(step_fn), opt, params0, ds)
+
+    def one_pass(name):
+        jit_step, opt, params0, ds = progs[name]
+        params, state = params0, opt.init(params0)
+        ts = []
+        for i in range(args.warmup + args.steps):
+            batch = pipeline.make_batch(ds, i)
+            t0 = time.perf_counter()
+            params, state, m = jit_step(params, state, batch)
+            _ = {k: float(v) for k, v in m.items()}
+            ts.append(time.perf_counter() - t0)
+        return ts[args.warmup:]
+
+    def run_once():
+        return one_pass("bf16") + one_pass("int8")
 
     both = _min_over_repeats(run_once, args.repeats)
     return both[:args.steps], both[args.steps:]
@@ -329,6 +369,8 @@ def main() -> None:
     launch_d = dist(launch_ts)
     hoff_ts, hon_ts = health_on_vs_off_times(args)
     hoff_d, hon_d = dist(hoff_ts), dist(hon_ts)
+    qbf_ts, qi8_ts = quant_vs_bf16_times(args)
+    qbf_d, qi8_d = dist(qbf_ts), dist(qi8_ts)
 
     result = {
         "arch": f"{args.arch} (reduced, d_model={args.d_model})",
@@ -364,6 +406,14 @@ def main() -> None:
             "health_on": hon_d,
             "overhead_mean": hon_d["mean_ms"] / hoff_d["mean_ms"],
         },
+        "quant_vs_bf16": {
+            # staggered schedule, identical configs apart from
+            # MKORConfig.factor_quant; DESIGN.md §16 — the ratio isolates
+            # the fused-dequant + phase-step requantize compute cost
+            "bf16": qbf_d,
+            "int8": qi8_d,
+            "overhead_mean": qi8_d["mean_ms"] / qbf_d["mean_ms"],
+        },
     }
     emit([{"runner": "python_loop", **loop_d},
           {"runner": "scan_chunk", **{k: v for k, v in scan_d.items()}}],
@@ -379,6 +429,9 @@ def main() -> None:
     emit([{"sentinel": "health_off", **hoff_d},
           {"sentinel": "health_on", **hon_d}],
          "per-step wall time: health sentinel off vs on (staggered)")
+    emit([{"storage": "bf16", **qbf_d},
+          {"storage": "int8+EF", **qi8_d}],
+         "per-step wall time: bf16 vs int8 factor storage (staggered)")
     print(f"# scan speedup (mean): "
           f"{result['loop_vs_scan']['scan_speedup_mean']:.2f}x; "
           f"p95/p50 spike->staggered: {spike_d['p95_over_p50']:.2f} -> "
@@ -387,7 +440,9 @@ def main() -> None:
           f"{astep_d['p95_over_p50']:.2f} "
           f"(fused {fused_d['p95_over_p50']:.2f}); "
           f"health overhead (mean): "
-          f"{result['health_on_vs_off']['overhead_mean']:.3f}x")
+          f"{result['health_on_vs_off']['overhead_mean']:.3f}x; "
+          f"int8 overhead (mean): "
+          f"{result['quant_vs_bf16']['overhead_mean']:.3f}x")
     with open(args.out, "w") as f:
         json.dump(result, f, indent=1)
     print(f"# wrote {args.out}")

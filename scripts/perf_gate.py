@@ -9,11 +9,15 @@ Usage (what scripts/verify.sh runs):
     python scripts/perf_gate.py /tmp/bench.json /tmp/failover.json \
         --budget benchmarks/perf_budget.json [--hard]
 
-Multiple benchmark JSONs are shallow-merged (their top-level keys are
-disjoint by construction: step_time owns ``sync_vs_async``/... and
-failover owns ``elastic``/``remap``/``recovery``), so one budget file
-can bound metrics from several benchmarks and the missing-metric rule
-below still bites when a bench is skipped.
+Multiple benchmark JSONs are deep-merged: nested dicts merge key-wise,
+so two benches may contribute different leaves under the same top-level
+key (e.g. step_time's ``sync_vs_async.async_step`` and a quant bench's
+``sync_vs_async.quant_vs_bf16``).  A *conflicting leaf* — the same
+dotted path carrying different values in two inputs — is a hard error
+(exit 2) regardless of ``--hard``: silently keeping either value would
+gate against the wrong benchmark.  One budget file can therefore bound
+metrics from several benchmarks and the missing-metric rule below still
+bites when a bench is skipped.
 
 The budget is a list of bounds on *ratio* metrics only (p95/p50 tail
 ratios, scan-vs-loop speedup) — absolute step times vary with the host
@@ -37,6 +41,28 @@ from __future__ import annotations
 import argparse
 import json
 import sys
+
+
+class MergeConflict(ValueError):
+    """Two benchmark JSONs disagree on the same leaf value."""
+
+
+def deep_merge(dst: dict, src: dict, path: str = "") -> dict:
+    """Merge ``src`` into ``dst`` key-wise, recursing through dicts.
+
+    Equal leaves are idempotent (re-running a bench into a second file
+    is fine); differing leaves raise :class:`MergeConflict` — the gate
+    must never silently pick one benchmark's number over another's."""
+    for key, val in src.items():
+        here = f"{path}.{key}" if path else key
+        if key not in dst:
+            dst[key] = val
+        elif isinstance(dst[key], dict) and isinstance(val, dict):
+            deep_merge(dst[key], val, here)
+        elif dst[key] != val:
+            raise MergeConflict(
+                f"{here}: conflicting values {dst[key]!r} vs {val!r}")
+    return dst
 
 
 def lookup(d, path: str):
@@ -74,7 +100,8 @@ def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("bench_json", nargs="+",
                     help="fresh benchmark --quick outputs (step_time, "
-                         "failover, ...); shallow-merged")
+                         "failover, ...); deep-merged, conflicting "
+                         "leaves are a hard error")
     ap.add_argument("--budget", default="benchmarks/perf_budget.json")
     ap.add_argument("--hard", action="store_true",
                     help="exit 1 on violation instead of warning")
@@ -83,7 +110,11 @@ def main() -> int:
     bench = {}
     for path in args.bench_json:
         with open(path) as f:
-            bench.update(json.load(f))
+            try:
+                deep_merge(bench, json.load(f))
+            except MergeConflict as e:
+                print(f"perf gate: CONFLICT merging {path}: {e}")
+                return 2
     with open(args.budget) as f:
         budget = json.load(f)["bounds"]
 

@@ -38,6 +38,13 @@
 # and delay-shard --elastic chaos smokes through the remapped
 # shard_map step — the killed run must quarantine the orphaned buckets,
 # remap owners over the survivors, and finish with a finite loss.
+#
+#   scripts/verify.sh quant  (== make verify-quant, nightly CI) runs the
+# quantized-storage slice (DESIGN.md §16): the quant test file (kernel
+# parity, error-feedback round-trip, checkpoint round-trip, health
+# interaction, wire-byte accounting), an int8 --quant train smoke, and
+# the mkor-lint int8 twins (quant-discipline checker incl. the dist
+# owner-gather wire).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -89,6 +96,22 @@ if [[ "${1:-}" == "elastic" ]]; then
         --chaos "delay_shard@3:2"
 
     echo "== verify-elastic OK =="
+    exit 0
+fi
+
+if [[ "${1:-}" == "quant" ]]; then
+    echo "== quant tests (parity / EF / checkpoint / health / bytes) =="
+    python -m pytest tests/test_quant.py -q
+
+    echo "== int8 --quant train smoke (bert-large reduced, health on) =="
+    python -m repro.launch.train --arch bert-large --reduced --steps 8 \
+        --global-batch 2 --seq-len 16 --inv-freq 3 --log-every 4 \
+        --quant int8 --health
+
+    echo "== mkor-lint int8 twins (quant-discipline, incl. --dist) =="
+    python -m repro.analysis.lint --config bert_large --dist
+
+    echo "== verify-quant OK =="
     exit 0
 fi
 

@@ -1,4 +1,4 @@
-"""The six mkor-lint contract checkers (DESIGN.md §12).
+"""The mkor-lint contract checkers (DESIGN.md §12).
 
 Each checker is a pure function ``(target) -> [Diagnostic]`` registered
 in :data:`CHECKERS`; :func:`run_checkers` applies every applicable
@@ -232,7 +232,8 @@ def check_pallas_kernels(target) -> List[Diagnostic]:
         return out
     for b in manifest:
         plans = kernel_ops.bucket_kernel_plans(
-            b.d_in, b.d_out, rank=cfg.rank, factor_dtype=cfg.factor_dtype)
+            b.d_in, b.d_out, rank=cfg.rank, factor_dtype=cfg.factor_dtype,
+            factor_quant=getattr(cfg, "factor_quant", "none"))
         for p in plans:
             ctx = dict(bucket=b.bucket_id, kernel=p.kernel,
                        dims=list(p.dims), block=list(p.block),
@@ -595,6 +596,63 @@ def check_elastic_remap(target) -> List[Diagnostic]:
 
 
 # --------------------------------------------------------------------- #
+# 8. quant-discipline: int8 codes on the wire, fp32 (or exact-int8)
+#    accumulation (DESIGN.md §16)
+# --------------------------------------------------------------------- #
+def check_quant_discipline(target) -> List[Diagnostic]:
+    """The quantized factor-residency wire contract (DESIGN.md §16),
+    statically:
+
+    1. EVERY factor-shaped collective payload (the phase-gated owner-
+       gathers of the inverse banks — ungated ones are already errors
+       elsewhere) must be int8-origin: raw int8 codes, or a value that
+       traces back through transparent ops to an int8 source.  A
+       dequantized fp32/bf16 bank on the wire forfeits the ~2x (vs bf16)
+       payload reduction the int8 residency exists for;
+    2. a widened int8-origin payload must accumulate in float32 — the
+       masked-psum of disjoint chunks is exact in int8 or fp32, but a
+       bf16/fp16 accumulator silently rounds the codes of large banks.
+
+    Inactive (no diagnostics) unless the target's MKOR config has
+    ``factor_quant="int8"`` (or ``meta["factor_quant"]`` on custom
+    fixtures)."""
+    out: List[Diagnostic] = []
+    cfg = target.meta.get("mkor_cfg")
+    fq = target.meta.get("factor_quant")
+    if fq is None:
+        fq = getattr(cfg, "factor_quant", "none") if cfg is not None \
+            else "none"
+    if fq != "int8" or target.jaxpr is None:
+        return out
+    res = jaxpr_walk.walk(target.jaxpr)
+    factor_dims = set(target.meta.get("factor_dims", ()))
+    for c in res.collectives:
+        if not any(_is_factor_square(s, factor_dims) for s in c.shapes):
+            continue
+        if not c.int8_origin:
+            out.append(_d(
+                "quant-discipline", "quant.wire-not-int8-origin",
+                Severity.ERROR,
+                f"{c.prim} at {c.path} moves a factor-shaped payload "
+                f"({[list(s) for s in c.shapes]}, {list(c.dtypes)}) with "
+                f"no int8 source upstream — under factor_quant='int8' "
+                f"the owner-gather must ship the stored codes, not a "
+                f"dequantized bank", target,
+                prim=c.prim, dtypes=list(c.dtypes), path=c.path))
+        elif any(d in ("bfloat16", "float16") for d in c.dtypes):
+            out.append(_d(
+                "quant-discipline", "quant.accum-not-f32",
+                Severity.ERROR,
+                f"{c.prim} at {c.path} accumulates int8-origin factor "
+                f"codes in {[d for d in c.dtypes if d != 'int8']} — "
+                f"widened code payloads must accumulate in float32 "
+                f"(sharding/collectives.ACCUM_DTYPE); half precision "
+                f"rounds codes of banks wider than the 8-bit mantissa",
+                target, prim=c.prim, dtypes=list(c.dtypes), path=c.path))
+    return out
+
+
+# --------------------------------------------------------------------- #
 # Registry
 # --------------------------------------------------------------------- #
 CHECKERS: Dict[str, Callable] = {
@@ -605,6 +663,7 @@ CHECKERS: Dict[str, Callable] = {
     "staleness-bound": check_staleness_bound,
     "health-gating": check_health_gating,
     "elastic-remap": check_elastic_remap,
+    "quant-discipline": check_quant_discipline,
 }
 
 # which target kinds each checker runs on ("custom" targets opt in to
@@ -617,6 +676,7 @@ _APPLIES: Dict[str, tuple] = {
     "staleness-bound": ("single", "dist", "custom"),
     "health-gating": ("single", "dist", "custom"),
     "elastic-remap": ("dist", "custom"),
+    "quant-discipline": ("single", "dist", "custom"),
 }
 
 

@@ -36,7 +36,7 @@ def _canon_prim(name: str) -> str:
 # through them when tracing a collective payload back to its origin
 _TRANSPARENT = ("reshape", "transpose", "broadcast_in_dim", "squeeze",
                 "slice", "concatenate", "copy", "convert_element_type",
-                "mul", "add", "div")
+                "mul", "add", "div", "pbroadcast")
 
 
 def _aval_info(v) -> Tuple[Tuple[int, ...], str, int]:
@@ -64,6 +64,7 @@ class JaxprCollective:
     gated: bool                     # inside a cond branch
     in_loop: bool                   # inside a scan/while body
     bf16_origin: bool               # payload produced by bf16->f32 convert
+    int8_origin: bool               # payload is int8 or int8->wider convert
     path: str                       # breadcrumb, e.g. "shard_map/cond[1]"
 
 
@@ -139,6 +140,37 @@ def _bf16_origin(jaxpr, var, depth: int = 6) -> bool:
     return False
 
 
+def _int8_origin(jaxpr, var, depth: int = 6) -> bool:
+    """True if ``var`` is int8 on the wire, or traces back through
+    transparent ops to an int8 source — the quantized owner-gather
+    contract (DESIGN.md §16): factor codes ship as int8 and any widening
+    is only the masked-psum accumulator."""
+    _, dt, _ = _aval_info(var)
+    if dt == "int8":
+        return True
+    if depth <= 0 or _is_literal(var):
+        return False
+    producer = None
+    for eqn in jaxpr.eqns:
+        if any(ov is var for ov in eqn.outvars):
+            producer = eqn
+            break
+    if producer is None:
+        return False
+    name = producer.primitive.name
+    if name == "convert_element_type":
+        src = producer.invars[0]
+        _, sdt, _ = _aval_info(src)
+        if sdt == "int8":
+            return True
+        return _int8_origin(jaxpr, src, depth - 1)
+    if name in _TRANSPARENT or name == "pjit" \
+            or name == "dynamic_update_slice":
+        return any(_int8_origin(jaxpr, iv, depth - 1)
+                   for iv in producer.invars if not _is_literal(iv))
+    return False
+
+
 def walk(closed_jaxpr) -> WalkResult:
     """Collect all lint-relevant records from a (closed) jaxpr."""
     res = WalkResult()
@@ -174,6 +206,9 @@ def _walk(jaxpr, res: WalkResult, gated: bool, in_loop: bool,
                 dtypes=tuple(dtypes), payload_bytes=total, gated=gated,
                 in_loop=in_loop,
                 bf16_origin=any(_bf16_origin(jaxpr, iv)
+                                for iv in eqn.invars
+                                if not _is_literal(iv)),
+                int8_origin=any(_int8_origin(jaxpr, iv)
                                 for iv in eqn.invars
                                 if not _is_literal(iv)),
                 path=path or "<entry>"))

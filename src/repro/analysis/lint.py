@@ -68,6 +68,12 @@ def main() -> int:
                          "(elastic-remap proves the remap adds zero "
                          "ungated factor bytes vs the static owner "
                          "map); 0 skips it")
+    ap.add_argument("--quant", type=int, default=1,
+                    help="1 (default) also lints the int8 factor-"
+                         "residency twins (quant-discipline proves the "
+                         "owner-gather wire payload is int8-origin and "
+                         "accumulation stays fp32, DESIGN.md \u00a716); "
+                         "0 skips them")
     ap.add_argument("--chunk", type=int, default=2)
     ap.add_argument("--steps", type=int, default=100)
     ap.add_argument("--compile", action="store_true",
@@ -95,12 +101,16 @@ def main() -> int:
     health_cfg = dataclasses.replace(mkor_cfg, health=True)
     health_common = dict(common, mkor_cfg=health_cfg)
 
+    quant_cfg = dataclasses.replace(mkor_cfg, factor_quant="int8")
+    quant_common = dict(common, mkor_cfg=quant_cfg)
+
     targets = []
     print(f"mkor-lint: tracing {args.config} (single + chunk"
           + (" + dist" if args.dist else "")
           + (f", sync + async staleness={args.staleness}"
              if args.staleness else "")
           + (", + health twins" if args.health else "")
+          + (", + int8 quant twins" if args.quant else "")
           + (", + elastic remap twin"
              if args.elastic and args.dist else "") + ") ...",
           flush=True)
@@ -118,6 +128,10 @@ def main() -> int:
         # the sentinel stays collective-free; the dist twin below gets
         # the differential baseline)
         targets.append(trace.single_target(args.config, **health_common))
+    if args.quant:
+        # int8 twin: quant-discipline runs on this (and on the dist twin
+        # below, where the owner-gather wire format is actually visible)
+        targets.append(trace.single_target(args.config, **quant_common))
     if args.dist:
         sync_dist = trace.dist_target(
             args.config, world=args.dist_devices,
@@ -138,6 +152,10 @@ def main() -> int:
             # collectives/bytes over the health-off step
             targets.append(trace.attach_health_baseline(health_dist,
                                                         sync_dist))
+        if args.quant:
+            targets.append(trace.dist_target(
+                args.config, world=args.dist_devices,
+                compile_hlo=args.compile, **quant_common))
         if args.elastic:
             # remap twin: last worker dead, ownership re-split over the
             # survivors; elastic-remap proves the failover step adds

@@ -70,10 +70,13 @@ def _target_meta(cfg, params, mkor_cfg: MKORConfig,
         stats_bytes += n * d_in * 4            # one fp32 a-vec psum each
         factor_dims.update((d_in, d_out))
     manifest = manifest_for(params, mkor_cfg)
+    fbytes = statlib.factor_itemsize(mkor_cfg.factor_dtype,
+                                     mkor_cfg.factor_quant)
+    sbytes = np.dtype(collectives.RANK1_PAYLOAD_DTYPE).itemsize
     comm = {b.bucket_id: statlib.bucket_comm_cost(
-                b, world_size=world,
-                factor_bytes=np.dtype(mkor_cfg.factor_dtype).itemsize,
-                rank=mkor_cfg.rank)
+                b, world_size=world, factor_bytes=fbytes,
+                stats_bytes=sbytes, rank=mkor_cfg.rank,
+                factor_quant=mkor_cfg.factor_quant)
             for b in manifest}
     grad_bytes = sum(int(np.prod(l.shape)) * 4
                      for l in jax.tree.leaves(params))

@@ -100,6 +100,20 @@ class MKORConfig:
     stabilizer_threshold: float = 50.0  # ε: ‖F⁻¹‖∞ trigger (lines 5-6)
     zeta: float = 0.95                 # blend-toward-identity strength
     factor_dtype: str = "bfloat16"     # paper: half precision
+    # Quantized factor residency (DESIGN.md §16): "none" stores banks,
+    # pending banks, and stat windows at ``factor_dtype`` (the shipped
+    # bf16 default — bit-identical legacy state tree); "bf16" forces
+    # bfloat16 regardless of factor_dtype; "int8" stores per-slice
+    # symmetric int8 codes + fp32 scales, with fp32 error-feedback
+    # accumulators in the optimizer state (single-process requant folds
+    # the residual back in; under ``dist`` the wire quantization is the
+    # storage quantization and the accumulators stay zero so state stays
+    # replicated).  Dequant is fused into the Pallas SMW / block-SMW /
+    # precondition kernels — no separate cast pass materializes fp32
+    # banks in HBM — and the phase-step owner-gather ships int8 codes +
+    # scales: ~2x fewer wire bytes than bf16.  int8 requires the bank
+    # layout (the per-layer oracle stays the plain reference).
+    factor_quant: str = "none"         # "none" | "bf16" | "int8"
     max_factor_dim: int = 32768        # skip layers with huge factor dims
     min_factor_dim: int = 4
     rescale: bool = True               # line 10 gradient rescaling
@@ -366,6 +380,52 @@ def _identity_like(bank: jnp.ndarray) -> jnp.ndarray:
 
 
 # ----------------------------------------------------------------------- #
+# Quantized factor residency (factor_quant="int8", DESIGN.md §16).  A bank
+# side is the triple (codes int8, scale fp32 per slice, error-feedback
+# fp32) instead of a bare array; the quantized identity is 127·I codes at
+# scale 1/127 — decode is a scalar multiple of I, so the first-order
+# passthrough direction is exact and rescale restores the magnitude.
+# ----------------------------------------------------------------------- #
+_QUANT_ID_SCALE = 1.0 / statlib.INT8_QMAX
+
+
+def _quant_identity_codes(bank_q: jnp.ndarray) -> jnp.ndarray:
+    """int8 identity codes broadcast to a quantized bank's shape."""
+    d = bank_q.shape[-1]
+    eye = (jnp.eye(d, dtype=jnp.float32)
+           * statlib.INT8_QMAX).astype(jnp.int8)
+    return jnp.broadcast_to(eye, bank_q.shape)
+
+
+def _quant_identity_side(shape: Tuple[int, ...], d: int):
+    """Fresh quantized-identity bank side: (codes, scales, zero EF)."""
+    eye = (jnp.eye(d, dtype=jnp.float32)
+           * statlib.INT8_QMAX).astype(jnp.int8)
+    return (jnp.broadcast_to(eye, shape + (d, d)),
+            jnp.full(shape, _QUANT_ID_SCALE, jnp.float32),
+            jnp.zeros(shape + (d, d), jnp.float32))
+
+
+def _quant_side_reset(side, trip):
+    """Quarantine reset of a quantized side: identity codes + identity
+    scale + ZERO error feedback — a stale residual from before the trip
+    must never leak into the fresh post-cooldown factors (DESIGN.md §14
+    x §16 interaction)."""
+    q, sc, ef = side
+    return (jnp.where(trip, _quant_identity_codes(q), q),
+            jnp.where(trip, jnp.float32(_QUANT_ID_SCALE), sc),
+            jnp.where(trip, jnp.zeros((), jnp.float32), ef))
+
+
+def _quant_side_maxabs(side) -> jnp.ndarray:
+    """max |decode| over a quantized bank — scale·max|codes| per slice,
+    no dequantized materialization (the health sentinel's norm signal)."""
+    q, sc, _ = side
+    per = jnp.max(jnp.abs(q.astype(jnp.float32)), axis=(-2, -1))
+    return jnp.max(sc * per)
+
+
+# ----------------------------------------------------------------------- #
 # The optimizer
 # ----------------------------------------------------------------------- #
 def _eligible(path, dense, cfg: MKORConfig) -> bool:
@@ -378,7 +438,8 @@ def _eligible(path, dense, cfg: MKORConfig) -> bool:
 
 def _init_factors(dense, cfg: MKORConfig):
     stack, _, d_in, d_out = statlib.layer_dims(dense)
-    fd = jnp.dtype(cfg.factor_dtype)
+    fd = jnp.dtype(statlib.factor_storage_dtype(cfg.factor_dtype,
+                                                cfg.factor_quant))
     eye = lambda d: jnp.broadcast_to(jnp.eye(d, dtype=fd), stack + (d, d))
     return {"l_inv": eye(d_out), "r_inv": eye(d_in)}
 
@@ -422,8 +483,15 @@ def factor_slices(state, tree, cfg: MKORConfig = MKORConfig()):
     for bucket in manifest_for(tree, cfg):
         bank = state["factor_banks"][bucket.bucket_id]
         for i, key in enumerate(bucket.path_strs):
-            out[key] = {"l_inv": bank["l_inv"][i],
-                        "r_inv": bank["r_inv"][i]}
+            if "l_scale" in bank:                   # int8: fp32 views
+                out[key] = {
+                    "l_inv": statlib.quant_decode(bank["l_inv"][i],
+                                                  bank["l_scale"][i]),
+                    "r_inv": statlib.quant_decode(bank["r_inv"][i],
+                                                  bank["r_scale"][i])}
+            else:
+                out[key] = {"l_inv": bank["l_inv"][i],
+                            "r_inv": bank["r_inv"][i]}
     return out
 
 
@@ -447,6 +515,15 @@ def mkor(backend: GradientTransformation,
     if cfg.health and cfg.health_cooldown < 1:
         raise ValueError(
             f"health_cooldown must be >= 1, got {cfg.health_cooldown}")
+    if cfg.factor_quant not in statlib.FACTOR_QUANT_MODES:
+        raise ValueError(
+            f"factor_quant must be one of {statlib.FACTOR_QUANT_MODES}, "
+            f"got {cfg.factor_quant!r}")
+    if cfg.factor_quant == "int8" and cfg.layout != "bank":
+        raise ValueError(
+            "factor_quant='int8' requires layout='bank': the scale / "
+            "error-feedback state machine is per-bucket (DESIGN.md §16); "
+            "the per-layer oracle stays the plain numerical reference")
     # rank=1 async still rides the block-Woodbury path (1-row window);
     # staleness=0 keeps the legacy rank-1 state tree bit-identical
     needs_window = cfg.rank > 1 or cfg.staleness > 0
@@ -532,6 +609,145 @@ def mkor(backend: GradientTransformation,
             > cfg.health_norm_factor * cfg.stabilizer_threshold
 
     # ------------------------------------------------------------------ #
+    # Quantized factor residency (factor_quant="int8", DESIGN.md §16).
+    # A bank side is the triple (codes int8, scale fp32, error-feedback
+    # fp32).  The schedule per inversion is update → stabilize → requant:
+    # the kernels consume the codes directly (fused dequant — no fp32
+    # bank copy in HBM) and the stabilizer caps the fp32 transient BEFORE
+    # requantization, so the stored norm — and with it the quant scale,
+    # hence the absolute quantization error scale/2 — stays bounded by
+    # the stabilizer threshold.  Single-process requant folds the
+    # residual into the EF accumulator; under dist each owner quantizes
+    # its freshly inverted chunk at the wire boundary (quant_encode, no
+    # EF) and the gathered codes ARE the stored codes, keeping the state
+    # tree replicated and the EF leaves zero on every worker.
+    # ------------------------------------------------------------------ #
+    quant8 = cfg.factor_quant == "int8"
+    store_dtype = jnp.dtype(statlib.factor_storage_dtype(
+        cfg.factor_dtype, cfg.factor_quant))
+    win_dtype = jnp.float32 if cfg.factor_quant == "none" else store_dtype
+    dist_on = cfg.dist is not None and collectives.world_size(cfg.dist) > 1
+    hot_norm = cfg.health_norm_factor * cfg.stabilizer_threshold
+
+    if quant8:
+        def side_take(side, idx):
+            return tuple(a[idx] for a in side)
+
+        def side_set(side, idx, sub):
+            return tuple(a.at[idx].set(b) for a, b in zip(side, sub))
+
+        def pack_sides(l_side, r_side):
+            return {"l_inv": l_side[0], "l_scale": l_side[1],
+                    "l_ef": l_side[2], "r_inv": r_side[0],
+                    "r_scale": r_side[1], "r_ef": r_side[2]}
+
+        def unpack_sides(bank):
+            return ((bank["l_inv"], bank["l_scale"], bank["l_ef"]),
+                    (bank["r_inv"], bank["r_scale"], bank["r_ef"]))
+
+        def side_rank1(side, v, ns1):
+            """stab∘SMW on one quantized side (rank-1 schedule)."""
+            q, sc, ef = side
+            if not dist_on:
+                if cfg.use_pallas:
+                    f = kops.smw_rank1_update_banked(
+                        q, v, gamma=cfg.gamma, variant=cfg.variant,
+                        interpret=cfg.interpret, scale=sc)
+                else:
+                    f = banked_smw(statlib.quant_decode(q, sc), v, ns1)
+                f = _vmap_over_stack(stab_slice, ns1)(f)
+                return statlib.quant_requantize(f, ef)
+            n = 1
+            for dd in q.shape[:ns1]:
+                n *= dd
+
+            def chunk_fn(qc, scc, vc):
+                if cfg.use_pallas:
+                    fc = kops.smw_rank1_update_banked(
+                        qc, vc, gamma=cfg.gamma, variant=cfg.variant,
+                        interpret=cfg.interpret, scale=scc)
+                else:
+                    fc = banked_smw(statlib.quant_decode(qc, scc), vc, 1)
+                fc = _vmap_over_stack(stab_slice, 1)(fc)
+                return statlib.quant_encode(fc)   # wire quant == storage
+
+            qg, scg = collectives.owner_sharded_map_quant(
+                chunk_fn,
+                (q.reshape((n,) + q.shape[ns1:]), sc.reshape((n,)),
+                 v.reshape((n,) + v.shape[ns1:])),
+                cfg.dist, n, cfg.live)
+            return (qg.reshape(q.shape), scg.reshape(sc.shape), ef)
+
+        def side_block(side, v_ord, cnt_full, ns1, want_pivot):
+            """Block-Woodbury + stab + requant on one quantized side.
+            Returns (new side, min GJ pivot); pivot is +inf when the
+            path exports none (dist — DESIGN.md §14's post checks catch
+            a singular solve after the gather instead)."""
+            q, sc, ef = side
+            piv = jnp.float32(jnp.inf)
+            if not dist_on:
+                if cfg.use_pallas:
+                    res = kops.smw_block_update_banked(
+                        q, v_ord, cnt_full, gamma=cfg.gamma,
+                        variant=cfg.variant, interpret=cfg.interpret,
+                        with_pivot=want_pivot, scale=sc)
+                    f, piv = res if want_pivot else (res, piv)
+                else:
+                    jd = statlib.quant_decode(q, sc)
+                    if want_pivot:
+                        f, piv = banked_block_piv(jd, v_ord, cnt_full, ns1)
+                    else:
+                        f = banked_block(jd, v_ord, cnt_full, ns1)
+                f = _vmap_over_stack(stab_slice, ns1)(f)
+                return statlib.quant_requantize(f, ef), piv
+            n = 1
+            for dd in q.shape[:ns1]:
+                n *= dd
+
+            def chunk_fn(qc, scc, vc, cc):
+                if cfg.use_pallas:
+                    fc = kops.smw_block_update_banked(
+                        qc, vc, cc, gamma=cfg.gamma, variant=cfg.variant,
+                        interpret=cfg.interpret, scale=scc)
+                else:
+                    fc = banked_block(statlib.quant_decode(qc, scc),
+                                      vc, cc, 1)
+                fc = _vmap_over_stack(stab_slice, 1)(fc)
+                return statlib.quant_encode(fc)
+
+            qg, scg = collectives.owner_sharded_map_quant(
+                chunk_fn,
+                (q.reshape((n,) + q.shape[ns1:]), sc.reshape((n,)),
+                 v_ord.reshape((n,) + v_ord.shape[ns1:]),
+                 cnt_full.reshape((n,))),
+                cfg.dist, n, cfg.live)
+            return (qg.reshape(q.shape), scg.reshape(sc.shape), ef), piv
+
+        def side_precond(l_side, r_side, gw, ns1):
+            lq, lsc, _ = l_side
+            rq, rsc, _ = r_side
+            if cfg.use_pallas:
+                # fused dequant at the factor load sites — the int8
+                # banks feed the kernel directly (kernels/precond.py)
+                delta = kops.fused_precondition_banked(
+                    lq, rq, gw, rescale=cfg.rescale,
+                    interpret=cfg.interpret, l_scale=lsc, r_scale=rsc)
+                return delta.astype(gw.dtype)
+            return banked_precond(statlib.quant_decode(lq, lsc),
+                                  statlib.quant_decode(rq, rsc), gw, ns1)
+
+        def side_finite_srcs(side):
+            # codes are integers (always finite): the sentinel checks
+            # the fp32 scale + error-feedback leaves instead
+            return [side[1], side[2]]
+
+        def sides_bad(l_side, r_side):
+            return (_any_nonfinite(side_finite_srcs(l_side)
+                                   + side_finite_srcs(r_side))
+                    | (_quant_side_maxabs(l_side) > hot_norm)
+                    | (_quant_side_maxabs(r_side) > hot_norm))
+
+    # ------------------------------------------------------------------ #
     # init
     # ------------------------------------------------------------------ #
     def init_factor_state(params):
@@ -543,7 +759,10 @@ def mkor(backend: GradientTransformation,
         # the pending inverse banks (the double buffer) initialized equal
         # to the active banks (identity).
         def window(lead, d):
-            return jnp.zeros(lead + (win_rank, d), jnp.float32)
+            # windows ride the factor storage dtype ("none" keeps the
+            # legacy fp32 rings bit-identical); int8 windows carry
+            # per-row scales and are built in the banked branch below
+            return jnp.zeros(lead + (win_rank, d), win_dtype)
 
         if cfg.layout == "per_layer":
             factors, windows = {}, {}
@@ -567,7 +786,7 @@ def mkor(backend: GradientTransformation,
                 out["pending_factors"] = jax.tree.map(
                     jnp.array, factors)
             return out
-        fd = jnp.dtype(cfg.factor_dtype)
+        fd = store_dtype
         banks, windows = {}, {}
         for b in manifest_for(params, cfg):
             shape = (b.n_slots,) + b.stack
@@ -576,13 +795,38 @@ def mkor(backend: GradientTransformation,
                 return jnp.broadcast_to(jnp.eye(d, dtype=fd),
                                         shape + (d, d))
 
-            banks[b.bucket_id] = {"l_inv": eye(b.d_out),
-                                  "r_inv": eye(b.d_in)}
+            if quant8:
+                # int8 residency (DESIGN.md §16): codes + per-slice fp32
+                # scale + fp32 error-feedback accumulator per side.  The
+                # identity encodes exactly (codes 127·I at scale 1/127)
+                # and EF starts — and under dist, stays — zero.
+                lq, lsc, lef = _quant_identity_side(shape, b.d_out)
+                rq, rsc, ref_ = _quant_identity_side(shape, b.d_in)
+                banks[b.bucket_id] = {"l_inv": lq, "l_scale": lsc,
+                                      "l_ef": lef, "r_inv": rq,
+                                      "r_scale": rsc, "r_ef": ref_}
+            else:
+                banks[b.bucket_id] = {"l_inv": eye(b.d_out),
+                                      "r_inv": eye(b.d_in)}
             if needs_window:
-                windows[b.bucket_id] = {
-                    "a": window(shape, b.d_in),
-                    "g": window(shape, b.d_out),
-                    "n": jnp.zeros((b.n_slots,), jnp.int32)}
+                if quant8:
+                    # per-ROW scales: each push re-encodes only the new
+                    # row, so window quantization is exact (no EF)
+                    windows[b.bucket_id] = {
+                        "a": jnp.zeros(shape + (win_rank, b.d_in),
+                                       jnp.int8),
+                        "a_scale": jnp.zeros(shape + (win_rank,),
+                                             jnp.float32),
+                        "g": jnp.zeros(shape + (win_rank, b.d_out),
+                                       jnp.int8),
+                        "g_scale": jnp.zeros(shape + (win_rank,),
+                                             jnp.float32),
+                        "n": jnp.zeros((b.n_slots,), jnp.int32)}
+                else:
+                    windows[b.bucket_id] = {
+                        "a": window(shape, b.d_in),
+                        "g": window(shape, b.d_out),
+                        "n": jnp.zeros((b.n_slots,), jnp.int32)}
         out = {"factor_banks": banks}
         if needs_window:
             out["stat_windows"] = windows
@@ -706,11 +950,15 @@ def mkor(backend: GradientTransformation,
         for bucket in manifest:
             bank = state["factor_banks"][bucket.bucket_id]
             l_bank, r_bank = bank["l_inv"], bank["r_inv"]
+            if quant8:
+                l_side, r_side = unpack_sides(bank)
             do_inv = do_inv_fn(phases[bucket.bucket_id])
             ns = len(bucket.stack)
             if cfg.rank > 1:
                 win = state["stat_windows"][bucket.bucket_id]
                 a_win, g_win, n_cnt = win["a"], win["g"], win["n"]
+                if quant8:
+                    a_wsc, g_wsc = win["a_scale"], win["g_scale"]
 
             g_ws, g_vecs, a_vecs = [], [], []
             for path in bucket.paths:
@@ -730,12 +978,24 @@ def mkor(backend: GradientTransformation,
                 hst = state["health"][bucket.bucket_id]
                 cool, trips = hst["cooldown"], hst["trips"]
                 phase_hit = do_inv            # pre-gating: cooldown clock
-                srcs = [l_bank, r_bank] + g_ws \
-                    + [v for v in g_vecs + a_vecs if v is not None]
-                if cfg.rank > 1:
-                    srcs += [a_win, g_win]
-                pre_bad = (_any_nonfinite(srcs)
-                           | norm_hot(l_bank) | norm_hot(r_bank))
+                if quant8:
+                    # int8 codes are always finite — the sentinel watches
+                    # the fp32 scale/EF leaves and the decoded-norm proxy
+                    # scale·max|codes| instead (no dequant materialized)
+                    srcs = side_finite_srcs(l_side) \
+                        + side_finite_srcs(r_side) + g_ws \
+                        + [v for v in g_vecs + a_vecs if v is not None]
+                    if cfg.rank > 1:
+                        srcs += [a_wsc, g_wsc]
+                    pre_bad = _any_nonfinite(srcs) \
+                        | sides_bad(l_side, r_side)
+                else:
+                    srcs = [l_bank, r_bank] + g_ws \
+                        + [v for v in g_vecs + a_vecs if v is not None]
+                    if cfg.rank > 1:
+                        srcs += [a_win, g_win]
+                    pre_bad = (_any_nonfinite(srcs)
+                               | norm_hot(l_bank) | norm_hot(r_bank))
                 do_inv = do_inv & (cool == 0) & ~pre_bad
 
             # --- lines 5-8, banked.  Slots are sub-grouped by the runtime
@@ -751,8 +1011,12 @@ def mkor(backend: GradientTransformation,
                 slots = sig_groups[sig]
                 whole = len(slots) == bucket.n_slots
                 idx = jnp.asarray(slots)
-                l_sub = l_bank if whole else l_bank[idx]
-                r_sub = r_bank if whole else r_bank[idx]
+                if quant8:
+                    l_sub_s = l_side if whole else side_take(l_side, idx)
+                    r_sub_s = r_side if whole else side_take(r_side, idx)
+                else:
+                    l_sub = l_bank if whole else l_bank[idx]
+                    r_sub = r_bank if whole else r_bank[idx]
                 gv = jnp.stack([g_vecs[i] for i in slots])
                 av = jnp.stack([a_vecs[i] for i in slots])
                 if cfg.health:
@@ -776,9 +1040,58 @@ def mkor(backend: GradientTransformation,
                     gw = g_win if whole else g_win[idx]
                     cnt = n_cnt if whole else n_cnt[idx]
                     cnt_b = cnt.reshape(cnt.shape + (1,) * ns)
-                    aw = statlib.window_push(aw, cnt_b, av)
-                    gw = statlib.window_push(gw, cnt_b, gv)
+                    if quant8:
+                        # per-row scales: only the new row is (exactly)
+                        # re-encoded, the stored rows never requantize
+                        awsc = a_wsc if whole else a_wsc[idx]
+                        gwsc = g_wsc if whole else g_wsc[idx]
+                        aw, awsc = statlib.window_push_quant(
+                            aw, awsc, cnt_b, av)
+                        gw, gwsc = statlib.window_push_quant(
+                            gw, gwsc, cnt_b, gv)
+                    else:
+                        aw = statlib.window_push(aw, cnt_b, av)
+                        gw = statlib.window_push(gw, cnt_b, gv)
                     cnt = cnt + 1
+
+                    if quant8:
+                        want_piv = bool(cfg.health) and not dist_on
+
+                        def inv_branch_q(ls, rs, aw=aw, awsc=awsc, gw=gw,
+                                         gwsc=gwsc, cnt=cnt, ns=ns):
+                            cnt_full = jnp.broadcast_to(
+                                cnt.reshape(cnt.shape + (1,) * ns),
+                                ls[0].shape[:ns + 1])
+                            g_ord = statlib.window_ordered(
+                                statlib.window_decode(gw, gwsc), cnt_full)
+                            a_ord = statlib.window_ordered(
+                                statlib.window_decode(aw, awsc), cnt_full)
+                            nl, pl = side_block(ls, g_ord, cnt_full,
+                                                ns + 1, want_piv)
+                            nr, pr = side_block(rs, a_ord, cnt_full,
+                                                ns + 1, want_piv)
+                            return nl, nr, jnp.minimum(pl, pr)
+
+                        l_new_s, r_new_s, piv = jax.lax.cond(
+                            do_inv, inv_branch_q,
+                            lambda ls, rs: (ls, rs, jnp.float32(jnp.inf)),
+                            l_sub_s, r_sub_s)
+                        if cfg.health:
+                            piv_min = jnp.minimum(piv_min, piv)
+                        cnt = jnp.where(do_inv, 0, cnt)
+                        if whole:
+                            l_side, r_side = l_new_s, r_new_s
+                            a_win, g_win, n_cnt = aw, gw, cnt
+                            a_wsc, g_wsc = awsc, gwsc
+                        else:
+                            l_side = side_set(l_side, idx, l_new_s)
+                            r_side = side_set(r_side, idx, r_new_s)
+                            a_win = a_win.at[idx].set(aw)
+                            g_win = g_win.at[idx].set(gw)
+                            a_wsc = a_wsc.at[idx].set(awsc)
+                            g_wsc = g_wsc.at[idx].set(gwsc)
+                            n_cnt = n_cnt.at[idx].set(cnt)
+                        continue
 
                     def inv_branch(l, r, aw=aw, gw=gw, cnt=cnt, ns=ns):
                         stab = _vmap_over_stack(stab_slice, ns + 1)
@@ -854,6 +1167,24 @@ def mkor(backend: GradientTransformation,
                         n_cnt = n_cnt.at[idx].set(cnt)
                     continue
 
+                if quant8:
+                    # rank-1 quant schedule: the side triples ride the
+                    # cond as pytrees; update → stabilize → requant (or
+                    # quantized owner-gather under dist) per side
+                    def inv_branch_q(ls, rs, gv=gv, av=av, ns=ns):
+                        return (side_rank1(ls, gv, ns + 1),
+                                side_rank1(rs, av, ns + 1))
+
+                    l_new_s, r_new_s = jax.lax.cond(
+                        do_inv, inv_branch_q, lambda ls, rs: (ls, rs),
+                        l_sub_s, r_sub_s)
+                    if whole:
+                        l_side, r_side = l_new_s, r_new_s
+                    else:
+                        l_side = side_set(l_side, idx, l_new_s)
+                        r_side = side_set(r_side, idx, r_new_s)
+                    continue
+
                 # lax.cond (not where): off-phase steps must skip the SMW
                 # work, or the staggered schedule has nothing to spread.
                 # With cfg.dist each worker stabilizes+SMWs only its owned
@@ -899,12 +1230,26 @@ def mkor(backend: GradientTransformation,
             # consumed or stored. ---------------------------------------- #
             gw = jnp.stack(g_ws)
             if cfg.health:
-                post_bad = (_any_nonfinite([l_bank, r_bank])
-                            | norm_hot(l_bank) | norm_hot(r_bank)
-                            | ~(piv_min >= cfg.health_pivot_tol))
-                trip = pre_bad | post_bad
-                l_bank = jnp.where(trip, _identity_like(l_bank), l_bank)
-                r_bank = jnp.where(trip, _identity_like(r_bank), r_bank)
+                if quant8:
+                    post_bad = (_any_nonfinite(side_finite_srcs(l_side)
+                                               + side_finite_srcs(r_side))
+                                | sides_bad(l_side, r_side)
+                                | ~(piv_min >= cfg.health_pivot_tol))
+                    trip = pre_bad | post_bad
+                    # reset = quantized identity codes at scale 1/127
+                    # AND a zeroed error-feedback accumulator — carried
+                    # EF from the poisoned epoch must not re-enter
+                    l_side = _quant_side_reset(l_side, trip)
+                    r_side = _quant_side_reset(r_side, trip)
+                else:
+                    post_bad = (_any_nonfinite([l_bank, r_bank])
+                                | norm_hot(l_bank) | norm_hot(r_bank)
+                                | ~(piv_min >= cfg.health_pivot_tol))
+                    trip = pre_bad | post_bad
+                    l_bank = jnp.where(trip, _identity_like(l_bank),
+                                       l_bank)
+                    r_bank = jnp.where(trip, _identity_like(r_bank),
+                                       r_bank)
                 gw_c = _finite_or_zero(gw)
             else:
                 gw_c = gw
@@ -912,7 +1257,10 @@ def mkor(backend: GradientTransformation,
             # --- lines 9-10, banked: one batched two-sided precondition +
             # rescale over (bank, *stack); extra dims broadcast inside
             # (the pallas path is the banked fused kernel entry). -------- #
-            delta = banked_precond(l_bank, r_bank, gw_c, ns + 1)
+            if quant8:
+                delta = side_precond(l_side, r_side, gw_c, ns + 1)
+            else:
+                delta = banked_precond(l_bank, r_bank, gw_c, ns + 1)
             if cfg.health:
                 # rescale-denominator collapse: a slice whose update was
                 # annihilated (ΔW = 0) while its gradient was not means
@@ -920,8 +1268,14 @@ def mkor(backend: GradientTransformation,
                 eps_hit = jnp.any((_slice_sumsq(delta) == 0.0)
                                   & (_slice_sumsq(gw_c) > 0.0))
                 trip = trip | eps_hit | _any_nonfinite([delta])
-                l_bank = jnp.where(trip, _identity_like(l_bank), l_bank)
-                r_bank = jnp.where(trip, _identity_like(r_bank), r_bank)
+                if quant8:
+                    l_side = _quant_side_reset(l_side, trip)
+                    r_side = _quant_side_reset(r_side, trip)
+                else:
+                    l_bank = jnp.where(trip, _identity_like(l_bank),
+                                       l_bank)
+                    r_bank = jnp.where(trip, _identity_like(r_bank),
+                                       r_bank)
                 delta = _finite_or_zero(delta)
                 if cfg.rank > 1:
                     # fresh stat window on re-entry: zero the rows too,
@@ -931,6 +1285,11 @@ def mkor(backend: GradientTransformation,
                                       a_win)
                     g_win = jnp.where(trip, jnp.zeros((), g_win.dtype),
                                       g_win)
+                    if quant8:
+                        # zero the per-row scales too, so a decoded
+                        # window reads exactly zero on re-entry
+                        a_wsc = jnp.where(trip, 0.0, a_wsc)
+                        g_wsc = jnp.where(trip, 0.0, g_wsc)
                     n_cnt = jnp.where(trip, 0, n_cnt)
                 new_health[bucket.bucket_id] = {
                     "cooldown": jnp.where(
@@ -938,11 +1297,16 @@ def mkor(backend: GradientTransformation,
                         jnp.where(phase_hit,
                                   jnp.maximum(cool - 1, 0), cool)),
                     "trips": trips + trip.astype(jnp.int32)}
-            new_banks[bucket.bucket_id] = {"l_inv": l_bank,
-                                           "r_inv": r_bank}
+            if quant8:
+                new_banks[bucket.bucket_id] = pack_sides(l_side, r_side)
+            else:
+                new_banks[bucket.bucket_id] = {"l_inv": l_bank,
+                                               "r_inv": r_bank}
             if cfg.rank > 1:
-                new_windows[bucket.bucket_id] = {"a": a_win, "g": g_win,
-                                                 "n": n_cnt}
+                w = {"a": a_win, "g": g_win, "n": n_cnt}
+                if quant8:
+                    w["a_scale"], w["g_scale"] = a_wsc, g_wsc
+                new_windows[bucket.bucket_id] = w
             delta = jnp.where(so_on, delta, gw_c)     # MKOR-H fallback
             for i, path in enumerate(bucket.paths):
                 out = statlib.tree_set(
@@ -1003,6 +1367,42 @@ def mkor(backend: GradientTransformation,
                 # next tick relaunches from the fresh window
                 do_inv = do_inv \
                     & (state["health"][bid]["cooldown"] == 0)
+
+            if quant8:
+                # Quantized promote-then-launch: promote is a pure swap of
+                # the side triples (codes + scale + EF move together); the
+                # launch block-updates the just-promoted codes through the
+                # fused-dequant kernel and requantizes — EF rides the
+                # pending buffer (single-process) or stays zero (dist).
+                def tick_branch_q(als, ars, pls, prs, aw=win["a"],
+                                  awsc=win["a_scale"], gw=win["g"],
+                                  gwsc=win["g_scale"], cnt=win["n"],
+                                  ns=ns):
+                    del als, ars                      # promoted away
+                    cnt_full = jnp.broadcast_to(
+                        cnt.reshape(cnt.shape + (1,) * ns),
+                        pls[0].shape[:ns + 1])
+                    g_ord = statlib.window_ordered(
+                        statlib.window_decode(gw, gwsc), cnt_full)
+                    a_ord = statlib.window_ordered(
+                        statlib.window_decode(aw, awsc), cnt_full)
+                    nls, _ = side_block(pls, g_ord, cnt_full, ns + 1,
+                                        False)
+                    nrs, _ = side_block(prs, a_ord, cnt_full, ns + 1,
+                                        False)
+                    return pls, prs, nls, nrs
+
+                a_ls, a_rs, p_ls, p_rs = jax.lax.cond(
+                    do_inv, tick_branch_q,
+                    lambda als, ars, pls, prs: (als, ars, pls, prs),
+                    *unpack_sides(act), *unpack_sides(pend))
+                new_active[bid] = pack_sides(a_ls, a_rs)
+                new_pending[bid] = pack_sides(p_ls, p_rs)
+                new_windows[bid] = {
+                    "a": win["a"], "a_scale": win["a_scale"],
+                    "g": win["g"], "g_scale": win["g_scale"],
+                    "n": jnp.where(do_inv, 0, win["n"])}
+                continue
 
             # Promote-then-launch.  The new pending chains the block update
             # onto the just-promoted factors (the same inverse the sync
@@ -1142,9 +1542,14 @@ def mkor(backend: GradientTransformation,
             pend = state["pending_banks"][bucket.bucket_id]
             l_act, r_act = bank["l_inv"], bank["r_inv"]
             l_pen, r_pen = pend["l_inv"], pend["r_inv"]
+            if quant8:
+                l_act_s, r_act_s = unpack_sides(bank)
+                l_pen_s, r_pen_s = unpack_sides(pend)
             ns = len(bucket.stack)
             win = state["stat_windows"][bucket.bucket_id]
             a_win, g_win, n_cnt = win["a"], win["g"], win["n"]
+            if quant8:
+                a_wsc, g_wsc = win["a_scale"], win["g_scale"]
 
             g_ws, g_vecs, a_vecs = [], [], []
             for path in bucket.paths:
@@ -1164,11 +1569,24 @@ def mkor(backend: GradientTransformation,
                 cool, trips = hst["cooldown"], hst["trips"]
                 phase_hit = so_on & (state["count"] % cfg.inv_freq
                                      == phases[bucket.bucket_id])
-                srcs = [l_act, r_act, l_pen, r_pen, a_win, g_win] + g_ws \
-                    + [v for v in g_vecs + a_vecs if v is not None]
-                trip = (_any_nonfinite(srcs)
-                        | norm_hot(l_act) | norm_hot(r_act)
-                        | norm_hot(l_pen) | norm_hot(r_pen))
+                if quant8:
+                    srcs = (side_finite_srcs(l_act_s)
+                            + side_finite_srcs(r_act_s)
+                            + side_finite_srcs(l_pen_s)
+                            + side_finite_srcs(r_pen_s)
+                            + [a_wsc, g_wsc] + g_ws
+                            + [v for v in g_vecs + a_vecs
+                               if v is not None])
+                    trip = (_any_nonfinite(srcs)
+                            | sides_bad(l_act_s, r_act_s)
+                            | sides_bad(l_pen_s, r_pen_s))
+                else:
+                    srcs = [l_act, r_act, l_pen, r_pen, a_win, g_win] \
+                        + g_ws \
+                        + [v for v in g_vecs + a_vecs if v is not None]
+                    trip = (_any_nonfinite(srcs)
+                            | norm_hot(l_act) | norm_hot(r_act)
+                            | norm_hot(l_pen) | norm_hot(r_pen))
 
             sig_groups: Dict[Any, list] = {}
             for slot, (av, gv) in enumerate(zip(a_vecs, g_vecs)):
@@ -1189,34 +1607,65 @@ def mkor(backend: GradientTransformation,
                 gw = g_win if whole else g_win[idx]
                 cnt = n_cnt if whole else n_cnt[idx]
                 cnt_b = cnt.reshape(cnt.shape + (1,) * ns)
-                aw = statlib.window_push(aw, cnt_b, av)
-                gw = statlib.window_push(gw, cnt_b, gv)
+                if quant8:
+                    awsc = a_wsc if whole else a_wsc[idx]
+                    gwsc = g_wsc if whole else g_wsc[idx]
+                    aw, awsc = statlib.window_push_quant(
+                        aw, awsc, cnt_b, av)
+                    gw, gwsc = statlib.window_push_quant(
+                        gw, gwsc, cnt_b, gv)
+                else:
+                    aw = statlib.window_push(aw, cnt_b, av)
+                    gw = statlib.window_push(gw, cnt_b, gv)
                 cnt = cnt + 1
                 if whole:
                     a_win, g_win, n_cnt = aw, gw, cnt
+                    if quant8:
+                        a_wsc, g_wsc = awsc, gwsc
                 else:
                     a_win = a_win.at[idx].set(aw)
                     g_win = g_win.at[idx].set(gw)
                     n_cnt = n_cnt.at[idx].set(cnt)
+                    if quant8:
+                        a_wsc = a_wsc.at[idx].set(awsc)
+                        g_wsc = g_wsc.at[idx].set(gwsc)
             stacked_gw = jnp.stack(g_ws)
             if cfg.health:
-                l_act = jnp.where(trip, _identity_like(l_act), l_act)
-                r_act = jnp.where(trip, _identity_like(r_act), r_act)
+                if quant8:
+                    l_act_s = _quant_side_reset(l_act_s, trip)
+                    r_act_s = _quant_side_reset(r_act_s, trip)
+                else:
+                    l_act = jnp.where(trip, _identity_like(l_act), l_act)
+                    r_act = jnp.where(trip, _identity_like(r_act), r_act)
                 gw_c = _finite_or_zero(stacked_gw)
             else:
                 gw_c = stacked_gw
-            delta = banked_precond(l_act, r_act, gw_c, ns + 1)
+            if quant8:
+                delta = side_precond(l_act_s, r_act_s, gw_c, ns + 1)
+            else:
+                delta = banked_precond(l_act, r_act, gw_c, ns + 1)
             if cfg.health:
                 eps_hit = jnp.any((_slice_sumsq(delta) == 0.0)
                                   & (_slice_sumsq(gw_c) > 0.0))
                 trip = trip | eps_hit | _any_nonfinite([delta])
-                l_act = jnp.where(trip, _identity_like(l_act), l_act)
-                r_act = jnp.where(trip, _identity_like(r_act), r_act)
-                l_pen = jnp.where(trip, _identity_like(l_pen), l_pen)
-                r_pen = jnp.where(trip, _identity_like(r_pen), r_pen)
+                if quant8:
+                    # a trip resets BOTH buffers of the double-buffered
+                    # side triples — identity codes, 1/127 scale, zero EF
+                    l_act_s = _quant_side_reset(l_act_s, trip)
+                    r_act_s = _quant_side_reset(r_act_s, trip)
+                    l_pen_s = _quant_side_reset(l_pen_s, trip)
+                    r_pen_s = _quant_side_reset(r_pen_s, trip)
+                else:
+                    l_act = jnp.where(trip, _identity_like(l_act), l_act)
+                    r_act = jnp.where(trip, _identity_like(r_act), r_act)
+                    l_pen = jnp.where(trip, _identity_like(l_pen), l_pen)
+                    r_pen = jnp.where(trip, _identity_like(r_pen), r_pen)
                 delta = _finite_or_zero(delta)
                 a_win = jnp.where(trip, jnp.zeros((), a_win.dtype), a_win)
                 g_win = jnp.where(trip, jnp.zeros((), g_win.dtype), g_win)
+                if quant8:
+                    a_wsc = jnp.where(trip, 0.0, a_wsc)
+                    g_wsc = jnp.where(trip, 0.0, g_wsc)
                 n_cnt = jnp.where(trip, 0, n_cnt)
                 new_health[bucket.bucket_id] = {
                     "cooldown": jnp.where(
@@ -1224,12 +1673,20 @@ def mkor(backend: GradientTransformation,
                         jnp.where(phase_hit,
                                   jnp.maximum(cool - 1, 0), cool)),
                     "trips": trips + trip.astype(jnp.int32)}
-                new_banks[bucket.bucket_id] = {"l_inv": l_act,
-                                               "r_inv": r_act}
-                new_pending[bucket.bucket_id] = {"l_inv": l_pen,
-                                                 "r_inv": r_pen}
-            new_windows[bucket.bucket_id] = {"a": a_win, "g": g_win,
-                                             "n": n_cnt}
+                if quant8:
+                    new_banks[bucket.bucket_id] = pack_sides(l_act_s,
+                                                             r_act_s)
+                    new_pending[bucket.bucket_id] = pack_sides(l_pen_s,
+                                                               r_pen_s)
+                else:
+                    new_banks[bucket.bucket_id] = {"l_inv": l_act,
+                                                   "r_inv": r_act}
+                    new_pending[bucket.bucket_id] = {"l_inv": l_pen,
+                                                     "r_inv": r_pen}
+            w = {"a": a_win, "g": g_win, "n": n_cnt}
+            if quant8:
+                w["a_scale"], w["g_scale"] = a_wsc, g_wsc
+            new_windows[bucket.bucket_id] = w
             delta = jnp.where(so_on, delta, gw_c)     # MKOR-H fallback
             for i, path in enumerate(bucket.paths):
                 out = statlib.tree_set(

@@ -235,9 +235,97 @@ def layer_phases(manifest: BucketManifest, inv_freq: int,
     return {ps: phases[b.bucket_id] for b in manifest for ps in b.path_strs}
 
 
-def bucket_cost(bucket: FactorBucket, factor_bytes: int = 2,
+# ----------------------------------------------------------------------- #
+# Quantized factor storage (DESIGN.md §16)
+#
+# ``MKORConfig.factor_quant`` selects the resident storage format of the
+# factor/inverse banks, the pending banks, and the ring stat windows:
+#   none — store at ``factor_dtype`` (the shipped bf16 default);
+#   bf16 — force bfloat16 storage regardless of ``factor_dtype``;
+#   int8 — per-slice symmetric int8 values + fp32 scales, with fp32
+#          error-feedback accumulators on the bank requant path.
+# The helpers below are the single source of truth for the encode/decode
+# math; the Pallas kernels fuse the decode (value * scale at the load
+# site, kernels/rank1_smw.py + precond.py) so no fp32 copy of a resident
+# bank is ever materialized in HBM, and the dist wire format ships the
+# int8 values + scales directly (sharding/collectives.py).
+# ----------------------------------------------------------------------- #
+FACTOR_QUANT_MODES = ("none", "bf16", "int8")
+
+# symmetric int8 range; +-127 keeps the code space symmetric around zero
+# so decode(q) = -decode(-q) exactly (no -128 asymmetry)
+INT8_QMAX = 127.0
+
+# floor on the per-slice max-abs before division — an all-zero slice
+# (e.g. a zeroed window row) must encode to exact zeros, not NaN
+QUANT_SCALE_EPS = 1e-30
+
+
+def factor_storage_dtype(factor_dtype: str, factor_quant: str) -> str:
+    """Resident dtype of the factor/inverse banks under ``factor_quant``."""
+    if factor_quant == "int8":
+        return "int8"
+    if factor_quant == "bf16":
+        return "bfloat16"
+    return factor_dtype
+
+
+def factor_itemsize(factor_dtype: str, factor_quant: str = "none") -> int:
+    """Bytes per resident bank element — the ONLY place callers (dryrun,
+    benchmarks, analysis/trace.py) derive factor byte widths from the
+    config, so the cost model can never drift from the state tree."""
+    return jnp.dtype(factor_storage_dtype(factor_dtype, factor_quant)).itemsize
+
+
+def _expand(scale: jnp.ndarray, axes: int) -> jnp.ndarray:
+    for _ in range(axes):
+        scale = scale[..., None]
+    return scale
+
+
+def quant_encode(x: jnp.ndarray, axes: int = 2
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-slice symmetric int8 encode: ``(values int8, scale f32)``.
+
+    The trailing ``axes`` dims are one quantization slice (2 for a (d, d)
+    factor matrix, 1 for a window row); leading dims are independent
+    slices with independent scales — ``scale.shape == x.shape[:-axes]``.
+    ``decode(encode(x)) - x`` is bounded per element by ``scale / 2 =
+    max|x| / 254`` (round-to-nearest on a symmetric grid)."""
+    xf = x.astype(jnp.float32)
+    red = tuple(range(xf.ndim - axes, xf.ndim))
+    amax = jnp.max(jnp.abs(xf), axis=red)
+    scale = jnp.maximum(amax, QUANT_SCALE_EPS) / INT8_QMAX
+    q = jnp.clip(jnp.round(xf / _expand(scale, axes)),
+                 -INT8_QMAX, INT8_QMAX).astype(jnp.int8)
+    return q, scale
+
+
+def quant_decode(q: jnp.ndarray, scale: jnp.ndarray,
+                 axes: int = 2) -> jnp.ndarray:
+    """fp32 decode of :func:`quant_encode` output (the jnp oracle for the
+    fused in-kernel dequant)."""
+    return q.astype(jnp.float32) * _expand(scale, axes)
+
+
+def quant_requantize(x: jnp.ndarray, err: jnp.ndarray, axes: int = 2
+                     ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Error-feedback requantization of a freshly computed fp32 bank.
+
+    Returns ``(values, scale, err')`` with ``err' = (x + err) -
+    decode(values, scale)`` — the residual the NEXT requant folds back in,
+    so quantization error accumulates in the fp32 accumulator instead of
+    in the int8 resident (DESIGN.md §16).  ``err`` must be fp32 and the
+    same shape as ``x``."""
+    comp = x.astype(jnp.float32) + err
+    q, scale = quant_encode(comp, axes)
+    return q, scale, comp - quant_decode(q, scale, axes)
+
+
+def bucket_cost(bucket: FactorBucket, factor_bytes: int,
                 rank: int = 1, staleness: int = 0,
-                health: bool = False) -> Dict[str, Any]:
+                health: bool = False,
+                factor_quant: str = "none") -> Dict[str, Any]:
     """Analytic per-bucket factor FLOPs/bytes (launch/dryrun, benchmarks).
 
     Slices = bank slots x stacked repeats; each slice owns an (d_out, d_out)
@@ -253,7 +341,14 @@ def bucket_cost(bucket: FactorBucket, factor_bytes: int = 2,
     bytes (see :func:`bucket_comm_cost`).  ``health=True`` (DESIGN.md
     §14) carries two int32 scalars per bucket (cool-down + trip counter)
     — 8 bytes regardless of bucket size, and zero extra wire bytes (the
-    sentinel reads replicated data only)."""
+    sentinel reads replicated data only).
+
+    ``factor_bytes`` is the resident byte width of one bank element —
+    derive it from the config via :func:`factor_itemsize`, never hard-code
+    it.  Under ``factor_quant='int8'`` the banks shrink to 1 byte/element
+    plus per-slice fp32 scales (``quant_scale_bytes``) and the fp32
+    error-feedback accumulators (``quant_ef_bytes``, DESIGN.md §16); the
+    ring windows store at the same width with per-row scales."""
     n = bucket.n_slots
     for d in bucket.stack:
         n *= d
@@ -267,10 +362,24 @@ def bucket_cost(bucket: FactorBucket, factor_bytes: int = 2,
         for d in (di, do))
     precond_flops = n * b * 2 * di * do * (di + do)
     factor_mem = n * (di * di + do * do) * factor_bytes
-    # fp32 ring windows of the last r stat vectors per factor (rank > 1,
-    # or any rank under the async double-buffered schedule)
-    window_mem = n * r * (di + do) * 4 if (r > 1 or staleness) else 0
+    # ring windows of the last r stat vectors per factor (rank > 1, or
+    # any rank under the async double-buffered schedule); fp32 unless the
+    # banks are quantized, in which case the windows store at the same
+    # width with per-row scales (DESIGN.md §16)
+    win_elem = 4 if factor_quant == "none" else factor_bytes
+    has_window = r > 1 or staleness
+    window_mem = n * r * (di + do) * win_elem if has_window else 0
     pending_mem = factor_mem if staleness else 0
+    # int8 mode: per-slice fp32 scales for each L/R bank (x2 for the
+    # pending bank), per-row window scales, and the full-shape fp32
+    # error-feedback accumulators (world-independent state; the dist wire
+    # path leaves them zero — DESIGN.md §16)
+    scale_mem = ef_mem = 0
+    if factor_quant == "int8":
+        scale_mem = n * 2 * 4 * (2 if staleness else 1)
+        if has_window:
+            scale_mem += n * r * 2 * 4
+        ef_mem = n * (di * di + do * do) * 4
     return {
         "bucket_id": bucket.bucket_id,
         "n_layers": bucket.n_slots,
@@ -283,6 +392,8 @@ def bucket_cost(bucket: FactorBucket, factor_bytes: int = 2,
         "factor_bytes": factor_mem,
         "window_bytes": window_mem,
         "pending_factor_bytes": pending_mem,
+        "quant_scale_bytes": scale_mem,
+        "quant_ef_bytes": ef_mem,
         "health_state_bytes": 8 if health else 0,
         "smw_flops_per_inv": smw_flops,
         "precond_flops_per_step": precond_flops,
@@ -367,9 +478,10 @@ def bucket_owner_map(manifest: BucketManifest, world_size: int,
     return out
 
 
-def bucket_comm_cost(bucket: FactorBucket, world_size: int = 1,
-                     factor_bytes: int = 2,
-                     stats_bytes: int = 2, rank: int = 1) -> Dict[str, Any]:
+def bucket_comm_cost(bucket: FactorBucket, world_size: int,
+                     factor_bytes: int,
+                     stats_bytes: int, rank: int = 1,
+                     factor_quant: str = "none") -> Dict[str, Any]:
     """Analytic per-bucket collective payload bytes (per worker, per step)
     for the distributed schedules (DESIGN.md §10; benchmarks/comm_volume).
 
@@ -394,17 +506,29 @@ def bucket_comm_cost(bucket: FactorBucket, world_size: int = 1,
     it ships exactly the same bytes per step as the sync schedule — the
     `staleness-bound` lint checker (analysis/checkers.py) proves this
     statically against these numbers.
+
+    ``factor_bytes``/``stats_bytes`` are the wire byte widths — derive
+    them from the config (``factor_itemsize`` + the stat payload dtype),
+    never hard-code them.  Under ``factor_quant='int8'`` the owner-gather
+    payload is the int8 values plus the per-slice fp32 scales
+    (``owner_gather_scale_bytes_per_phase_step``), ~2x below the bf16
+    wire format (DESIGN.md §16).
     """
     n = bucket_slices(bucket)
     di, do = bucket.d_in, bucket.d_out
     factor_mem = n * (di * di + do * do) * factor_bytes
     chunk = -(-n // max(world_size, 1))
     step_bytes = n * (di + do) * stats_bytes
+    # int8 wire: each gathered chunk ships one fp32 scale per L/R slice
+    # alongside the int8 values (sharding/collectives.py gather path)
+    scale_bytes = chunk * 2 * 4 if factor_quant == "int8" else 0
     return {
         "rank1_stats_bytes_per_step": step_bytes,
         "rank_window_bytes_per_inv": max(rank, 1) * step_bytes,
         "kfac_factor_bytes_per_inv": factor_mem,
-        "owner_gather_bytes_per_phase_step": factor_mem * chunk // n,
+        "owner_gather_bytes_per_phase_step":
+            factor_mem * chunk // n + scale_bytes,
+        "owner_gather_scale_bytes_per_phase_step": scale_bytes,
     }
 
 
@@ -431,6 +555,31 @@ def window_push(win: jnp.ndarray, count: jnp.ndarray,
     onehot = jnp.arange(r) == pos[..., None]               # (*lead, r)
     return jnp.where(onehot[..., None], vec[..., None, :].astype(win.dtype),
                      win)
+
+
+def window_push_quant(win: jnp.ndarray, win_scale: jnp.ndarray,
+                      count: jnp.ndarray, vec: jnp.ndarray
+                      ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Quantized ring-write: encode ``vec`` per row (axes=1) and scatter
+    the int8 row plus its scale into row ``count % r``.
+
+    win: (*lead, r, d) int8; win_scale: (*lead, r) fp32; vec: (*lead, d).
+    Scales are PER ROW, so a push requantizes only the incoming row —
+    rows already in the ring keep their codes and scales bit-unchanged,
+    which is why the window needs no error feedback: each stored row is
+    an exact encode of the vector it was pushed with (DESIGN.md §16)."""
+    qv, sv = quant_encode(vec, axes=1)
+    r = win.shape[-2]
+    pos = jnp.mod(jnp.asarray(count), r)
+    onehot = jnp.arange(r) == pos[..., None]               # (*lead, r)
+    new_win = jnp.where(onehot[..., None], qv[..., None, :], win)
+    new_scale = jnp.where(onehot, sv[..., None], win_scale)
+    return new_win, new_scale
+
+
+def window_decode(win: jnp.ndarray, win_scale: jnp.ndarray) -> jnp.ndarray:
+    """fp32 view of a quantized stat window (per-row scales)."""
+    return win.astype(jnp.float32) * win_scale[..., None]
 
 
 def window_ordered(win: jnp.ndarray, count: jnp.ndarray) -> jnp.ndarray:

@@ -13,6 +13,7 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import stats as statlib
 from repro.kernels import matmul as mm
 from repro.kernels import precond as pc
 from repro.kernels import rank1_smw as rk
@@ -112,17 +113,24 @@ class KernelPlan:
 
 
 def fused_precond_plan(d_in: int, d_out: int, *, block: int = 0,
-                       factor_dtype="bfloat16") -> KernelPlan:
+                       factor_dtype="bfloat16",
+                       factor_quant: str = "none") -> KernelPlan:
     """What :func:`fused_precondition` will do for a (d_in, d_out) slice:
     two (d_in_p, d_out_p) fp32 scratches + both factors VMEM-resident
-    (kernels/precond.py); over budget it falls back to two matmuls."""
+    (kernels/precond.py); over budget it falls back to two matmuls.
+
+    ``factor_quant`` resolves the *storage* dtype of the resident factors
+    (DESIGN.md §16): int8 residents shrink the VMEM footprint 2x vs bf16
+    and ride two (1, 1) fp32 scale inputs."""
     bi = block or _pick_block(d_in)
     bj = block or _pick_block(d_out)
     dip, dop = _padded_size(d_in, bi), _padded_size(d_out, bj)
-    item = jnp.dtype(factor_dtype).itemsize
+    item = statlib.factor_itemsize(factor_dtype, factor_quant)
+    scales = 2 * 4 if factor_quant == "int8" else 0
     vmem = (2 * dip * dop * 4                     # T + delta scratches
             + dip * dip * item + dop * dop * item  # resident factors
-            + dip * bj * item + bi * bj * 4)       # streaming G/out tiles
+            + dip * bj * item + bi * bj * 4        # streaming G/out tiles
+            + scales)                              # (1, 1) dequant scales
     return KernelPlan(
         kernel="fused_precond", dims=(d_in, d_out), padded=(dip, dop),
         block=(bi, bj), grid=(3, dip // bi, dop // bj), rank=1,
@@ -131,13 +139,18 @@ def fused_precond_plan(d_in: int, d_out: int, *, block: int = 0,
 
 
 def fused_smw_plan(d: int, *, block: int = 0,
-                   factor_dtype="bfloat16") -> KernelPlan:
+                   factor_dtype="bfloat16",
+                   factor_quant: str = "none") -> KernelPlan:
     """Rank-1 fused SMW (kernels/rank1_smw.fused_smw): persistent (d, 1)
-    fp32 u scratch + streaming J/out/v tiles.  No fallback path."""
+    fp32 u scratch + streaming J/out/v tiles.  No fallback path.  With
+    int8 ``factor_quant`` the streaming J tile is int8 (dequant fused at
+    the load site) but the out tile is written fp32."""
     blk = block or _pick_block(d)
     dp = _padded_size(d, blk)
-    item = jnp.dtype(factor_dtype).itemsize
-    vmem = dp * 4 + 2 * blk * blk * item + 2 * blk * 4
+    item = statlib.factor_itemsize(factor_dtype, factor_quant)
+    out_item = 4 if factor_quant == "int8" else item
+    vmem = (dp * 4 + blk * blk * (item + out_item) + 2 * blk * 4
+            + (4 if factor_quant == "int8" else 0))
     return KernelPlan(
         kernel="fused_smw", dims=(d,), padded=(dp,), block=(blk,),
         grid=(2, dp // blk, dp // blk), rank=1, vmem_bytes=int(vmem),
@@ -146,7 +159,8 @@ def fused_smw_plan(d: int, *, block: int = 0,
 
 
 def fused_block_smw_plan(d: int, rank: int, *, block: int = 0,
-                         factor_dtype="bfloat16") -> KernelPlan:
+                         factor_dtype="bfloat16",
+                         factor_quant: str = "none") -> KernelPlan:
     """Block rank-r fused SMW (kernels/rank1_smw.fused_block_smw):
     persistent (d, rpad) fp32 U scratch + two (rpad, rpad) fp32 Gram/mid
     scratches + streaming tiles, rank sublane-padded to a multiple of 8.
@@ -155,9 +169,11 @@ def fused_block_smw_plan(d: int, rank: int, *, block: int = 0,
     blk = block or _pick_block(d)
     dp = _padded_size(d, blk)
     rpad = -(-max(rank, 1) // 8) * 8
-    item = jnp.dtype(factor_dtype).itemsize
+    item = statlib.factor_itemsize(factor_dtype, factor_quant)
+    out_item = 4 if factor_quant == "int8" else item
     vmem = (dp * rpad * 4 + 2 * rpad * rpad * 4
-            + 2 * blk * blk * item + 2 * rpad * blk * 4)
+            + blk * blk * (item + out_item) + 2 * rpad * blk * 4
+            + (4 if factor_quant == "int8" else 0))
     return KernelPlan(
         kernel="fused_block_smw", dims=(d,), padded=(dp,), block=(blk,),
         grid=(2, dp // blk, dp // blk), rank=rpad, vmem_bytes=int(vmem),
@@ -166,49 +182,60 @@ def fused_block_smw_plan(d: int, rank: int, *, block: int = 0,
 
 
 def bucket_kernel_plans(d_in: int, d_out: int, *, rank: int = 1,
-                        factor_dtype="bfloat16",
+                        factor_dtype="bfloat16", factor_quant: str = "none",
                         block: int = 0) -> Tuple[KernelPlan, ...]:
     """Every kernel dispatch one factor bucket implies per inversion /
     step, in dispatch order: one SMW update per factor dim + the fused
     precondition over the (d_in, d_out) slice."""
     if rank > 1:
         smw = tuple(fused_block_smw_plan(d, rank, block=block,
-                                         factor_dtype=factor_dtype)
+                                         factor_dtype=factor_dtype,
+                                         factor_quant=factor_quant)
                     for d in (d_in, d_out))
     else:
         smw = tuple(fused_smw_plan(d, block=block,
-                                   factor_dtype=factor_dtype)
+                                   factor_dtype=factor_dtype,
+                                   factor_quant=factor_quant)
                     for d in (d_in, d_out))
     return smw + (fused_precond_plan(d_in, d_out, block=block,
-                                     factor_dtype=factor_dtype),)
+                                     factor_dtype=factor_dtype,
+                                     factor_quant=factor_quant),)
 
 
 def smw_rank1_update(j_inv: jnp.ndarray, v: jnp.ndarray, *, gamma: float,
                      variant: str = "paper", block: int = 0,
-                     interpret: bool = False) -> jnp.ndarray:
+                     interpret: bool = False,
+                     scale: jnp.ndarray = None) -> jnp.ndarray:
     """Fused-Pallas Alg. 1 line 7/8.  v: (d,) or (r, d) chained.
 
     One ``pallas_call`` per rank-1 update (kernels/rank1_smw.fused_smw):
     matvec, scalar s, and the rank-1 write share a single grid, so u and s
-    never leave VMEM/SMEM and there is no per-piece dispatch."""
+    never leave VMEM/SMEM and there is no per-piece dispatch.
+
+    ``scale`` (scalar fp32, DESIGN.md §16) marks ``j_inv`` as an int8
+    resident: the kernel dequantizes it at the VMEM load site and the
+    updated inverse comes back fp32 (the caller requantizes — computing
+    the new scale needs a global max-abs the grid cannot see)."""
     if v.ndim == 2:
         for i in range(v.shape[0]):
             j_inv = smw_rank1_update(j_inv, v[i], gamma=gamma,
                                      variant=variant, block=block,
-                                     interpret=interpret)
+                                     interpret=interpret, scale=scale)
+            scale = None                    # chained updates are fp32
         return j_inv
     d = j_inv.shape[0]
     blk = block or _pick_block(d)
     jp = _pad_to(j_inv, blk, (0, 1))
     vp = _pad_to(v.reshape(-1, 1).astype(jnp.float32), blk, (0,))
     out = rk.fused_smw(jp, vp, gamma=gamma, variant=variant, block=blk,
-                       interpret=interpret)
+                       interpret=interpret, scale=scale)
     return out[:d, :d]
 
 
 def smw_rank1_update_banked(j: jnp.ndarray, v: jnp.ndarray, *, gamma: float,
                             variant: str = "paper", block: int = 0,
-                            interpret: bool = False) -> jnp.ndarray:
+                            interpret: bool = False,
+                            scale: jnp.ndarray = None) -> jnp.ndarray:
     """Batched fused SMW over factor-bank leading dims (DESIGN.md §2).
 
     j: (*lead, d, d) — lead = (n_bucket_layers, *stack); v: (*lead, d) or
@@ -219,7 +246,11 @@ def smw_rank1_update_banked(j: jnp.ndarray, v: jnp.ndarray, *, gamma: float,
     Under the owner-sharded inversion schedule (DESIGN.md §10) the entry
     receives a *locally-sliced* bank: lead[0] is this worker's owned chunk
     (possibly zero-padded) rather than the full bucket — any lead extent
-    works, including an empty chunk, which is returned untouched."""
+    works, including an empty chunk, which is returned untouched.
+
+    ``scale`` (``lead``-shaped fp32, DESIGN.md §16) marks ``j`` as an int8
+    bank with per-slice dequant scales; the updated bank comes back fp32
+    for the caller to requantize."""
     d = j.shape[-1]
     lead = j.shape[:-2]
     assert v.shape[:len(lead)] == lead, (v.shape, j.shape)
@@ -227,9 +258,15 @@ def smw_rank1_update_banked(j: jnp.ndarray, v: jnp.ndarray, *, gamma: float,
     fn = partial(smw_rank1_update, gamma=gamma, variant=variant,
                  block=block, interpret=interpret)
     if not lead:
-        return fn(j, v)
+        return fn(j, v, scale=scale)
     if 0 in lead:                                   # empty owner slice
-        return j
+        return j.astype(jnp.float32) if scale is not None else j
+    if scale is not None:
+        assert scale.shape == lead, (scale.shape, j.shape)
+        out = jax.vmap(lambda jj, vv, ss: fn(jj, vv, scale=ss))(
+            j.reshape((-1, d, d)), v.reshape((-1,) + rank + (d,)),
+            scale.reshape((-1,)))
+        return out.reshape(lead + (d, d))
     out = jax.vmap(fn)(j.reshape((-1, d, d)),
                        v.reshape((-1,) + rank + (d,)))
     return out.reshape(j.shape)
@@ -237,7 +274,8 @@ def smw_rank1_update_banked(j: jnp.ndarray, v: jnp.ndarray, *, gamma: float,
 
 def smw_block_update(j_inv: jnp.ndarray, v: jnp.ndarray, *, gamma: float,
                      variant: str = "paper", n_valid=None, block: int = 0,
-                     interpret: bool = False, with_pivot: bool = False):
+                     interpret: bool = False, with_pivot: bool = False,
+                     scale: jnp.ndarray = None):
     """Fused-Pallas block rank-r Woodbury update (DESIGN.md §11).
 
     v: (r, d) window rows oldest-first.  The √w_i row weights and the γ^m
@@ -251,7 +289,10 @@ def smw_block_update(j_inv: jnp.ndarray, v: jnp.ndarray, *, gamma: float,
     minimum |Gauss–Jordan pivot| of the in-kernel r×r solve (fp32) —
     the conditioning signal the health sentinel trips on (DESIGN.md
     §14).  The zero padding rows contribute pivots of gm² (paper) / gm
-    (exact_smw), never zero, so padding cannot mask a real collapse."""
+    (exact_smw), never zero, so padding cannot mask a real collapse.
+
+    ``scale`` (scalar fp32, DESIGN.md §16) marks ``j_inv`` as an int8
+    resident — dequant fused at the load site, fp32 output."""
     from repro.core.mkor import block_weights
     r, d = v.shape
     assert j_inv.shape == (d, d), (j_inv.shape, v.shape)
@@ -266,7 +307,7 @@ def smw_block_update(j_inv: jnp.ndarray, v: jnp.ndarray, *, gamma: float,
     out = rk.fused_block_smw(
         jp, vp, jnp.asarray(gm, jnp.float32).reshape(1, 1),
         variant=variant, block=blk, interpret=interpret,
-        with_pivot=with_pivot)
+        with_pivot=with_pivot, scale=scale)
     if with_pivot:
         out, piv = out
         return out[:d, :d], piv[0, 0]
@@ -276,7 +317,8 @@ def smw_block_update(j_inv: jnp.ndarray, v: jnp.ndarray, *, gamma: float,
 def smw_block_update_banked(j: jnp.ndarray, v: jnp.ndarray, n_valid, *,
                             gamma: float, variant: str = "paper",
                             block: int = 0, interpret: bool = False,
-                            with_pivot: bool = False):
+                            with_pivot: bool = False,
+                            scale: jnp.ndarray = None):
     """Banked fused block update: ONE batched dispatch per bucket per phase
     step (DESIGN.md §11).
 
@@ -286,7 +328,9 @@ def smw_block_update_banked(j: jnp.ndarray, v: jnp.ndarray, n_valid, *,
     the rank-1 entry, lead may be a locally-sliced owner chunk, including
     an empty one.  ``with_pivot=True`` returns ``(new, min_pivot)`` with
     the minimum in-kernel Gauss–Jordan pivot across every slice of the
-    bank (a scalar — per-bucket is the sentinel's quarantine unit)."""
+    bank (a scalar — per-bucket is the sentinel's quarantine unit).
+    ``scale`` (``lead``-shaped fp32, DESIGN.md §16) marks ``j`` as an
+    int8 bank; the updated bank comes back fp32."""
     d = j.shape[-1]
     lead = j.shape[:-2]
     r = v.shape[-2]
@@ -294,16 +338,27 @@ def smw_block_update_banked(j: jnp.ndarray, v: jnp.ndarray, n_valid, *,
     fn = partial(smw_block_update, gamma=gamma, variant=variant,
                  block=block, interpret=interpret, with_pivot=with_pivot)
     if not lead:
-        return fn(j, v, n_valid=n_valid)
+        return fn(j, v, n_valid=n_valid, scale=scale)
     if 0 in lead:                                   # empty owner slice
-        return (j, jnp.float32(jnp.inf)) if with_pivot else j
+        jf = j.astype(jnp.float32) if scale is not None else j
+        return (jf, jnp.float32(jnp.inf)) if with_pivot else jf
     nv = jnp.broadcast_to(jnp.asarray(n_valid), lead).reshape((-1,))
-    out = jax.vmap(lambda jj, vv, nn: fn(jj, vv, n_valid=nn))(
-        j.reshape((-1, d, d)), v.reshape((-1, r, d)), nv)
+    jf = j.reshape((-1, d, d))
+    vf = v.reshape((-1, r, d))
+    if scale is not None:
+        assert scale.shape == lead, (scale.shape, j.shape)
+        out = jax.vmap(lambda jj, vv, nn, ss: fn(jj, vv, n_valid=nn,
+                                                 scale=ss))(
+            jf, vf, nv, scale.reshape((-1,)))
+        out_shape = lead + (d, d)
+    else:
+        out = jax.vmap(lambda jj, vv, nn: fn(jj, vv, n_valid=nn))(
+            jf, vf, nv)
+        out_shape = j.shape
     if with_pivot:
         out, pivs = out
-        return out.reshape(j.shape), jnp.min(pivs)
-    return out.reshape(j.shape)
+        return out.reshape(out_shape), jnp.min(pivs)
+    return out.reshape(out_shape)
 
 
 def pallas_matmul(a: jnp.ndarray, b: jnp.ndarray, *, block: int = 0,
@@ -342,8 +397,9 @@ def _fused_precond_fits(d_in: int, d_out: int, r_inv, l_inv,
 
 def fused_precondition(l_inv: jnp.ndarray, r_inv: jnp.ndarray,
                        g_w: jnp.ndarray, *, rescale: bool = True,
-                       block: int = 0,
-                       interpret: bool = False) -> jnp.ndarray:
+                       block: int = 0, interpret: bool = False,
+                       l_scale: jnp.ndarray = None,
+                       r_scale: jnp.ndarray = None) -> jnp.ndarray:
     """Alg. 1 lines 9-10 in one dispatch: ΔW = R⁻¹ G L⁻¹ with the Frobenius
     rescale reduction accumulated in the same kernel (kernels/precond.py).
 
@@ -354,7 +410,14 @@ def fused_precondition(l_inv: jnp.ndarray, r_inv: jnp.ndarray,
     The fallback is not silent: it emits a :class:`PallasFallbackWarning`
     at trace time and bumps :func:`fallback_counts` — the same decision the
     static kernel lint (repro.analysis) reports per bucket.
+
+    ``l_scale``/``r_scale`` (scalar fp32, both or neither — DESIGN.md §16)
+    mark the inverse factors as int8 residents.  The fused path dequantizes
+    at the VMEM load sites; the fallback path dequantizes into fp32 matmul
+    inputs (registers/VMEM under jit, no resident HBM copy survives).
     """
+    assert (l_scale is None) == (r_scale is None), \
+        "quantized precondition needs both factor scales"
     if g_w.ndim > 2 or not _fused_precond_fits(
             g_w.shape[-2], g_w.shape[-1], r_inv, l_inv, block):
         reason = "extra_dims" if g_w.ndim > 2 else "vmem_budget"
@@ -365,6 +428,9 @@ def fused_precondition(l_inv: jnp.ndarray, r_inv: jnp.ndarray,
             f"g_w shape {tuple(g_w.shape)}, plan VMEM "
             f"{plan.vmem_bytes / 2**20:.1f}MB vs budget "
             f"{plan.vmem_budget / 2**20:.0f}MB")
+        if l_scale is not None:
+            l_inv = ref.dequant_ref(l_inv, l_scale)
+            r_inv = ref.dequant_ref(r_inv, r_scale)
         delta = two_sided_precondition(l_inv, r_inv, g_w, block=block,
                                        interpret=interpret)
         if rescale:
@@ -380,14 +446,16 @@ def fused_precondition(l_inv: jnp.ndarray, r_inv: jnp.ndarray,
     lp = _pad_to(l_inv, bj, (0, 1))
     gp = _pad_to(_pad_to(g_w, bi, (0,)), bj, (1,))
     out = pc.fused_precond(rp, gp, lp, rescale=rescale, block_i=bi,
-                           block_j=bj, interpret=interpret)
+                           block_j=bj, interpret=interpret,
+                           r_scale=r_scale, l_scale=l_scale)
     return out[:d_in, :d_out]
 
 
 def fused_precondition_banked(l_inv: jnp.ndarray, r_inv: jnp.ndarray,
                               g_w: jnp.ndarray, *, rescale: bool = True,
-                              block: int = 0,
-                              interpret: bool = False) -> jnp.ndarray:
+                              block: int = 0, interpret: bool = False,
+                              l_scale: jnp.ndarray = None,
+                              r_scale: jnp.ndarray = None) -> jnp.ndarray:
     """Banked entry for the fused precondition kernel (DESIGN.md §9).
 
     l_inv: (*lead, d_out, d_out), r_inv: (*lead, d_in, d_in), g_w:
@@ -396,18 +464,29 @@ def fused_precondition_banked(l_inv: jnp.ndarray, r_inv: jnp.ndarray,
     per-slice Frobenius rescale spans the slice's extra dims (matching
     core.mkor.rescale_update under ``_vmap_over_stack``).  As with the SMW
     entry, lead may be a locally-sliced chunk of the full bank.
+    ``l_scale``/``r_scale`` (``lead``-shaped fp32, both or neither) mark
+    the banks as int8 residents with per-slice dequant scales.
     """
     lead = l_inv.shape[:-2]
     assert r_inv.shape[:len(lead)] == lead, (r_inv.shape, l_inv.shape)
     assert g_w.shape[:len(lead)] == lead, (g_w.shape, l_inv.shape)
+    assert (l_scale is None) == (r_scale is None), \
+        "quantized precondition needs both factor scales"
     fn = partial(fused_precondition, rescale=rescale, block=block,
                  interpret=interpret)
     if not lead:
-        return fn(l_inv, r_inv, g_w)
+        return fn(l_inv, r_inv, g_w, l_scale=l_scale, r_scale=r_scale)
     if 0 in lead:                                   # empty owner slice
         return jnp.zeros(g_w.shape, g_w.dtype)
-    out = jax.vmap(fn)(
-        l_inv.reshape((-1,) + l_inv.shape[len(lead):]),
-        r_inv.reshape((-1,) + r_inv.shape[len(lead):]),
-        g_w.reshape((-1,) + g_w.shape[len(lead):]))
+    lf = l_inv.reshape((-1,) + l_inv.shape[len(lead):])
+    rf = r_inv.reshape((-1,) + r_inv.shape[len(lead):])
+    gf = g_w.reshape((-1,) + g_w.shape[len(lead):])
+    if l_scale is not None:
+        assert l_scale.shape == lead, (l_scale.shape, l_inv.shape)
+        assert r_scale.shape == lead, (r_scale.shape, r_inv.shape)
+        out = jax.vmap(lambda ll, rr, gg, ls, rs:
+                       fn(ll, rr, gg, l_scale=ls, r_scale=rs))(
+            lf, rf, gf, l_scale.reshape((-1,)), r_scale.reshape((-1,)))
+    else:
+        out = jax.vmap(fn)(lf, rf, gf)
     return out.reshape(lead + out.shape[1:])

@@ -53,9 +53,15 @@ RESCALE_EPS = 1e-30          # same guard as core.mkor.rescale_update
 FUSED_PRECOND_VMEM_BUDGET = 12 * 2 ** 20
 
 
-def _fused_precond_kernel(r_ref, g_ref, l_ref, out_ref, t_ref, d_ref,
-                          gn_ref, dn_ref, *, rescale: bool,
-                          block_i: int, block_j: int):
+def _fused_precond_kernel(r_ref, g_ref, l_ref, *refs, rescale: bool,
+                          block_i: int, block_j: int, quant: bool = False):
+    # ``quant`` (DESIGN.md §16) appends two (1, 1) fp32 per-slice scale
+    # inputs after l_ref: both factors arrive int8 and dequantize at
+    # their VMEM load sites — no fp32 factor copy in HBM.
+    refs = list(refs)
+    if quant:
+        rs_ref, ls_ref = refs.pop(0), refs.pop(0)
+    out_ref, t_ref, d_ref, gn_ref, dn_ref = refs
     p, i, j = pl.program_id(0), pl.program_id(1), pl.program_id(2)
     rows = pl.ds(i * block_i, block_i)
     cols = pl.ds(j * block_j, block_j)
@@ -68,8 +74,10 @@ def _fused_precond_kernel(r_ref, g_ref, l_ref, out_ref, t_ref, d_ref,
             dn_ref[0, 0] = 0.0
 
         g_panel = g_ref[...].astype(jnp.float32)
-        t_ref[rows, cols] = jnp.dot(r_ref[rows, :].astype(jnp.float32),
-                                    g_panel,
+        r_panel = r_ref[rows, :].astype(jnp.float32)
+        if quant:
+            r_panel = r_panel * rs_ref[0, 0]
+        t_ref[rows, cols] = jnp.dot(r_panel, g_panel,
                                     preferred_element_type=jnp.float32)
 
         # each G column panel appears once per i — count it once
@@ -79,7 +87,10 @@ def _fused_precond_kernel(r_ref, g_ref, l_ref, out_ref, t_ref, d_ref,
 
     @pl.when(p == 1)
     def _delta_and_dnorm():
-        d_tile = jnp.dot(t_ref[rows, :], l_ref[:, cols].astype(jnp.float32),
+        l_panel = l_ref[:, cols].astype(jnp.float32)
+        if quant:
+            l_panel = l_panel * ls_ref[0, 0]
+        d_tile = jnp.dot(t_ref[rows, :], l_panel,
                          preferred_element_type=jnp.float32)
         d_ref[rows, cols] = d_tile
         dn_ref[0, 0] += jnp.sum(d_tile * d_tile)
@@ -97,29 +108,44 @@ def _fused_precond_kernel(r_ref, g_ref, l_ref, out_ref, t_ref, d_ref,
 def fused_precond(r_inv: jnp.ndarray, g: jnp.ndarray, l_inv: jnp.ndarray, *,
                   rescale: bool = True, block_i: int = DEFAULT_BLOCK,
                   block_j: int = DEFAULT_BLOCK,
-                  interpret: bool = False) -> jnp.ndarray:
+                  interpret: bool = False,
+                  r_scale: jnp.ndarray = None,
+                  l_scale: jnp.ndarray = None) -> jnp.ndarray:
     """One-dispatch  ΔW = rescale(R⁻¹ G L⁻¹)  (Alg. 1 lines 9-10).
 
     r_inv: (d_in, d_in), g: (d_in, d_out), l_inv: (d_out, d_out); d_in a
     multiple of ``block_i`` and d_out of ``block_j`` (kernels/ops.py pads).
     Returns fp32, like the einsum reference ``core.mkor.precondition``.
+
+    ``r_scale``/``l_scale`` ((1, 1) fp32 per-slice quant scales, both or
+    neither — DESIGN.md §16) mark the factors as int8 residents that
+    dequantize at the VMEM load sites.
     """
     d_in, d_out = g.shape
     assert r_inv.shape == (d_in, d_in), (r_inv.shape, g.shape)
     assert l_inv.shape == (d_out, d_out), (l_inv.shape, g.shape)
     assert d_in % block_i == 0 and d_out % block_j == 0, \
         f"pad to block multiples ({g.shape} % ({block_i}, {block_j}))"
+    assert (r_scale is None) == (l_scale is None), \
+        "quantized precondition needs both factor scales"
+    quant = r_scale is not None
     grid = (3, d_in // block_i, d_out // block_j)
+    in_specs = [
+        # factors stay VMEM-resident across the whole grid
+        pl.BlockSpec((d_in, d_in), lambda p, i, j: (0, 0)),
+        pl.BlockSpec((d_in, block_j), lambda p, i, j: (0, j)),
+        pl.BlockSpec((d_out, d_out), lambda p, i, j: (0, 0)),
+    ]
+    operands = [r_inv, g, l_inv]
+    if quant:
+        for s in (r_scale, l_scale):
+            in_specs.append(pl.BlockSpec((1, 1), lambda p, i, j: (0, 0)))
+            operands.append(jnp.asarray(s, jnp.float32).reshape(1, 1))
     return pl.pallas_call(
         functools.partial(_fused_precond_kernel, rescale=rescale,
-                          block_i=block_i, block_j=block_j),
+                          block_i=block_i, block_j=block_j, quant=quant),
         grid=grid,
-        in_specs=[
-            # factors stay VMEM-resident across the whole grid
-            pl.BlockSpec((d_in, d_in), lambda p, i, j: (0, 0)),
-            pl.BlockSpec((d_in, block_j), lambda p, i, j: (0, j)),
-            pl.BlockSpec((d_out, d_out), lambda p, i, j: (0, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((block_i, block_j), lambda p, i, j: (i, j)),
         out_shape=jax.ShapeDtypeStruct((d_in, d_out), jnp.float32),
         scratch_shapes=[pltpu.VMEM((d_in, d_out), jnp.float32),
@@ -127,4 +153,4 @@ def fused_precond(r_inv: jnp.ndarray, g: jnp.ndarray, l_inv: jnp.ndarray, *,
                         pltpu.SMEM((1, 1), jnp.float32),
                         pltpu.SMEM((1, 1), jnp.float32)],
         interpret=interpret,
-    )(r_inv, g, l_inv)
+    )(*operands)

@@ -118,8 +118,9 @@ def smw_vectors(j: jnp.ndarray, v: jnp.ndarray, *, block: int = DEFAULT_BLOCK,
 # ----------------------------------------------------------------------- #
 # Fused SMW: matvec + scalar + rank-1 write in one pallas_call
 # ----------------------------------------------------------------------- #
-def _fused_smw_kernel(j_ref, vr_ref, vc_ref, out_ref, u_ref, s_ref, *,
-                      gamma: float, variant: str, block: int):
+def _fused_smw_kernel(j_ref, vr_ref, vc_ref, *refs,
+                      gamma: float, variant: str, block: int,
+                      quant: bool = False):
     """Two-pass grid (pass, rows, cols).
 
     Pass 0: u[rows] += J[rows, cols] @ v[cols]  into the persistent VMEM
@@ -129,12 +130,23 @@ def _fused_smw_kernel(j_ref, vr_ref, vc_ref, out_ref, u_ref, s_ref, *,
     Pass 1: out[rows, cols] = scale·J + coef(s)·u_rows u_colsᵀ, with the
     coefficient math (Lemma 3.1 positive denominator) done in fp32 on the
     scalar unit.  u lives in VMEM for the whole grid; only J tiles stream.
+
+    ``quant`` adds a (1, 1) fp32 per-slice scale input after the v pair
+    (DESIGN.md §16): J arrives int8 and every tile load dequantizes in
+    VMEM — the fp32 factor never exists in HBM.
     """
+    refs = list(refs)
+    sc_ref = refs.pop(0) if quant else None
+    out_ref, u_ref, s_ref = refs
     p, i, k = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+
+    def _j_tile():
+        jf = j_ref[...].astype(jnp.float32)
+        return jf * sc_ref[0, 0] if quant else jf
 
     @pl.when(p == 0)
     def _accumulate():
-        t = jnp.dot(j_ref[...].astype(jnp.float32), vc_ref[...],
+        t = jnp.dot(_j_tile(), vc_ref[...],
                     preferred_element_type=jnp.float32)
 
         @pl.when(k == 0)
@@ -164,13 +176,13 @@ def _fused_smw_kernel(j_ref, vr_ref, vc_ref, out_ref, u_ref, s_ref, *,
         outer = jnp.dot(u_ref[pl.ds(i * block, block), :],
                         u_ref[pl.ds(k * block, block), :].T,
                         preferred_element_type=jnp.float32)
-        out_ref[...] = (scale * j_ref[...].astype(jnp.float32)
+        out_ref[...] = (scale * _j_tile()
                         + coef * outer).astype(out_ref.dtype)
 
 
-def _fused_block_smw_kernel(j_ref, vr_ref, vc_ref, gm_ref, out_ref,
+def _fused_block_smw_kernel(j_ref, vr_ref, vc_ref, gm_ref,
                             *refs, variant: str, block: int, rank: int,
-                            with_pivot: bool = False):
+                            with_pivot: bool = False, quant: bool = False):
     """Two-pass grid (pass, rows, cols) — the block rank-r SMW update
     (DESIGN.md §11) in ONE dispatch.
 
@@ -194,16 +206,24 @@ def _fused_block_smw_kernel(j_ref, vr_ref, vc_ref, gm_ref, out_ref,
     near-zero or NaN pivot means the mid matrix lost positive
     definiteness (only possible through rounding/corruption; Lemma 3.1
     guarantees PD in exact arithmetic), i.e. the factor update that was
-    just written is untrustworthy."""
-    if with_pivot:
-        piv_ref, u_ref, s_ref, m_ref = refs
-    else:
-        piv_ref, (u_ref, s_ref, m_ref) = None, refs
+    just written is untrustworthy.
+
+    ``quant`` adds a (1, 1) fp32 per-slice scale input after gm (DESIGN.md
+    §16): J arrives int8 and every tile load dequantizes in VMEM."""
+    refs = list(refs)
+    sc_ref = refs.pop(0) if quant else None
+    out_ref = refs.pop(0)
+    piv_ref = refs.pop(0) if with_pivot else None
+    u_ref, s_ref, m_ref = refs
     p, i, k = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+
+    def _j_tile():
+        jf = j_ref[...].astype(jnp.float32)
+        return jf * sc_ref[0, 0] if quant else jf
 
     @pl.when(p == 0)
     def _accumulate():
-        t = jnp.dot(j_ref[...].astype(jnp.float32), vc_ref[...].T,
+        t = jnp.dot(_j_tile(), vc_ref[...].T,
                     preferred_element_type=jnp.float32)        # (B, r)
 
         @pl.when(k == 0)
@@ -263,7 +283,7 @@ def _fused_block_smw_kernel(j_ref, vr_ref, vc_ref, gm_ref, out_ref,
         term = jnp.dot(
             jnp.dot(ui, m_ref[...], preferred_element_type=jnp.float32),
             uk.T, preferred_element_type=jnp.float32)
-        jf = j_ref[...].astype(jnp.float32)
+        jf = _j_tile()
         if variant == "paper":
             outv = gm * jf + term
         else:
@@ -273,7 +293,8 @@ def _fused_block_smw_kernel(j_ref, vr_ref, vc_ref, gm_ref, out_ref,
 
 def fused_block_smw(j: jnp.ndarray, vt: jnp.ndarray, gm: jnp.ndarray, *,
                     variant: str = "paper", block: int = DEFAULT_BLOCK,
-                    interpret: bool = False, with_pivot: bool = False):
+                    interpret: bool = False, with_pivot: bool = False,
+                    scale: jnp.ndarray = None):
     """One-dispatch block rank-r SMW inverse update (DESIGN.md §11).
 
     J: (d, d) any dtype; vt: (r, d) fp32 PRE-WEIGHTED window rows
@@ -284,13 +305,20 @@ def fused_block_smw(j: jnp.ndarray, vt: jnp.ndarray, gm: jnp.ndarray, *,
     ``with_pivot=True`` additionally returns a (1, 1) fp32 array holding
     the minimum |Gauss–Jordan pivot| of the r×r mid-matrix solve — the
     conditioning signal the health sentinel trips on (DESIGN.md §14).
-    The factor update itself is bit-identical with or without it."""
+    The factor update itself is bit-identical with or without it.
+
+    ``scale`` (a (1, 1) fp32 per-slice quant scale, DESIGN.md §16) marks J
+    as int8 resident: tiles dequantize at the VMEM load and the update is
+    returned in fp32 for the caller to requantize — the fp32 factor never
+    materializes in HBM."""
     d = j.shape[0]
     r = vt.shape[0]
     assert d % block == 0, f"pad to block multiple ({d} % {block})"
     assert vt.shape == (r, d), (vt.shape, j.shape)
+    quant = scale is not None
     g = d // block
-    out_shape = jax.ShapeDtypeStruct((d, d), j.dtype)
+    out_dtype = jnp.float32 if quant else j.dtype
+    out_shape = jax.ShapeDtypeStruct((d, d), out_dtype)
     out_spec = pl.BlockSpec((block, block), lambda p, i, k: (i, k))
     if with_pivot:
         # the (1, 1) pivot block is revisited by every grid step and
@@ -299,48 +327,66 @@ def fused_block_smw(j: jnp.ndarray, vt: jnp.ndarray, gm: jnp.ndarray, *,
         out_shape = (out_shape, jax.ShapeDtypeStruct((1, 1), jnp.float32))
         out_spec = (out_spec,
                     pl.BlockSpec((1, 1), lambda p, i, k: (0, 0)))
+    in_specs = [
+        pl.BlockSpec((block, block), lambda p, i, k: (i, k)),
+        pl.BlockSpec((r, block), lambda p, i, k: (0, i)),
+        pl.BlockSpec((r, block), lambda p, i, k: (0, k)),
+        pl.BlockSpec((1, 1), lambda p, i, k: (0, 0)),
+    ]
+    operands = [j, vt, vt, gm]
+    if quant:
+        in_specs.append(pl.BlockSpec((1, 1), lambda p, i, k: (0, 0)))
+        operands.append(jnp.asarray(scale, jnp.float32).reshape(1, 1))
     return pl.pallas_call(
         functools.partial(_fused_block_smw_kernel, variant=variant,
-                          block=block, rank=r, with_pivot=with_pivot),
+                          block=block, rank=r, with_pivot=with_pivot,
+                          quant=quant),
         grid=(2, g, g),
-        in_specs=[
-            pl.BlockSpec((block, block), lambda p, i, k: (i, k)),
-            pl.BlockSpec((r, block), lambda p, i, k: (0, i)),
-            pl.BlockSpec((r, block), lambda p, i, k: (0, k)),
-            pl.BlockSpec((1, 1), lambda p, i, k: (0, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=out_spec,
         out_shape=out_shape,
         scratch_shapes=[pltpu.VMEM((d, r), jnp.float32),
                         pltpu.VMEM((r, r), jnp.float32),
                         pltpu.VMEM((r, r), jnp.float32)],
         interpret=interpret,
-    )(j, vt, vt, gm)
+    )(*operands)
 
 
 def fused_smw(j: jnp.ndarray, v: jnp.ndarray, *, gamma: float,
               variant: str = "paper", block: int = DEFAULT_BLOCK,
-              interpret: bool = False) -> jnp.ndarray:
+              interpret: bool = False,
+              scale: jnp.ndarray = None) -> jnp.ndarray:
     """One-dispatch SMW inverse update (Alg. 1 line 7/8, Eq. 5/6).
 
     J: (d, d) any dtype, v: (d, 1) fp32, d a block multiple (ops.py pads).
     Returns  scale·J + coef(vᵀJv)·(Jv)(Jv)ᵀ  in J's dtype.
+
+    ``scale`` (a (1, 1) fp32 per-slice quant scale, DESIGN.md §16) marks J
+    as int8 resident: tiles dequantize at the VMEM load and the update is
+    returned in fp32 for the caller to requantize.
     """
     d = j.shape[0]
     assert d % block == 0, f"pad to block multiple ({d} % {block})"
+    quant = scale is not None
     g = d // block
+    in_specs = [
+        pl.BlockSpec((block, block), lambda p, i, k: (i, k)),
+        pl.BlockSpec((block, 1), lambda p, i, k: (i, 0)),
+        pl.BlockSpec((block, 1), lambda p, i, k: (k, 0)),
+    ]
+    operands = [j, v, v]
+    if quant:
+        in_specs.append(pl.BlockSpec((1, 1), lambda p, i, k: (0, 0)))
+        operands.append(jnp.asarray(scale, jnp.float32).reshape(1, 1))
     return pl.pallas_call(
         functools.partial(_fused_smw_kernel, gamma=gamma, variant=variant,
-                          block=block),
+                          block=block, quant=quant),
         grid=(2, g, g),
-        in_specs=[
-            pl.BlockSpec((block, block), lambda p, i, k: (i, k)),
-            pl.BlockSpec((block, 1), lambda p, i, k: (i, 0)),
-            pl.BlockSpec((block, 1), lambda p, i, k: (k, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((block, block), lambda p, i, k: (i, k)),
-        out_shape=jax.ShapeDtypeStruct((d, d), j.dtype),
+        out_shape=jax.ShapeDtypeStruct(
+            (d, d), jnp.float32 if quant else j.dtype),
         scratch_shapes=[pltpu.VMEM((d, 1), jnp.float32),
                         pltpu.SMEM((1, 1), jnp.float32)],
         interpret=interpret,
-    )(j, v, v)
+    )(*operands)

@@ -111,3 +111,40 @@ def fused_precondition_ref(l_inv: jnp.ndarray, r_inv: jnp.ndarray,
     gn = jnp.sqrt(jnp.sum(gf * gf))
     dn = jnp.sqrt(jnp.sum(delta * delta))
     return delta * (gn / jnp.maximum(dn, 1e-30))
+
+
+# ----------------------------------------------------------------------- #
+# Quantized-factor oracles (DESIGN.md §16): the fused kernels take int8
+# values + a per-slice scale and dequantize at the load site; these
+# references dequantize up front (the "separate cast pass" the fused path
+# eliminates) and reuse the fp32 oracles above, so kernel parity tests
+# prove the fusion changes nothing numerically.
+# ----------------------------------------------------------------------- #
+def dequant_ref(q: jnp.ndarray, scale) -> jnp.ndarray:
+    """fp32 dequant of a per-slice symmetric int8 factor matrix."""
+    return q.astype(jnp.float32) * jnp.asarray(scale, jnp.float32)
+
+
+def smw_rank1_update_quant_ref(q: jnp.ndarray, scale, v: jnp.ndarray,
+                               gamma: float,
+                               variant: str = "paper") -> jnp.ndarray:
+    """Rank-1 SMW on an int8+scale resident: dequant then update (fp32)."""
+    return smw_rank1_update_ref(dequant_ref(q, scale), v, gamma, variant)
+
+
+def smw_block_update_quant_ref(q: jnp.ndarray, scale, v: jnp.ndarray,
+                               gamma: float, variant: str = "paper",
+                               n_valid=None) -> jnp.ndarray:
+    """Block rank-r Woodbury on an int8+scale resident (fp32 output)."""
+    return smw_block_update_ref(dequant_ref(q, scale), v, gamma, variant,
+                                n_valid=n_valid)
+
+
+def fused_precondition_quant_ref(l_q: jnp.ndarray, l_scale,
+                                 r_q: jnp.ndarray, r_scale,
+                                 g_w: jnp.ndarray,
+                                 rescale: bool = True) -> jnp.ndarray:
+    """Precondition + rescale with both inverse factors int8+scale."""
+    return fused_precondition_ref(dequant_ref(l_q, l_scale),
+                                  dequant_ref(r_q, r_scale),
+                                  g_w, rescale=rescale)

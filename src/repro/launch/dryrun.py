@@ -80,12 +80,15 @@ def factor_bucket_report(params_sds, mcfg: MKORConfig = MKORConfig(),
     comm columns assume (rank-1 stat exchange per step, KFAC-style full
     factor payload per inversion, owner-sharded inverse gather per phase
     step)."""
-    fbytes = jnp.dtype(mcfg.factor_dtype).itemsize
+    fbytes = statlib.factor_itemsize(mcfg.factor_dtype, mcfg.factor_quant)
+    sbytes = jnp.dtype("bfloat16").itemsize   # rank-1 stat wire payload
     return [{**statlib.bucket_cost(b, fbytes, rank=mcfg.rank,
                                    staleness=mcfg.staleness,
-                                   health=mcfg.health),
-             **statlib.bucket_comm_cost(b, world_size, fbytes, fbytes,
-                                        rank=mcfg.rank)}
+                                   health=mcfg.health,
+                                   factor_quant=mcfg.factor_quant),
+             **statlib.bucket_comm_cost(b, world_size, fbytes, sbytes,
+                                        rank=mcfg.rank,
+                                        factor_quant=mcfg.factor_quant)}
             for b in manifest_for(params_sds, mcfg)]
 
 
@@ -286,6 +289,11 @@ def main() -> None:
                          "(DESIGN.md \u00a714): the traced step carries the "
                          "per-bucket quarantine state and the bucket "
                          "report gains its health-state bytes column")
+    ap.add_argument("--quant", default="none",
+                    choices=["none", "bf16", "int8"],
+                    help="factor residency format (DESIGN.md \u00a716): "
+                         "int8 shrinks the bank bytes and owner-gather "
+                         "columns ~2x vs bf16 and adds the scale/EF rows")
     ap.add_argument("--out", default="experiments/dryrun")
     ap.add_argument("--save-hlo", default="",
                     help="dump the optimized HLO text to this path")
@@ -316,7 +324,8 @@ def main() -> None:
                 try:
                     rec = lower_one(cfg, shape, multi_pod=args.multi_pod,
                                     optimizer=args.optimizer,
-                                    mcfg=MKORConfig(health=args.health),
+                                    mcfg=MKORConfig(health=args.health,
+                                                    factor_quant=args.quant),
                                     collect_stats=not args.no_stats,
                                     save_hlo=args.save_hlo)
                     print(format_row(rec))

@@ -53,7 +53,7 @@ from repro.training import loop as train_lib
 def build_optimizer(name: str, lr, *, inv_freq: int = 10, rank: int = 1,
                     staleness: int = 0, use_pallas: bool = False,
                     platform: str = "", dist=None, health: bool = False,
-                    live=None):
+                    live=None, quant: str = "none"):
     """Returns ``(optimizer, mkor_cfg)`` — ``mkor_cfg`` is None for the
     non-MKOR baselines (the chaos harness needs the config to locate
     injection targets inside the state tree).  ``live`` is the elastic
@@ -71,12 +71,12 @@ def build_optimizer(name: str, lr, *, inv_freq: int = 10, rank: int = 1,
         mcfg = MKORConfig(
             inv_freq=inv_freq, rank=rank, staleness=staleness,
             use_pallas=use_pallas, interpret=interpret, dist=dist,
-            health=health, live=live)
+            health=health, live=live, factor_quant=quant)
         return mkor(backend, mcfg), mcfg
     if name == "mkor_h":
         mcfg = MKORConfig(inv_freq=inv_freq, rank=rank,
                           staleness=staleness, dist=dist, health=health,
-                          live=live)
+                          live=live, factor_quant=quant)
         return mkor_h(backend, mcfg), mcfg
     if name == "eva":
         return eva(backend, EvaConfig()), None
@@ -138,6 +138,13 @@ def main() -> None:
     ap.add_argument("--dist-devices", type=int, default=8,
                     help="data-parallel world size for --dist "
                          "(--global-batch must be a multiple of it)")
+    ap.add_argument("--quant", default="none",
+                    choices=["none", "bf16", "int8"],
+                    help="factor residency format (DESIGN.md \u00a716): "
+                         "bf16 forces bfloat16 banks/windows; int8 stores "
+                         "codes + per-slice scales with fp32 error "
+                         "feedback, fused-dequant kernels, and the "
+                         "quantized owner-gather wire format")
     ap.add_argument("--health", action="store_true",
                     help="numerical-health sentinel (DESIGN.md §14): "
                          "per-bucket quarantine/recovery of corrupted "
@@ -196,7 +203,7 @@ def main() -> None:
         opt_l, mcfg_l = build_optimizer(
             args.optimizer, lr, inv_freq=args.inv_freq, rank=args.rank,
             staleness=args.staleness, use_pallas=args.use_pallas,
-            dist=dist, health=args.health, live=live)
+            dist=dist, health=args.health, live=live, quant=args.quant)
         if plan is not None and plan.injections:
             if mcfg_l is None:
                 raise SystemExit("--chaos needs an MKOR optimizer (the "

@@ -52,6 +52,13 @@ DistSpec = Tuple[Tuple[str, int], ...]
 RANK1_PAYLOAD_DTYPE = "bfloat16"
 ACCUM_DTYPE = "float32"
 
+# Owner-gather wire dtype under factor_quant="int8" (DESIGN.md §16): the
+# dominant phase-step payload is the int8 factor codes + fp32 per-slice
+# scales — ~2x smaller than the bf16 factors it replaces.  The
+# quant-discipline lint (repro.analysis) proves the gathered payload is
+# int8-origin against this contract.
+QUANT_WIRE_DTYPE = "int8"
+
 
 def dist_axes(mesh, axes) -> DistSpec:
     """Build the dist spec for a mesh + MeshAxes (sharding/rules.py)."""
@@ -307,6 +314,32 @@ def owner_sharded_map(fn, arrays, dist: DistSpec, n_slots: int,
     slice, never what is shipped per step (DESIGN.md §15)."""
     chunks = [owner_shard(x, dist, live) for x in arrays]
     return gather_shards(fn(*chunks), dist, n_slots, live)
+
+
+def owner_sharded_map_quant(fn, arrays, dist: DistSpec, n_slots: int,
+                            live: Optional[LiveMask] = None
+                            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Owner-sharded map whose result is a QUANTIZED bank chunk: ``fn``
+    returns ``(codes, scales)`` — int8 values with dim 0 matching the
+    chunk extent plus their fp32 per-slice scales — and BOTH are
+    recombined (DESIGN.md §16).
+
+    The wire payload per phase step is the int8 codes + the (tiny) fp32
+    scales instead of the bf16 factors: ~2x fewer bytes.  The recombine
+    is exact for both :func:`gather_shards` strategies: ``all_gather``
+    moves the codes verbatim, and the masked-psum sums DISJOINT integer
+    contributions (each slot has exactly one non-zero contributor, and
+    int8 addition of a value and zero is exact).  The owner quantizes its
+    freshly inverted fp32 chunk right at the wire boundary, so the wire
+    quantization IS the storage quantization — workers store the gathered
+    codes directly and every replica holds bit-identical banks."""
+    chunks = [owner_shard(x, dist, live) for x in arrays]
+    codes, scales = fn(*chunks)
+    if jnp.dtype(codes.dtype) != jnp.dtype(QUANT_WIRE_DTYPE):
+        raise TypeError(f"quantized owner-gather payload must be "
+                        f"{QUANT_WIRE_DTYPE}, got {codes.dtype}")
+    return (gather_shards(codes, dist, n_slots, live),
+            gather_shards(scales, dist, n_slots, live))
 
 
 def gather_shards(x: jnp.ndarray, dist: DistSpec, n_slots: int,

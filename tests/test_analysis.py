@@ -457,6 +457,98 @@ def test_seeded_remap_extra_collective_trips_elastic_lint():
     assert check_elastic_remap(live_twin) == []
 
 
+def test_seeded_dequantized_wire_trips_quant_lint():
+    """Under factor_quant='int8' a phase-gated gather that ships the
+    DEQUANTIZED fp32 bank instead of the stored codes raises
+    quant.wire-not-int8-origin — the wire must carry the int8 residency
+    (DESIGN.md §16).  Gated so comm-linearity stays quiet: the quant
+    checker owns this failure mode."""
+    mesh = Mesh(np.array(jax.devices()[:8]), ("d",))
+
+    def leaky_gather(codes):
+        def inner(q):
+            bank = q.astype(jnp.float32) * 0.01        # dequantized...
+            return jax.lax.cond(jnp.sum(bank) > 0,
+                                lambda b: jax.lax.psum(b * 0.0, "d") + b,
+                                lambda b: b, bank)     # ...on the wire
+        return shard_map.shard_map(
+            inner, mesh=mesh, in_specs=P(), out_specs=P())(codes)
+
+    target = trace.custom_target(
+        "fixture/dequantized-owner-gather", leaky_gather,
+        jax.ShapeDtypeStruct((256, 256), jnp.int8),
+        meta={"factor_quant": "int8", "factor_dims": {256}, "world": 8})
+    report = run_checkers([target])
+    errs = report.by_code("quant.wire-not-int8-origin")
+    assert errs and all(d.severity == Severity.ERROR for d in errs)
+    assert report.exit_code() == 1
+    assert _error_checkers(report) == {"quant-discipline"}
+
+
+def test_seeded_bf16_accum_trips_quant_lint():
+    """int8-origin codes widened to bf16 before the collective raise
+    quant.accum-not-f32 — a bf16 accumulator silently rounds the codes
+    of large banks; widening must go to fp32 (or stay int8)."""
+    mesh = Mesh(np.array(jax.devices()[:8]), ("d",))
+
+    def bf16_gather(codes):
+        def inner(q):
+            return jax.lax.cond(jnp.sum(q) > 0,
+                                lambda c: jax.lax.psum(
+                                    c.astype(jnp.bfloat16), "d"),
+                                lambda c: c.astype(jnp.bfloat16), q)
+        return shard_map.shard_map(
+            inner, mesh=mesh, in_specs=P(), out_specs=P())(codes)
+
+    target = trace.custom_target(
+        "fixture/bf16-code-accum", bf16_gather,
+        jax.ShapeDtypeStruct((256, 256), jnp.int8),
+        meta={"factor_quant": "int8", "factor_dims": {256}, "world": 8})
+    report = run_checkers([target])
+    assert report.by_code("quant.accum-not-f32")
+    assert report.exit_code() == 1
+    assert _error_checkers(report) == {"quant-discipline"}
+
+    # the compliant twin — raw int8 codes on the wire — is clean, and
+    # the same program without the int8 config is out of scope entirely
+    from repro.analysis.checkers import check_quant_discipline
+
+    def int8_gather(codes):
+        def inner(q):
+            return jax.lax.cond(jnp.sum(q) > 0,
+                                lambda c: jax.lax.psum(c, "d"),
+                                lambda c: c, q)
+        return shard_map.shard_map(
+            inner, mesh=mesh, in_specs=P(), out_specs=P())(codes)
+
+    good = trace.custom_target(
+        "fixture/int8-owner-gather", int8_gather,
+        jax.ShapeDtypeStruct((256, 256), jnp.int8),
+        meta={"factor_quant": "int8", "factor_dims": {256}, "world": 8})
+    assert check_quant_discipline(good) == []
+    off = trace.custom_target(
+        "fixture/quant-off", bf16_gather,
+        jax.ShapeDtypeStruct((256, 256), jnp.int8),
+        meta={"factor_dims": {256}, "world": 8})
+    assert check_quant_discipline(off) == []
+
+
+def test_lint_clean_on_bert_large_int8_dist():
+    """The real int8 dist step passes quant-discipline non-vacuously:
+    the traced program really ships int8-origin factor payloads."""
+    t = trace.dist_target(
+        "bert_large", world=8,
+        mkor_cfg=MKORConfig(inv_freq=10, factor_quant="int8"))
+    report = run_checkers([t], names=["quant-discipline"])
+    assert report.exit_code() == 0, report.render()
+    res = jaxpr_walk.walk(t.jaxpr)
+    factor_dims = set(t.meta.get("factor_dims", ()))
+    wired = [c for c in res.collectives
+             if any(len(s) >= 2 and s[-1] == s[-2] and s[-1] in factor_dims
+                    for s in c.shapes)]
+    assert wired and all(c.int8_origin for c in wired)
+
+
 def test_lint_clean_on_bert_large_remap_dist():
     """The real elastic-remapped dist step (one worker dead, owners
     re-split over survivors) passes elastic-remap with the static-owner

@@ -148,7 +148,7 @@ def test_bucket_comm_cost_is_linear_vs_quadratic():
     b = statlib.FactorBucket(bucket_id="1024x4096", stack=(), extra=(),
                              d_in=1024, d_out=4096,
                              paths=(("x",), ("y",)), index=0)
-    c = statlib.bucket_comm_cost(b, world_size=8)
+    c = statlib.bucket_comm_cost(b, 8, 2, 2)
     assert c["rank1_stats_bytes_per_step"] == 2 * (1024 + 4096) * 2
     assert c["kfac_factor_bytes_per_inv"] == \
         2 * (1024 ** 2 + 4096 ** 2) * 2

@@ -124,8 +124,8 @@ def test_health_state_allocated_per_bucket(ae_params, ae_manifest):
         assert int(hst["cooldown"]) == 0 and int(hst["trips"]) == 0
     # 8 bytes/bucket of carried state, and it is budgeted (dryrun rows)
     b = next(iter(ae_manifest))
-    assert statlib.bucket_cost(b)["health_state_bytes"] == 0
-    assert statlib.bucket_cost(b, health=True)["health_state_bytes"] == 8
+    assert statlib.bucket_cost(b, 2)["health_state_bytes"] == 0
+    assert statlib.bucket_cost(b, 2, health=True)["health_state_bytes"] == 8
 
 
 # --------------------------------------------------------------------- #

@@ -113,13 +113,13 @@ def test_bucket_cost_rank_scaling():
     are O(r·d) and zero at rank 1 (no window state)."""
     b = statlib.FactorBucket(bucket_id="64x128", stack=(), extra=(),
                              d_in=64, d_out=128, paths=(("x",),), index=0)
-    c1 = statlib.bucket_cost(b, rank=1)
-    c4 = statlib.bucket_cost(b, rank=4)
+    c1 = statlib.bucket_cost(b, 2, rank=1)
+    c4 = statlib.bucket_cost(b, 2, rank=4)
     assert c1["window_bytes"] == 0
     assert c4["window_bytes"] == 4 * (64 + 128) * 4
     assert c4["smw_flops_per_inv"] < 4.1 * c1["smw_flops_per_inv"]
     assert c4["smw_flops_per_inv"] > 2 * c1["smw_flops_per_inv"]
-    comm = statlib.bucket_comm_cost(b, world_size=4, rank=4)
+    comm = statlib.bucket_comm_cost(b, 4, 2, 2, rank=4)
     # rank-r ships nothing extra per step; the window total is r * per-step
     assert comm["rank_window_bytes_per_inv"] == \
         4 * comm["rank1_stats_bytes_per_step"]
